@@ -1,0 +1,41 @@
+"""Fig. 11 (supplementary): Gaussian toy — recovery error and exact recovery
+vs SNR, 32-bit vs 2&8-bit, averaged over realizations."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.configs.gaussian_toy import CONFIG, SMOKE
+from repro.core import niht, qniht, relative_error, support_recovery
+from repro.sensing import make_gaussian_problem
+
+
+def run(fast: bool = True):
+    g = SMOKE if fast else CONFIG
+    rows = []
+    for snr in g.snr_grid:
+        errs = {"32": [], "2&8": []}
+        supp = {"32": [], "2&8": []}
+        t0 = time.perf_counter()
+        for trial in range(g.n_realizations):
+            key = jax.random.PRNGKey(1000 * trial + int(snr * 10) % 997)
+            prob = make_gaussian_problem(g.m, g.n, g.s, float(snr), key)
+            r32 = niht(prob.phi, prob.y, g.s, g.n_iters)
+            r28 = qniht(prob.phi, prob.y, g.s, g.n_iters,
+                        bits_phi=g.bits_phi, bits_y=g.bits_y, key=key)
+            errs["32"].append(float(relative_error(r32.x, prob.x_true)))
+            errs["2&8"].append(float(relative_error(r28.x, prob.x_true)))
+            supp["32"].append(float(support_recovery(r32.x, prob.x_true, g.s)))
+            supp["2&8"].append(float(support_recovery(r28.x, prob.x_true, g.s)))
+        us = (time.perf_counter() - t0) * 1e6 / g.n_realizations
+        rows.append(row(
+            f"fig11/snr_{snr:+.0f}dB", us,
+            f"err32={np.mean(errs['32']):.4f} err2_8={np.mean(errs['2&8']):.4f} "
+            f"supp32={np.mean(supp['32']):.3f} supp2_8={np.mean(supp['2&8']):.3f} "
+            f"n={g.n_realizations}"
+        ))
+    return rows

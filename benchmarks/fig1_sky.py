@@ -1,0 +1,53 @@
+"""Fig. 1: sky recovery quality, 32-bit NIHT vs low-precision QNIHT on the
+LOFAR-like station (0 dB antenna SNR)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row
+from repro.configs.lofar_cs302 import BENCH, SMOKE
+from repro.core import niht, qniht, relative_error, source_recovery, support_recovery
+from repro.sensing import Station, dirty_image, make_sky, measurement_matrix, visibilities
+
+
+def run(fast: bool = True):
+    cs = SMOKE if fast else BENCH
+    key = jax.random.PRNGKey(cs.seed)
+    st = Station(n_antennas=cs.n_antennas, seed=cs.seed)
+    phi = measurement_matrix(st, cs.resolution, cs.extent)
+    x = make_sky(cs.resolution, cs.n_sources, key, min_sep=cs.min_sep)
+    y, _ = visibilities(phi, x, cs.snr_db, key)
+    r = cs.resolution
+    img_t = x.reshape(r, r)
+    rows = []
+
+    # least-squares (dirty image) baseline — what Fig 1(b) shows
+    t0 = time.perf_counter()
+    di = jax.block_until_ready(dirty_image(phi, y, r))
+    dt = (time.perf_counter() - t0) * 1e6
+    rows.append(row(
+        "fig1/dirty_image", dt,
+        f"src_recovery={float(source_recovery(di, img_t, cs.n_sources, 1)):.3f}"
+    ))
+
+    variants = [("32bit", None, None), ("8&8bit", 8, 8), ("4&8bit", 4, 8), ("2&8bit", 2, 8)]
+    for name, bp, by in variants:
+        t0 = time.perf_counter()
+        if bp is None:
+            res = niht(phi, y, cs.n_sources, cs.n_iters, real_signal=True, nonneg=True)
+        else:
+            res = qniht(phi, y, cs.n_sources, cs.n_iters, bits_phi=bp, bits_y=by,
+                        key=key, real_signal=True, nonneg=True)
+        jax.block_until_ready(res.x)
+        dt = (time.perf_counter() - t0) * 1e6 / cs.n_iters
+        img_h = jnp.real(res.x).reshape(r, r)
+        rows.append(row(
+            f"fig1/qniht_{name}", dt,
+            f"rel_err={float(relative_error(res.x, x)):.4f} "
+            f"supp={float(support_recovery(res.x, x, cs.n_sources)):.3f} "
+            f"src={float(source_recovery(img_h, img_t, cs.n_sources, 1)):.3f}"
+        ))
+    return rows

@@ -1,0 +1,35 @@
+"""Fig. 3: the error coefficients √L/β_2s and L/β̂_2s that scale σ_n and ε_sky
+in Corollary 1, monitored over antenna count and sparsity ratio."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import row, time_fn
+from repro.core import rics_sampled
+from repro.quant import fake_quantize
+from repro.sensing import Station, measurement_matrix
+
+
+def run(fast: bool = True):
+    key = jax.random.PRNGKey(3)
+    res = 24 if fast else 64
+    antennas = [10, 20, 30] if fast else [10, 15, 20, 25, 30]
+    ratios = [0.02, 0.05] if fast else [0.01, 0.02, 0.05, 0.1]
+    rows = []
+    for la in antennas:
+        st = Station(n_antennas=la)
+        phi = measurement_matrix(st, res, extent=1.5)
+        phi_hat = fake_quantize(phi, 2, key)
+        m = phi.shape[0]
+        for ratio in ratios:
+            s2 = max(2, int(2 * ratio * m))
+            us = time_fn(lambda: rics_sampled(phi, s2, 8, key), warmup=1, iters=1)
+            _, beta = rics_sampled(phi, s2, 8, key)
+            _, beta_hat = rics_sampled(phi_hat, s2, 8, key)
+            c_noise = la**0.5 / float(beta)
+            c_sky = la / float(beta_hat)
+            rows.append(row(
+                f"fig3/L{la}_ratio{ratio}", us,
+                f"sqrtL_over_beta={c_noise:.4f} L_over_beta_hat={c_sky:.4f}"
+            ))
+    return rows

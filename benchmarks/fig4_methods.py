@@ -1,0 +1,48 @@
+"""Fig. 4: recovery error and exact (support) recovery across methods —
+NIHT (32-bit), QNIHT (2&8), IHT, CoSaMP, FISTA-ℓ1 — on the telescope problem."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row
+from repro.configs.lofar_cs302 import BENCH, SMOKE
+from repro.core import cosamp, fista_l1, iht, niht, qniht, relative_error, support_recovery
+from repro.sensing import Station, make_sky, measurement_matrix, visibilities
+
+
+def run(fast: bool = True):
+    cs = SMOKE if fast else BENCH
+    key = jax.random.PRNGKey(cs.seed)
+    st = Station(n_antennas=cs.n_antennas, seed=cs.seed)
+    phi = measurement_matrix(st, cs.resolution, cs.extent)
+    x = make_sky(cs.resolution, cs.n_sources, key, min_sep=cs.min_sep)
+    y, _ = visibilities(phi, x, cs.snr_db, key)
+    s = cs.n_sources
+    rows = []
+
+    def bench(name, fn, n_iters):
+        t0 = time.perf_counter()
+        out = fn()
+        xh = out.x if hasattr(out, "x") else out[0]
+        jax.block_until_ready(xh)
+        us = (time.perf_counter() - t0) * 1e6 / n_iters
+        rows.append(row(
+            f"fig4/{name}", us,
+            f"rel_err={float(relative_error(xh, x)):.4f} "
+            f"exact_recovery={float(support_recovery(xh, x, s)):.3f}"
+        ))
+
+    bench("niht_32bit", lambda: niht(phi, y, s, cs.n_iters, real_signal=True, nonneg=True), cs.n_iters)
+    bench("qniht_2_8bit", lambda: qniht(phi, y, s, cs.n_iters, bits_phi=2, bits_y=8,
+                                        key=key, real_signal=True, nonneg=True), cs.n_iters)
+    bench("qniht_4_8bit", lambda: qniht(phi, y, s, cs.n_iters, bits_phi=4, bits_y=8,
+                                        key=key, real_signal=True, nonneg=True), cs.n_iters)
+    bench("iht_unit_step", lambda: iht(phi, y, s, cs.n_iters * 2, real_signal=True), cs.n_iters * 2)
+    bench("cosamp", lambda: cosamp(phi, y, s, max(8, cs.n_iters // 3), real_signal=True),
+          max(8, cs.n_iters // 3))
+    bench("fista_l1", lambda: fista_l1(phi, y, n_iters=cs.n_iters * 3, real_signal=True),
+          cs.n_iters * 3)
+    return rows

@@ -1,0 +1,84 @@
+"""Fig. 6: FPGA (and TPU) bandwidth model + end-to-end time to 90% support
+recovery.
+
+Paper law (supplementary §8.1): per-iteration time T = size(Φ̂)/P with a fixed
+consumption rate (FPGA: P = 12.8 GB/s; our target TPU v5e: 819 GB/s HBM). The
+end-to-end number multiplies the modeled per-iteration time by the *measured*
+iteration count to reach 90% support recovery at each precision — same
+methodology as the paper's 9.19× headline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.configs.lofar_cs302 import BENCH, SMOKE
+from repro.core import niht, qniht, support_recovery
+from repro.sensing import Station, make_sky, measurement_matrix, visibilities
+
+FPGA_BW = 12.8e9
+TPU_HBM_BW = 819e9
+
+
+def _iters_to_support(res_x_trace, x, s, target=0.9):
+    for i, xs in enumerate(res_x_trace):
+        if float(support_recovery(xs, x, s)) >= target:
+            return i + 1
+    return len(res_x_trace)
+
+
+def run(fast: bool = True):
+    cs = SMOKE if fast else BENCH
+    key = jax.random.PRNGKey(cs.seed)
+    st = Station(n_antennas=cs.n_antennas, seed=cs.seed)
+    phi = measurement_matrix(st, cs.resolution, cs.extent)
+    x = make_sky(cs.resolution, cs.n_sources, key, min_sep=cs.min_sep)
+    y, _ = visibilities(phi, x, cs.snr_db, key)
+    s = cs.n_sources
+    # complex -> 2 real planes; one iteration streams Φ̂ twice (fwd + adjoint)
+    full_bytes = phi.size * 8 * 2
+    rows = []
+
+    results = {}
+    for name, bp, by in (("32", None, None), ("8&8", 8, 8), ("4&8", 4, 8), ("2&8", 2, 8)):
+        if bp is None:
+            res = niht(phi, y, s, cs.n_iters, real_signal=True, nonneg=True)
+            stream_bytes = full_bytes
+        else:
+            res = qniht(phi, y, s, cs.n_iters, bits_phi=bp, bits_y=by, key=key,
+                        real_signal=True, nonneg=True)
+            stream_bytes = full_bytes * bp / 32
+        # iterations to 90% support: re-run trace via resid (cheap proxy: use
+        # final support + resid trace length heuristic) — run step-by-step only
+        # in fast mode sizes
+        n_iters_needed = _iters_needed(phi, y, x, s, bp, by, key, cs.n_iters)
+        results[name] = (stream_bytes, n_iters_needed)
+        for hw, bw in (("fpga", FPGA_BW), ("tpu_v5e", TPU_HBM_BW)):
+            t_iter = stream_bytes / bw * 1e6
+            rows.append(row(
+                f"fig6/{hw}_{name}bit", t_iter,
+                f"iters_to_90pct={n_iters_needed} "
+                f"end_to_end_us={t_iter * n_iters_needed:.1f}"
+            ))
+
+    b32, i32 = results["32"]
+    b28, i28 = results["2&8"]
+    speedup = (b32 * i32) / (b28 * i28)
+    rows.append(row("fig6/end_to_end_speedup_2_8_vs_32", 0.0,
+                    f"speedup={speedup:.2f}x paper_fpga=9.19x"))
+    return rows
+
+
+def _iters_needed(phi, y, x, s, bp, by, key, max_iters):
+    """Measured iterations to 90% support recovery (stepwise re-run)."""
+    from repro.core.niht import qniht as _q
+
+    for n in range(2, max_iters + 1, 2):
+        res = (_q(phi, y, s, n, real_signal=True, nonneg=True) if bp is None else
+               _q(phi, y, s, n, bits_phi=bp, bits_y=by, key=key,
+                  real_signal=True, nonneg=True))
+        if float(support_recovery(res.x, x, s)) >= 0.9:
+            return n
+    return max_iters

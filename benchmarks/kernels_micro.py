@@ -1,0 +1,40 @@
+"""Kernel microbenchmarks: the packed-qmm streamed-bytes law (the paper's
+central systems claim) measured at the kernel-contract level, plus interpret-
+mode sanity timings for the other kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.kernels import hsthresh, pack_weights, qmm, sqround
+from repro.kernels.qmm.ref import qmm_ref
+
+
+def run(fast: bool = True):
+    key = jax.random.PRNGKey(0)
+    m, k, n = (16, 2048, 1024) if fast else (64, 8192, 4096)
+    x = jax.random.normal(key, (m, k), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (n, k), jnp.float32)
+    rows = []
+    f32_bytes = w.size * 4
+
+    for bits in (8, 4, 2):
+        pw = pack_weights(w, bits, jax.random.fold_in(key, 2))
+        fn = jax.jit(lambda xx, pp=pw: qmm(xx, pp, use_pallas=False))
+        us = time_fn(fn, x, warmup=2, iters=5)
+        rows.append(row(
+            f"kernels/qmm_int{bits}_ref", us,
+            f"streamed_bytes={pw.nbytes} vs_f32={f32_bytes / pw.nbytes:.1f}x_fewer"
+        ))
+
+    v = jax.random.normal(key, (512, 512), jnp.float32)
+    us = time_fn(jax.jit(lambda vv: sqround(vv, 8, key, use_pallas=False)[0]), v,
+                 warmup=2, iters=5)
+    rows.append(row("kernels/sqround_ref", us, "elems=262144"))
+
+    xv = jax.random.normal(key, (65536,))
+    us = time_fn(jax.jit(lambda a: hsthresh(a, 1024, use_pallas=False)), xv,
+                 warmup=2, iters=5)
+    rows.append(row("kernels/hsthresh_ref", us, "n=65536 s=1024"))
+    return rows

@@ -1,0 +1,120 @@
+"""Roofline analysis: aggregate the dry-run JSONs into per-cell terms.
+
+Per (arch × shape × mesh), from the compiled artifact:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+(cost_analysis is per-device on a partitioned module — verified against an
+analytic sharded matmul; scan-body undercounting is fixed by the dry-run's
+depth-extrapolated probes.) Dominant term = the bottleneck; roofline fraction
+= MODEL_FLOPS / (devices · peak · max_term) — how close the cell is to the
+hardware ceiling given its bottleneck.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import row
+
+# TPU v5e target constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # B/s
+ICI_BW = 50e9              # B/s per link
+
+
+def load_cells(dry_dir: str = "experiments/dryrun", policy: str = "fp"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dry_dir, f"*.{policy}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def analyze(rec: dict) -> dict:
+    """Roofline terms (seconds) for one dry-run record."""
+    n_dev = rec["n_devices"]
+    cost = rec.get("cost_analysis_depth_corrected") or rec.get("cost_analysis", {})
+    flops_dev = cost.get("flops", 0.0)
+    bytes_dev = cost.get("bytes accessed", 0.0)
+    coll_total = rec.get("collective_bytes", {}).get("total", 0)
+    # collective bytes were parsed from the per-device module
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_total / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    t_bound = max(terms.values()) or 1e-30
+    model_flops = rec.get("model_flops", 0)
+    useful_ratio = model_flops / max(flops_dev * n_dev, 1e-30)
+    roofline_frac = model_flops / (n_dev * PEAK_FLOPS * t_bound)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "policy": rec.get("policy", "fp"),
+        "t_compute_s": t_compute, "t_memory_s": t_memory, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_flop_ratio": useful_ratio,
+        "roofline_fraction": roofline_frac,
+        "mem_per_device": rec.get("memory_analysis", {}),
+        "state_bytes_per_device": rec.get("state_bytes_per_device", 0),
+    }
+
+
+def run(fast: bool = True, dry_dir: str = "experiments/dryrun"):
+    rows = []
+    cells = load_cells(dry_dir)
+    if not cells:
+        return [row("roofline/no_dryrun_data", 0.0,
+                    "run scripts/run_dryruns.py first")]
+    for rec in cells:
+        tag = f"{rec['arch']}.{rec['shape']}.{rec['mesh']}"
+        if rec.get("status") == "skipped":
+            rows.append(row(f"roofline/{tag}", 0.0, "skipped=" + rec["reason"][:60]))
+            continue
+        if rec.get("status") != "ok":
+            rows.append(row(f"roofline/{tag}", 0.0, "status=" + str(rec.get("status"))))
+            continue
+        a = analyze(rec)
+        t_us = max(a["t_compute_s"], a["t_memory_s"], a["t_collective_s"]) * 1e6
+        rows.append(row(
+            f"roofline/{tag}", t_us,
+            f"dominant={a['dominant']} "
+            f"tc={a['t_compute_s']*1e3:.2f}ms tm={a['t_memory_s']*1e3:.2f}ms "
+            f"tx={a['t_collective_s']*1e3:.2f}ms "
+            f"roofline_frac={a['roofline_fraction']:.3f} "
+            f"useful={a['useful_flop_ratio']:.2f}"
+        ))
+    return rows
+
+
+def markdown_table(dry_dir: str = "experiments/dryrun", policy: str = "fp") -> str:
+    lines = [
+        "| arch | shape | mesh | compute (ms) | memory (ms) | collective (ms) "
+        "| dominant | MODEL_FLOPS/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load_cells(dry_dir, policy):
+        if rec.get("status") == "skipped":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+                         f"| — | — | — | skipped | — | — |")
+            continue
+        if rec.get("status") != "ok":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+                         f"| — | — | — | {rec.get('status')} | — | — |")
+            continue
+        a = analyze(rec)
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} "
+            f"| {a['t_compute_s']*1e3:.2f} | {a['t_memory_s']*1e3:.2f} "
+            f"| {a['t_collective_s']*1e3:.2f} | **{a['dominant']}** "
+            f"| {a['useful_flop_ratio']:.2f} | {a['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,66 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Default is CI-sized (``fast``);
+``--full`` uses the paper-scale settings (256×256 sky, 100 realizations, ...).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset, e.g. --only fig1 fig11 roofline")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (
+        fig1_sky,
+        fig3_error_coeffs,
+        fig4_methods,
+        fig5_cpu_speedup,
+        fig6_bandwidth_model,
+        fig7_rip_bits,
+        fig9_clean,
+        fig11_gaussian,
+        kernels_micro,
+        roofline,
+    )
+
+    suites = {
+        "fig1": fig1_sky,
+        "fig3": fig3_error_coeffs,
+        "fig4": fig4_methods,
+        "fig5": fig5_cpu_speedup,
+        "fig6": fig6_bandwidth_model,
+        "fig7": fig7_rip_bits,
+        "fig9": fig9_clean,
+        "fig11": fig11_gaussian,
+        "kernels": kernels_micro,
+        "roofline": roofline,
+    }
+    if args.only:
+        suites = {k: v for k, v in suites.items() if k in args.only}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in suites.items():
+        t0 = time.time()
+        try:
+            for r in mod.run(fast=not args.full):
+                print(r, flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {name} took {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""End-to-end driver: radio-interferometer sky recovery (the paper's Fig. 1).
+
+Simulates a LOFAR-like station, forms the measurement matrix, observes a
+sparse sky at 0 dB antenna SNR, and recovers it with NIHT at several data
+precisions — including the paper's headline 2-bit Φ / 8-bit y.
+
+    PYTHONPATH=src python examples/sky_recovery.py [--resolution 64] [--sources 15]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import niht, qniht, relative_error, source_recovery, support_recovery
+from repro.sensing import (
+    Station,
+    ascii_render,
+    dirty_image,
+    make_sky,
+    measurement_matrix,
+    visibilities,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--resolution", type=int, default=48)
+    ap.add_argument("--sources", type=int, default=12)
+    ap.add_argument("--antennas", type=int, default=30)
+    ap.add_argument("--snr-db", type=float, default=0.0)
+    ap.add_argument("--iters", type=int, default=40)
+    ap.add_argument("--seed", type=int, default=302)
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(args.seed)
+    r = args.resolution
+
+    print(f"station: {args.antennas} antennas (LBA-like), "
+          f"M = {args.antennas * (args.antennas - 1)} baselines")
+    st = Station(n_antennas=args.antennas, seed=args.seed)
+    phi = measurement_matrix(st, r, extent=1.5)
+    print(f"Φ: {phi.shape} complex64 "
+          f"({phi.size * 8 / 1e6:.0f} MB at full precision, "
+          f"{phi.size * 2 * 2 / 8 / 1e6:.1f} MB at 2 bits)")
+
+    x = make_sky(r, args.sources, key, min_sep=max(3, r // 16))
+    y, _ = visibilities(phi, x, args.snr_db, key)
+    img_true = x.reshape(r, r)
+
+    print(f"\ntrue sky ({args.sources} sources, SNR {args.snr_db} dB):")
+    print(ascii_render(img_true, width=min(r, 64)))
+
+    di = dirty_image(phi, y, r)
+    print("\nleast-squares estimate (dirty image):")
+    print(ascii_render(di, width=min(r, 64)))
+
+    for name, bp, by in (("32-bit", None, None), ("4&8-bit", 4, 8), ("2&8-bit", 2, 8)):
+        t0 = time.time()
+        if bp is None:
+            res = niht(phi, y, args.sources, args.iters, real_signal=True, nonneg=True)
+        else:
+            res = qniht(phi, y, args.sources, args.iters, bits_phi=bp, bits_y=by,
+                        key=key, real_signal=True, nonneg=True)
+        jax.block_until_ready(res.x)
+        img = jnp.real(res.x).reshape(r, r)
+        print(f"\n{name} NIHT recovery "
+              f"({time.time() - t0:.1f}s, {args.iters} iterations):")
+        print(ascii_render(img, width=min(r, 64)))
+        print(f"  rel_error={float(relative_error(res.x, x)):.4f}  "
+              f"support={float(support_recovery(res.x, x, args.sources)):.0%}  "
+              f"sources_resolved={float(source_recovery(img, img_true, args.sources, 1)):.0%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+#!/usr/bin/env python
+"""Inject the machine-generated roofline table into EXPERIMENTS.md."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.roofline import markdown_table
+
+MARK = "<!-- ROOFLINE_TABLE -->"
+
+
+def main():
+    path = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+    with open(path) as f:
+        text = f.read()
+    table = markdown_table("experiments/dryrun")
+    head, _, _ = text.partition(MARK)
+    with open(path, "w") as f:
+        f.write(head + MARK + "\n\n" + table + "\n")
+    print(f"injected {table.count(chr(10))} table rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+#!/usr/bin/env python
+"""Sweep driver: run every (arch × shape × mesh) dry-run cell as its own
+subprocess (bounded parallelism, per-cell timeout), writing JSON per cell.
+
+    python scripts/run_dryruns.py --out experiments/dryrun --jobs 3
+"""
+import argparse
+import itertools
+import os
+import subprocess
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor, as_completed
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ARCHS = [
+    "qwen1_5_32b", "starcoder2_3b", "minitron_4b", "stablelm_12b",
+    "mamba2_370m", "whisper_tiny", "recurrentgemma_2b", "llama32_vision_11b",
+    "qwen3_moe_30b", "qwen3_moe_235b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def run_cell(arch, shape, multi, out, timeout, extra):
+    tag = f"{arch}.{shape}.{'multi' if multi else 'single'}"
+    done_marker = os.path.join(out, f"{tag}.fp.json")
+    if os.path.exists(done_marker):
+        import json
+
+        with open(done_marker) as f:
+            st = json.load(f).get("status")
+        if st in ("ok", "skipped"):
+            return tag, "cached-" + st, 0.0
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", out] + (["--multi-pod"] if multi else []) + extra
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    t0 = time.time()
+    try:
+        res = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                             timeout=timeout)
+        ok = "ok" if res.returncode == 0 else "FAIL"
+        if ok == "FAIL":
+            sys.stderr.write(res.stdout[-800:] + res.stderr[-1500:] + "\n")
+    except subprocess.TimeoutExpired:
+        ok = "TIMEOUT"
+    return tag, ok, time.time() - t0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--jobs", type=int, default=3)
+    ap.add_argument("--timeout", type=int, default=2400)
+    ap.add_argument("--archs", nargs="*", default=ARCHS)
+    ap.add_argument("--shapes", nargs="*", default=SHAPES)
+    ap.add_argument("--meshes", nargs="*", default=["single", "multi"])
+    ap.add_argument("--extra", nargs="*", default=[])
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = [
+        (a, s, m == "multi")
+        for a, s, m in itertools.product(args.archs, args.shapes, args.meshes)
+    ]
+    results = []
+    with ThreadPoolExecutor(max_workers=args.jobs) as ex:
+        futs = {
+            ex.submit(run_cell, a, s, m, args.out, args.timeout, args.extra): (a, s, m)
+            for a, s, m in cells
+        }
+        for fut in as_completed(futs):
+            tag, status, dt = fut.result()
+            results.append((tag, status, dt))
+            print(f"[{len(results)}/{len(cells)}] {tag}: {status} ({dt:.0f}s)",
+                  flush=True)
+    bad = [r for r in results if r[1] not in ("ok", "cached-ok", "cached-skipped")]
+    print(f"\n{len(results) - len(bad)}/{len(results)} cells ok; failures: {bad}")
+    sys.exit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

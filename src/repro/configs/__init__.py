@@ -1,0 +1,8 @@
+"""Per-architecture configs (assigned pool + the paper's own problems)."""
+from repro.configs.registry import ALIASES, ARCH_IDS, get_config, get_smoke_config, resolve
+from repro.configs.shapes import ALL_SHAPES, BY_NAME, ShapeSuite, applicable
+
+__all__ = [
+    "ALIASES", "ARCH_IDS", "get_config", "get_smoke_config", "resolve",
+    "ALL_SHAPES", "BY_NAME", "ShapeSuite", "applicable",
+]

@@ -1,0 +1,41 @@
+"""The paper's primary contribution: low-precision normalized IHT (QNIHT)
+with recovery guarantees, plus the baselines and RIP theory around it."""
+from repro.core.baselines import clean, cosamp, fista_l1, iht, spectral_norm
+from repro.core.niht import IHTResult, IHTTrace, niht, niht_iteration, qniht, stopping_iterations
+from repro.core.recovery import (
+    psnr,
+    relative_error,
+    snr_db,
+    source_recovery,
+    support_recovery,
+)
+from repro.core.rip import (
+    corollary1_coeffs,
+    eps_q,
+    eps_s,
+    gamma_from_rics,
+    gamma_full,
+    gamma_hat_bound,
+    min_bits_lemma1,
+    rics_sampled,
+    singular_values,
+    theorem3_bound,
+)
+from repro.core.threshold import (
+    find_threshold_bisect,
+    hard_threshold,
+    hard_threshold_bisect,
+    support,
+    top_s_mask,
+)
+
+__all__ = [
+    "clean", "cosamp", "fista_l1", "iht", "spectral_norm",
+    "IHTResult", "IHTTrace", "niht", "niht_iteration", "qniht", "stopping_iterations",
+    "psnr", "relative_error", "snr_db", "source_recovery", "support_recovery",
+    "corollary1_coeffs", "eps_q", "eps_s", "gamma_from_rics", "gamma_full",
+    "gamma_hat_bound", "min_bits_lemma1", "rics_sampled", "singular_values",
+    "theorem3_bound",
+    "find_threshold_bisect", "hard_threshold", "hard_threshold_bisect", "support",
+    "top_s_mask",
+]

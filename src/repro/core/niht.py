@@ -1,0 +1,216 @@
+"""Normalized Iterative Hard Thresholding — full precision and quantized (QNIHT).
+
+Implements the paper's Algorithm 1 faithfully:
+
+* adaptive step size  ``µ = ||g_Γ||² / ||Φ̂ g_Γ||²``  on the current support Γ,
+* proposal ``x⁺ = H_s(x + µ g)`` with ``g = Φ̂₁†(ŷ − Φ̂₂ x)``,
+* if the support changes, accept only when ``µ ≤ (1−c)·ω`` with
+  ``ω = ||x⁺−x||² / ||Φ̂₁(x⁺−x)||²``; otherwise shrink ``µ ← µ/(k(1−c))`` and
+  re-propose (``lax.while_loop`` backtracking),
+* fresh unbiased stochastic quantizations ``Φ̂_{2n-1}, Φ̂_{2n}`` per iteration
+  (``requantize="pair"``) or a single fixed quantization (``requantize="fixed"`` —
+  what the CPU/FPGA systems actually stream, since data arrives pre-quantized).
+
+Everything is a ``lax.scan`` over iterations → one compiled program, traces out.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.threshold import hard_threshold, top_s_mask
+from repro.quant.quantize import fake_quantize
+
+
+class IHTTrace(NamedTuple):
+    """Per-iteration diagnostics (arrays of length n_iters)."""
+
+    resid_q: jax.Array        # ||ŷ − Φ̂ x||₂ (the cost the algorithm minimizes)
+    resid_true: jax.Array     # ||y − Φ x||₂ against full-precision data
+    mu: jax.Array             # accepted step size
+    support_changed: jax.Array
+    backtracks: jax.Array
+
+
+class IHTResult(NamedTuple):
+    x: jax.Array
+    trace: IHTTrace
+
+
+def _sqnorm(v: jax.Array) -> jax.Array:
+    return jnp.real(jnp.vdot(v, v))
+
+
+def _project(a: jax.Array, real_signal: bool, nonneg: bool) -> jax.Array:
+    if real_signal:
+        a = jnp.real(a)
+        if nonneg:
+            a = jnp.maximum(a, 0.0)
+    return a
+
+
+def niht_iteration(
+    x: jax.Array,
+    y_hat: jax.Array,
+    phi1_mv: Callable[[jax.Array], jax.Array],
+    phi1_rmv: Callable[[jax.Array], jax.Array],
+    phi2_mv: Callable[[jax.Array], jax.Array],
+    s: int,
+    c: float,
+    shrink_k: float,
+    max_backtracks: int,
+    real_signal: bool,
+    nonneg: bool,
+):
+    """One NIHT step (Algorithm 1 body). Returns (x_new, mu, changed, n_backtracks).
+
+    ``phi1_*`` is Φ̂_{2n-1} (gradient / step-size / acceptance matrix), ``phi2_mv``
+    is Φ̂_{2n} (residual matrix), matching the paper's pairing.
+    """
+    eps = jnp.asarray(1e-30, jnp.float32)
+    r = y_hat - phi2_mv(x)
+    g = phi1_rmv(r)
+
+    # Γ: support of x, or (first iteration, x = 0) the top-s of the first gradient.
+    on_init = _sqnorm(x) == 0.0
+    mask_x = jnp.abs(x) > 0
+    mask_g = top_s_mask(g, s)
+    gamma_mask = jnp.where(on_init, mask_g, mask_x)
+
+    g_gamma = jnp.where(gamma_mask, g, jnp.zeros_like(g))
+    mu0 = _sqnorm(g_gamma) / (_sqnorm(phi1_mv(g_gamma)) + eps)
+
+    def propose(mu):
+        a = x.astype(g.dtype) + mu * g
+        a = _project(a, real_signal, nonneg).astype(x.dtype)
+        return hard_threshold(a, s)
+
+    def accept(mu, x_prop):
+        new_mask = jnp.abs(x_prop) > 0
+        same = jnp.all(new_mask == gamma_mask)
+        diff = x_prop - x
+        omega = _sqnorm(diff) / (_sqnorm(phi1_mv(diff)) + eps)
+        return same | (mu <= (1.0 - c) * omega)
+
+    x0 = propose(mu0)
+
+    def cond(carry):
+        mu, x_prop, it = carry
+        return (~accept(mu, x_prop)) & (it < max_backtracks)
+
+    def body(carry):
+        mu, _, it = carry
+        mu = mu / (shrink_k * (1.0 - c))
+        return mu, propose(mu), it + 1
+
+    mu, x_new, n_bt = jax.lax.while_loop(cond, body, (mu0, x0, jnp.asarray(0)))
+    changed = ~jnp.all((jnp.abs(x_new) > 0) == gamma_mask)
+    return x_new, mu, changed, n_bt
+
+
+def _dense_ops(mat: jax.Array):
+    mv = lambda v: mat @ v
+    rmv = lambda r: jnp.conj(mat.T) @ r if jnp.iscomplexobj(mat) else mat.T @ r
+    return mv, rmv
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "s", "n_iters", "bits_phi", "bits_y", "requantize", "c", "shrink_k",
+        "max_backtracks", "real_signal", "nonneg",
+    ),
+)
+def qniht(
+    phi: jax.Array,
+    y: jax.Array,
+    s: int,
+    n_iters: int = 50,
+    *,
+    bits_phi: Optional[int] = None,
+    bits_y: Optional[int] = None,
+    key: Optional[jax.Array] = None,
+    requantize: str = "pair",
+    c: float = 0.01,
+    shrink_k: float = 2.0,
+    max_backtracks: int = 30,
+    real_signal: bool = False,
+    nonneg: bool = False,
+) -> IHTResult:
+    """Low-precision NIHT (Algorithm 1). ``bits_phi=bits_y=None`` → plain NIHT.
+
+    Args:
+      phi: (M, N) measurement matrix (real or complex).
+      y: (M,) observations.
+      s: sparsity level.
+      bits_phi / bits_y: data precision (2/4/8) or None for full precision.
+      key: PRNG key for stochastic quantization (required when quantizing).
+      requantize: "pair" (fresh Φ̂_{2n-1}, Φ̂_{2n} each iteration — Algorithm 1) or
+        "fixed" (quantize once; what a deployed system streaming pre-quantized
+        data does).
+      real_signal / nonneg: optional projections (sky images are real, >= 0).
+    """
+    if (bits_phi or bits_y) and key is None:
+        raise ValueError("quantized NIHT needs a PRNG key")
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ky, kphi = jax.random.split(key)
+
+    y_hat = fake_quantize(y, bits_y, ky) if bits_y else y
+    phi_fixed = (
+        fake_quantize(phi, bits_phi, jax.random.fold_in(kphi, 0))
+        if (bits_phi and requantize == "fixed")
+        else phi
+    )
+
+    n = phi.shape[1]
+    x_dtype = jnp.float32 if real_signal else (
+        phi.dtype if jnp.iscomplexobj(phi) else jnp.float32
+    )
+    x0 = jnp.zeros((n,), dtype=x_dtype)
+    phi_mv_true, _ = _dense_ops(phi)
+
+    def step(x, i):
+        if bits_phi and requantize == "pair":
+            k1 = jax.random.fold_in(kphi, 2 * i)
+            k2 = jax.random.fold_in(kphi, 2 * i + 1)
+            phi1 = fake_quantize(phi, bits_phi, k1)
+            phi2 = fake_quantize(phi, bits_phi, k2)
+        else:
+            phi1 = phi2 = phi_fixed
+        p1_mv, p1_rmv = _dense_ops(phi1)
+        p2_mv, _ = _dense_ops(phi2)
+        x_new, mu, changed, n_bt = niht_iteration(
+            x, y_hat, p1_mv, p1_rmv, p2_mv, s, c, shrink_k, max_backtracks,
+            real_signal, nonneg,
+        )
+        tr = (
+            jnp.sqrt(_sqnorm(y_hat - p2_mv(x_new))),
+            jnp.sqrt(_sqnorm(y - phi_mv_true(x_new))),
+            mu,
+            changed,
+            n_bt,
+        )
+        return x_new, tr
+
+    x_final, (rq, rt, mus, ch, bt) = jax.lax.scan(step, x0, jnp.arange(n_iters))
+    return IHTResult(
+        x=x_final,
+        trace=IHTTrace(resid_q=rq, resid_true=rt, mu=mus, support_changed=ch, backtracks=bt),
+    )
+
+
+def niht(phi, y, s, n_iters=50, **kw) -> IHTResult:
+    """Full-precision NIHT (the paper's baseline, Theorem 2 algorithm)."""
+    return qniht(phi, y, s, n_iters, bits_phi=None, bits_y=None, **kw)
+
+
+def stopping_iterations(xs_norm: float, eps_s: float) -> int:
+    """Paper's natural stopping criterion n* = ceil(log2(||x^s|| / eps_s))."""
+    import math
+
+    if eps_s <= 0 or xs_norm <= 0:
+        return 1
+    return max(1, math.ceil(math.log2(xs_norm / eps_s)))

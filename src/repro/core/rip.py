@@ -1,0 +1,117 @@
+"""Restricted-isometry machinery: RICs, γ, Lemma 1 bit bounds, Theorem 3 terms.
+
+The paper's verification strategy (§3.2, supplementary §7.3):
+
+* the singular values of any column submatrix Φ_Γ interlace inside the extreme
+  (nonzero) singular values of Φ, so ``γ̄ = σ_max/σ_min − 1`` computed on the full
+  matrix *upper-bounds* every γ_|Γ| (paper Fig. 7 plots exactly this γ̄);
+* Lemma 1 then converts a margin ε = 1/16 − γ̄ into a minimum bit width
+  ``b ≥ log₂(2√|Γ| / (ε·α))`` that preserves γ̂ ≤ 1/16 after quantization;
+* Theorem 3's error terms ε_s, ε_q are computed from the RICs.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def singular_values(phi: jax.Array) -> jax.Array:
+    """Nonzero-part singular values via the (M×M) Gram eigendecomposition
+    (M ≪ N for compressive sensing, so this is the cheap direction)."""
+    gram = phi @ jnp.conj(phi.T)
+    ev = jnp.linalg.eigvalsh(gram)
+    return jnp.sqrt(jnp.maximum(jnp.real(ev), 0.0))[::-1]  # descending
+
+
+def gamma_full(phi: jax.Array) -> jax.Array:
+    """Paper Fig. 7's γ = σ_max/σ_min − 1 over the full matrix's nonzero spectrum."""
+    sv = singular_values(phi)
+    smax = sv[0]
+    smin = sv[min(phi.shape) - 1]
+    return smax / jnp.maximum(smin, 1e-30) - 1.0
+
+
+@partial(jax.jit, static_argnames=("s", "n_samples"))
+def rics_sampled(phi: jax.Array, s: int, n_samples: int = 32, key=None):
+    """Empirical RICs: extreme singular values of Φ_Γ over random supports |Γ| = s.
+
+    Returns (α̂_s, β̂_s) = (min over samples of σ_min, max of σ_max). A *sampled*
+    estimate (exact RICs are NP-hard, §2 "Step Size Determination").
+    """
+    key = key if key is not None else jax.random.PRNGKey(3)
+    n = phi.shape[1]
+
+    def one(k):
+        idx = jax.random.choice(k, n, (s,), replace=False)
+        sub = jnp.take(phi, idx, axis=1)
+        sv = jnp.linalg.svd(sub, compute_uv=False)
+        return sv[-1], sv[0]
+
+    keys = jax.random.split(key, n_samples)
+    mins, maxs = jax.vmap(one)(keys)
+    return jnp.min(mins), jnp.max(maxs)
+
+
+def gamma_from_rics(alpha: jax.Array, beta: jax.Array) -> jax.Array:
+    """γ_s = max(1 − α/β, β/α − 1)."""
+    return jnp.maximum(1.0 - alpha / beta, beta / alpha - 1.0)
+
+
+def min_bits_lemma1(gamma: float, alpha: float, support_size: int, target: float = 1.0 / 16.0) -> int:
+    """Lemma 1: smallest b with  b ≥ log₂(2√|Γ| / (ε·α)),  ε = target − γ.
+
+    Returns a large sentinel (64) when γ already exceeds the target (no bit
+    width can help — the full-precision matrix itself violates the condition).
+    """
+    eps = target - float(gamma)
+    if eps <= 0:
+        return 64
+    b = math.log2(2.0 * math.sqrt(support_size) / (eps * float(alpha)))
+    return max(2, math.ceil(b))
+
+
+def gamma_hat_bound(gamma: float, alpha: float, support_size: int, bits: int) -> float:
+    """Lemma 1's Eqn. 48:  γ̂_|Γ| ≤ γ_|Γ| + √|Γ| / (2^{b−1} · α)."""
+    return float(gamma) + math.sqrt(support_size) / (2 ** (bits - 1) * float(alpha))
+
+
+def eps_s(x: jax.Array, s: int, e_norm: float, beta_2s: float) -> jax.Array:
+    """Theorem 2/3's ε_s = ||x − xˢ||₂ + ||x − xˢ||₁/√s + ||e||₂/β_2s."""
+    from repro.core.threshold import hard_threshold
+
+    xs = hard_threshold(x, s)
+    tail = x - xs
+    return (
+        jnp.sqrt(jnp.real(jnp.vdot(tail, tail)))
+        + jnp.sum(jnp.abs(tail)) / jnp.sqrt(jnp.asarray(float(s)))
+        + e_norm / beta_2s
+    )
+
+
+def eps_q(
+    m: int,
+    beta_2s_hat: float,
+    xs_norm: float,
+    bits_phi: int,
+    bits_y: int,
+    c_phi: float = 1.0,
+    c_y: float = 1.0,
+) -> float:
+    """Theorem 3's quantization penalty
+    ε_q = √M/β̂_2s · (c_Φ‖xˢ‖₂/2^{bΦ−1} + c_y/2^{b_y−1})."""
+    return (math.sqrt(m) / beta_2s_hat) * (
+        c_phi * xs_norm / 2 ** (bits_phi - 1) + c_y / 2 ** (bits_y - 1)
+    )
+
+
+def corollary1_coeffs(n_antennas: int, beta_2s: float, beta_2s_hat: float):
+    """Radio-astronomy error coefficients (Fig. 3): (√L/β_2s, L/β̂_2s)."""
+    return math.sqrt(n_antennas) / beta_2s, n_antennas / beta_2s_hat
+
+
+def theorem3_bound(n_iter: int, xs_norm: float, eps_s_val: float, eps_q_val: float) -> float:
+    """E||x̂ⁿ⁺¹ − xˢ|| ≤ 2⁻ⁿ‖xˢ‖ + 10ε_s + 5ε_q."""
+    return 2.0 ** (-n_iter) * xs_norm + 10.0 * eps_s_val + 5.0 * eps_q_val

@@ -1,0 +1,4 @@
+"""Data pipeline."""
+from repro.data.synthetic import SyntheticStream, synthetic_batch
+
+__all__ = ["SyntheticStream", "synthetic_batch"]

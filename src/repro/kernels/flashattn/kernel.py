@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: fused online-softmax attention (flash attention).
+
+Needed because the assigned 32k-prefill shapes make the naive score matrix
+(S², per head) unmaterializable; the kernel keeps a (block_q, block_k) tile in
+VMEM with running row-max/row-sum statistics in VMEM scratch, MXU-aligned.
+
+Grid: (batch·heads, q_blocks, kv_blocks) — kv innermost (sequential on TPU), so
+the scratch accumulators persist across the kv sweep of each q block. Causal
+blocks strictly above the diagonal are skipped entirely (`pl.when`); the
+diagonal block applies an elementwise mask.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, block_q: int, block_k: int, n_kv: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal: skip kv blocks strictly above the q block's last row
+    run = (not causal) or (ki * block_k <= qi * block_q + block_q - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)                       # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                       # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                       # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                              # (bq, bk)
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_scr[...]                                    # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                                 # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                        # (bq, 1)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = alpha * acc_scr[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "scale", "block_q", "block_k", "interpret")
+)
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    scale: float,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (BH, Sq, D), k/v: (BH, Sk, D); Sq % block_q == Sk % block_k == 0."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    if sq % block_q or sk % block_k:
+        raise ValueError("pad sequence lengths to block multiples in ops.py")
+    grid = (bh, sq // block_q, sk // block_k)
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, causal=causal,
+            block_q=block_q, block_k=block_k, n_kv=grid[2],
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,55 @@
+"""Public attention wrapper with GQA handling and backend dispatch."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flashattn.kernel import flash_attention_pallas
+from repro.kernels.flashattn.ref import attention_ref
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    use_pallas: Optional[bool] = None,
+    interpret: bool = False,
+    block_q: int = 256,
+    block_k: int = 256,
+) -> jax.Array:
+    """Multi-head attention with GQA.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D) with Hq % Hkv == 0.
+    Returns (B, Hq, Sq, D) in q.dtype.
+    """
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    if hq % hkv:
+        raise ValueError(f"Hq={hq} not a multiple of Hkv={hkv}")
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu" or interpret
+
+    rep = hq // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    qf = q.reshape(b * hq, sq, d)
+    kf = k.reshape(b * hq, sk, d)
+    vf = v.reshape(b * hq, sk, d)
+    if not use_pallas:
+        out = attention_ref(qf, kf, vf, causal=causal, scale=scale).astype(q.dtype)
+        return out.reshape(b, hq, sq, d)
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    out = flash_attention_pallas(
+        qf, kf, vf, causal=causal, scale=scale, block_q=bq, block_k=bk,
+        interpret=interpret,
+    )
+    return out.reshape(b, hq, sq, d)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for fused attention: plain softmax(QKᵀ)V with optional
+causal masking. Small shapes only (materializes the score matrix)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *, causal: bool, scale: float
+) -> jnp.ndarray:
+    """q,k,v: (BH, S, D) (same S for q and kv in the oracle). Returns (BH, S, D) f32."""
+    qf, kf, vf = (a.astype(jnp.float32) for a in (q, k, v))
+    s = jnp.einsum("bqd,bkd->bqk", qf, kf) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask[None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, vf)

@@ -1,0 +1,79 @@
+"""Pallas TPU kernels for the streaming hard-threshold operator H_s.
+
+Two passes (see ref.py): a histogram kernel (block-accumulated into a single
+(1, nbins) output revisited across the grid) and an elementwise mask kernel.
+Both are bandwidth-bound streaming passes over x — the same access pattern the
+paper's FPGA uses for its top-S binary search, restructured so each element is
+read exactly twice instead of O(log) times.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hist_kernel(x_ref, vmax_ref, o_ref, *, nbins: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    mag = jnp.abs(x_ref[...])                                  # (1, bn)
+    vmax = vmax_ref[0, 0]
+    idx = jnp.clip((mag / vmax * nbins).astype(jnp.int32), 0, nbins - 1)
+    bins = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[1], nbins), 1)
+    onehot = (idx[0, :, None] == bins).astype(jnp.int32)       # (bn, nbins)
+    o_ref[...] += jnp.sum(onehot, axis=0, keepdims=True)
+
+
+def _mask_kernel(x_ref, t_ref, o_ref):
+    x = x_ref[...]
+    t = t_ref[0, 0]
+    o_ref[...] = jnp.where(jnp.abs(x) > t, x, jnp.zeros_like(x))
+
+
+@functools.partial(jax.jit, static_argnames=("nbins", "block_n", "interpret"))
+def hist_pallas(
+    x: jax.Array, vmax: jax.Array, *, nbins: int = 2048, block_n: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    """Histogram of |x| (x: (1, N) f32, N % block_n == 0) → (1, nbins) int32."""
+    n = x.shape[1]
+    if n % block_n:
+        raise ValueError("pad x to a multiple of block_n in ops.py")
+    return pl.pallas_call(
+        functools.partial(_hist_kernel, nbins=nbins),
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, nbins), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, nbins), jnp.int32),
+        interpret=interpret,
+    )(x, vmax)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def mask_pallas(
+    x: jax.Array, t: jax.Array, *, block_n: int = 1024, interpret: bool = False
+) -> jax.Array:
+    """y = where(|x| > t, x, 0) for x (1, N), N % block_n == 0."""
+    n = x.shape[1]
+    if n % block_n:
+        raise ValueError("pad x to a multiple of block_n in ops.py")
+    return pl.pallas_call(
+        _mask_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, t)

@@ -1,0 +1,41 @@
+"""Public wrapper: streaming H_s via histogram + threshold + mask."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hsthresh.kernel import hist_pallas, mask_pallas
+from repro.kernels.hsthresh.ref import hist_ref, hsthresh_ref, mask_ref, select_threshold
+
+
+def _round_up(v: int, mult: int) -> int:
+    return (v + mult - 1) // mult * mult
+
+
+def hsthresh(
+    x: jax.Array,
+    s: int,
+    *,
+    nbins: int = 2048,
+    block_n: int = 1024,
+    use_pallas: Optional[bool] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Streaming hard threshold on a real vector. Support size <= s guaranteed;
+    equals exact H_s whenever no two magnitudes share the threshold bin."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu" or interpret
+    if not use_pallas:
+        return hsthresh_ref(x, s, nbins)
+    n = x.shape[0]
+    npad = _round_up(n, block_n)
+    x2 = jnp.pad(x.astype(jnp.float32), (0, npad - n)).reshape(1, npad)
+    mag = jnp.abs(x2)
+    vmax = jnp.maximum(jnp.max(mag), 1e-30).reshape(1, 1)
+    h = hist_pallas(x2, vmax, nbins=nbins, block_n=block_n, interpret=interpret)
+    # padded zeros land in bin 0, which never participates in the tail selection
+    t = select_threshold(h[0], vmax[0, 0], s)
+    y = mask_pallas(x2, t.reshape(1, 1), block_n=block_n, interpret=interpret)
+    return y[0, :n].astype(x.dtype)

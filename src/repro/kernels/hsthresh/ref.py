@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the hard-threshold (H_s) kernel pair.
+
+The TPU design mirrors the paper's FPGA §8 ("binary search on the updated model
+to find the threshold value satisfying that only top S values are larger"),
+but in two streaming passes instead of a sequential bisection:
+
+  pass 1 (``hist``):  histogram of |x| over ``nbins`` uniform bins in [0, max],
+  select (jnp):       the finest bin edge t with  count(|x| > t) <= s,
+  pass 2 (``mask``):  y = where(|x| > t, x, 0).
+
+With ``nbins`` large the within-bin ties are rare; the operator always returns
+support size <= s (a valid H_s relaxation, identical in kind to the FPGA one).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hist_ref(mag: jnp.ndarray, vmax: jnp.ndarray, nbins: int) -> jnp.ndarray:
+    """Counts of |x| in uniform bins over [0, vmax]; shape (nbins,), int32."""
+    idx = jnp.clip((mag / vmax * nbins).astype(jnp.int32), 0, nbins - 1)
+    return jnp.zeros((nbins,), jnp.int32).at[idx].add(1)
+
+
+def select_threshold(hist: jnp.ndarray, vmax: jnp.ndarray, s: int) -> jnp.ndarray:
+    """Smallest bin edge t with count(|x| > t) <= s (edges = i*vmax/nbins)."""
+    nbins = hist.shape[0]
+    # tail[i] = number of elements in bins >= i  (all of them have |x| > edge i-... )
+    tail = jnp.cumsum(hist[::-1])[::-1]
+    # count(|x| > edge_i) <= tail[i]  (edge_i = i * vmax / nbins)
+    ok = tail <= s
+    first_ok = jnp.argmax(ok)  # first True (ok is monotone non-decreasing)
+    any_ok = jnp.any(ok)
+    idx = jnp.where(any_ok, first_ok, nbins)
+    return idx.astype(jnp.float32) * vmax / nbins
+
+
+def mask_ref(x: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    return jnp.where(jnp.abs(x) > t, x, jnp.zeros_like(x))
+
+
+def hsthresh_ref(x: jnp.ndarray, s: int, nbins: int = 4096) -> jnp.ndarray:
+    """Full oracle: histogram-select-mask H_s on a vector."""
+    mag = jnp.abs(x)
+    vmax = jnp.maximum(jnp.max(mag), 1e-30)
+    h = hist_ref(mag, vmax, nbins)
+    t = select_threshold(h, vmax, s)
+    return mask_ref(x, t)

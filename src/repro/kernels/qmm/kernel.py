@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: packed low-precision matmul (the paper's hot spot).
+
+TPU adaptation of the paper's AVX2/FPGA low-precision dot-product engines: the
+*packed* integer codes are what stream HBM→VMEM (4–16× fewer bytes than f32),
+unpacking is shift/mask arithmetic on VMEM-resident vregs, and the MXU does the
+f32-accumulated matmul on 128-aligned tiles. Performance is therefore bound by
+``size(Φ̂)/BW_HBM`` — the same precision-proportional law as the paper's
+``T = size(Φ)/P`` on FPGA (supplementary §8.1).
+
+Layout contract (see ref.py): ``y[m, n] = Σ_k x[m, k] · ŵ[n, k]`` with ``ŵ``
+packed along K (minor-most axis → contiguous packed words).
+
+Grid: ``(M/bm, N/bn, K/bk)``; K is the fastest-varying (sequential on TPU), and
+the output block (bm, bn) is revisited across the K steps and accumulated in
+place (initialized at k==0). Block shapes default to MXU-aligned
+``bm=128, bn=128, bk=512`` (packed K-block = bk/vpb bytes per row).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.quant.formats import BY_BITS
+
+
+def _unpack_block(w_packed_blk: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """(bn, bk/vpb) uint8 → (bn, bk) f32 codes (unit scale, in [-K, K])."""
+    fmt = BY_BITS[bits]
+    vpb = fmt.values_per_byte
+    k = fmt.half_steps
+    w32 = w_packed_blk.astype(jnp.int32)
+    if vpb == 1:
+        codes = w32
+    else:
+        mask = (1 << bits) - 1
+        parts = [(w32 >> (bits * i)) & mask for i in range(vpb)]
+        # parts[i] holds code (j*vpb + i): interleave on a new minor axis.
+        codes = jnp.stack(parts, axis=-1).reshape(w32.shape[0], w32.shape[1] * vpb)
+    return (codes - k).astype(jnp.float32)
+
+
+def _qmm_kernel(x_ref, w_ref, scale_ref, o_ref, *, bits: int, n_k_steps: int):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x_blk = x_ref[...].astype(jnp.float32)              # (bm, bk)
+    codes = _unpack_block(w_ref[...], bits)             # (bn, bk) unit-scale codes
+    # contract over k: (bm, bk) x (bn, bk) -> (bm, bn)
+    acc = jax.lax.dot_general(
+        x_blk, codes, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[...] += acc * (scale_ref[...] / BY_BITS[bits].half_steps)  # (1, bn) bcast
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "k_dim", "block_m", "block_n", "block_k", "interpret")
+)
+def qmm_pallas(
+    x: jax.Array,
+    w_packed: jax.Array,
+    scale: jax.Array,
+    *,
+    bits: int,
+    k_dim: int,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Packed low-precision matmul. Shapes must be pre-padded to block multiples:
+    x (M, K), w_packed (N, K/vpb) uint8, scale (1, N). Returns (M, N) f32."""
+    fmt = BY_BITS[bits]
+    vpb = fmt.values_per_byte
+    m, k = x.shape
+    n = w_packed.shape[0]
+    if k != k_dim:
+        raise ValueError(f"x K dim {k} != k_dim {k_dim}")
+    if k % block_k or m % block_m or n % block_n:
+        raise ValueError(f"shapes ({m},{k}),({n}) must be multiples of blocks "
+                         f"({block_m},{block_n},{block_k}); pad in ops.py")
+    if w_packed.shape[1] * vpb != k:
+        raise ValueError("w_packed minor dim inconsistent with k_dim/bits")
+    bk_packed = block_k // vpb
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        functools.partial(_qmm_kernel, bits=bits, n_k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_n, bk_packed), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w_packed, scale)

@@ -1,0 +1,181 @@
+"""Jit'd public wrappers around the packed low-precision matmul.
+
+* :func:`pack_weights` — quantize + pack a weight/measurement matrix for qmm.
+* :func:`qmm` — padded dispatch: Pallas kernel on TPU, oracle elsewhere.
+* :func:`qmm_complex` — complex Φ̂ × real/complex vectors via real matmuls.
+* :class:`PackedMatrix` / :func:`pack_operator` — both orientations of a CS
+  measurement matrix (Φ̂ and Φ̂†), the pair QNIHT streams every iteration.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qmm.kernel import qmm_pallas
+from repro.kernels.qmm.ref import qmm_ref
+from repro.quant.formats import BY_BITS
+from repro.quant.pack import pack_codes
+from repro.quant.quantize import quantize_codes
+
+
+def _round_up(v: int, mult: int) -> int:
+    return (v + mult - 1) // mult * mult
+
+
+class PackedWeights(NamedTuple):
+    """(N, K) weight matrix quantized & packed along K."""
+
+    packed: jax.Array      # (N, packed_len(K)) uint8
+    scale: jax.Array       # (1, N) f32 per-channel
+    bits: int
+    k_dim: int
+
+    @property
+    def nbytes(self) -> int:
+        return self.packed.size  # uint8
+
+
+def pack_weights(
+    w: jax.Array,
+    bits: int,
+    key: Optional[jax.Array] = None,
+    per_channel: bool = True,
+) -> PackedWeights:
+    """Quantize (stochastic if key given) and pack an (N, K) real matrix."""
+    if w.ndim != 2:
+        raise ValueError("pack_weights expects (N, K)")
+    codes, scale = quantize_codes(w, bits, key, channel_axis=0 if per_channel else None)
+    if not per_channel:
+        scale = jnp.full((w.shape[0], 1), scale)
+    return PackedWeights(
+        packed=pack_codes(codes, bits),
+        scale=scale.reshape(1, -1).astype(jnp.float32),
+        bits=bits,
+        k_dim=w.shape[1],
+    )
+
+
+def qmm(
+    x: jax.Array,
+    w: PackedWeights,
+    *,
+    use_pallas: Optional[bool] = None,
+    interpret: bool = False,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+) -> jax.Array:
+    """y = x @ dequant(w)ᵀ with padding to kernel block multiples.
+
+    ``use_pallas=None`` auto-dispatches: the Mosaic kernel on TPU, the pure-jnp
+    oracle otherwise (interpret=True forces the kernel body on CPU for tests).
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu" or interpret
+    m, k = x.shape
+    n = w.packed.shape[0]
+    if not use_pallas:
+        return qmm_ref(x, w.packed, w.scale, w.bits, w.k_dim)
+
+    vpb = BY_BITS[w.bits].values_per_byte
+    # shrink blocks for small problems, keeping MXU-friendly minima
+    bm = min(block_m, _round_up(m, 8))
+    bn = min(block_n, _round_up(n, 128))
+    bk = min(block_k, _round_up(w.k_dim, 128 * vpb))
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(w.k_dim, bk)
+    x_p = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    packed_k = kp // vpb
+    w_p = jnp.pad(w.packed, ((0, np_ - n), (0, packed_k - w.packed.shape[1])),
+                  constant_values=_zero_byte(w.bits))
+    s_p = jnp.pad(w.scale, ((0, 0), (0, np_ - n)))
+    y = qmm_pallas(x_p, w_p, s_p, bits=w.bits, k_dim=kp,
+                   block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
+    return y[:m, :n]
+
+
+def _zero_byte(bits: int) -> int:
+    """uint8 word whose every packed code is 0 (biased representation of 0)."""
+    fmt = BY_BITS[bits]
+    k = fmt.half_steps
+    word = 0
+    for i in range(fmt.values_per_byte):
+        word |= k << (bits * i)
+    return word
+
+
+class PackedOperator(NamedTuple):
+    """A quantized CS measurement matrix in both orientations.
+
+    ``fwd``  computes Φ̂ x  (stores Φ̂ as (M, N) packed along N),
+    ``adj``  computes Φ̂† r (stores Φ̂ᵀ* as (N, M) packed along M).
+    Complex matrices store stacked real/imag parts with a leading axis of 2.
+    """
+
+    fwd_re: PackedWeights
+    fwd_im: Optional[PackedWeights]
+    adj_re: PackedWeights
+    adj_im: Optional[PackedWeights]
+
+    @property
+    def is_complex(self) -> bool:
+        return self.fwd_im is not None
+
+    @property
+    def nbytes(self) -> int:
+        total = self.fwd_re.nbytes + self.adj_re.nbytes
+        if self.is_complex:
+            total += self.fwd_im.nbytes + self.adj_im.nbytes
+        return total
+
+
+def pack_operator(
+    phi: jax.Array, bits: int, key: Optional[jax.Array] = None, per_channel: bool = False
+) -> PackedOperator:
+    """Quantize a dense (M, N) measurement matrix for streaming IHT.
+
+    Per-tensor scale by default (faithful to the paper's single c_Φ)."""
+    if jnp.iscomplexobj(phi):
+        re, im = jnp.real(phi), jnp.imag(phi)
+        keys = jax.random.split(key, 4) if key is not None else [None] * 4
+        return PackedOperator(
+            fwd_re=pack_weights(re, bits, keys[0], per_channel),
+            fwd_im=pack_weights(im, bits, keys[1], per_channel),
+            adj_re=pack_weights(re.T, bits, keys[2], per_channel),
+            adj_im=pack_weights(im.T, bits, keys[3], per_channel),
+        )
+    keys = jax.random.split(key, 2) if key is not None else [None, None]
+    return PackedOperator(
+        fwd_re=pack_weights(phi, bits, keys[0], per_channel),
+        fwd_im=None,
+        adj_re=pack_weights(phi.T, bits, keys[1], per_channel),
+        adj_im=None,
+    )
+
+
+def packed_matvec(op: PackedOperator, x: jax.Array, **kw) -> jax.Array:
+    """Φ̂ x for real or complex Φ̂ (x may be real or complex)."""
+    if not op.is_complex:
+        return qmm(x[None, :].astype(jnp.float32), op.fwd_re, **kw)[0]
+    xr = jnp.real(x).astype(jnp.float32)[None, :]
+    xi = jnp.imag(x).astype(jnp.float32)[None, :]
+    rr = qmm(xr, op.fwd_re, **kw)[0]
+    ri = qmm(xi, op.fwd_re, **kw)[0]
+    ir = qmm(xr, op.fwd_im, **kw)[0]
+    ii = qmm(xi, op.fwd_im, **kw)[0]
+    return jax.lax.complex(rr - ii, ri + ir)
+
+
+def packed_rmatvec(op: PackedOperator, r: jax.Array, **kw) -> jax.Array:
+    """Φ̂† r (conjugate transpose) for real or complex Φ̂."""
+    if not op.is_complex:
+        return qmm(r[None, :].astype(jnp.float32), op.adj_re, **kw)[0]
+    rr_ = jnp.real(r).astype(jnp.float32)[None, :]
+    ri_ = jnp.imag(r).astype(jnp.float32)[None, :]
+    # Φ† = (Re − j·Im)ᵀ ; (Φ† r) = (Reᵀ r_re + Imᵀ r_im) + j(Reᵀ r_im − Imᵀ r_re)
+    t1 = qmm(rr_, op.adj_re, **kw)[0]
+    t2 = qmm(ri_, op.adj_im, **kw)[0]
+    t3 = qmm(ri_, op.adj_re, **kw)[0]
+    t4 = qmm(rr_, op.adj_im, **kw)[0]
+    return jax.lax.complex(t1 + t2, t3 - t4)

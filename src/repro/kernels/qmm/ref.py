@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the packed low-precision matmul (qmm).
+
+Contract (shared with the Pallas kernel):
+
+    y = x @ dequant(w)ᵀ
+
+* ``x``        — (M, K) float32/bfloat16 activations,
+* ``w_packed`` — (N, packed_len(K, bits)) uint8, codes packed along K
+                 (the contraction axis — minor-most, so packed words stream
+                 contiguously HBM→VMEM on TPU),
+* ``scale``    — (1, N) per-output-channel scale (per-tensor = broadcast),
+* ``bits``     — 2 / 4 / 8.
+
+Dequantized value of code k is ``scale * k / K_steps`` (see repro.quant.formats).
+Accumulation is float32.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.quant.formats import BY_BITS
+from repro.quant.pack import unpack_codes
+
+
+def qmm_ref(x: jnp.ndarray, w_packed: jnp.ndarray, scale: jnp.ndarray, bits: int, k_dim: int) -> jnp.ndarray:
+    """Reference packed matmul. Returns (M, N) float32."""
+    fmt = BY_BITS[bits]
+    codes = unpack_codes(w_packed, bits, k_dim)              # (N, K) int8
+    w = codes.astype(jnp.float32) / fmt.half_steps           # (N, K), unit scale
+    y = jnp.dot(x.astype(jnp.float32), w.T, preferred_element_type=jnp.float32)
+    return y * scale.reshape(1, -1)

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: stochastic rounding to the odd-level integer grid.
+
+The paper's CPU implementation burns XORShift + AVX2 lanes on this (§9); on TPU
+it is a pure VPU elementwise kernel. Random words are generated *outside* with
+``jax.random.bits`` (counter-based, reproducible) and streamed as an operand —
+this keeps the kernel deterministic given its inputs and bit-exact against the
+``ref.py`` oracle (validated in interpret mode).
+
+Grid: 1-D over row blocks of a 2-D (rows, cols) view; both operands tile
+(block_r, cols) in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.quant.formats import BY_BITS
+
+
+def _sqround_kernel(v_ref, u_ref, scale_ref, o_ref, *, bits: int):
+    k = BY_BITS[bits].half_steps
+    v = v_ref[...]
+    scale = scale_ref[0, 0]
+    scaled = jnp.clip(v / scale, -1.0, 1.0) * k
+    low = jnp.floor(scaled)
+    p_up = scaled - low
+    u01 = (u_ref[...] >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0**-24)
+    codes = low + (u01 < p_up).astype(jnp.float32)
+    o_ref[...] = jnp.clip(codes, -k, k).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_r", "interpret"))
+def sqround_pallas(
+    v: jax.Array,
+    u: jax.Array,
+    scale: jax.Array,
+    *,
+    bits: int,
+    block_r: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Stochastically round (R, C) float32 ``v`` to int8 codes. R % block_r == 0."""
+    r, c = v.shape
+    if r % block_r:
+        raise ValueError(f"rows {r} not a multiple of block_r {block_r}; pad in ops.py")
+    return pl.pallas_call(
+        functools.partial(_sqround_kernel, bits=bits),
+        grid=(r // block_r,),
+        in_specs=[
+            pl.BlockSpec((block_r, c), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, c), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.int8),
+        interpret=interpret,
+    )(v, u, scale)

@@ -1,0 +1,51 @@
+"""Public wrapper: stochastic quantization of a matrix with the Pallas kernel.
+
+``sqround(v, bits, key)`` returns (codes int8, scale) — same semantics as
+``repro.quant.quantize_codes`` but (a) bit-exact reproducible from the uint32
+stream, (b) executed by the TPU kernel when available.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sqround.kernel import sqround_pallas
+from repro.kernels.sqround.ref import sqround_ref
+
+
+def _round_up(v: int, mult: int) -> int:
+    return (v + mult - 1) // mult * mult
+
+
+def sqround(
+    v: jax.Array,
+    bits: int,
+    key: jax.Array,
+    scale: Optional[jax.Array] = None,
+    *,
+    use_pallas: Optional[bool] = None,
+    interpret: bool = False,
+    block_r: int = 256,
+) -> tuple[jax.Array, jax.Array]:
+    """Stochastically round a 2-D float32 array to int8 codes in [-K, K]."""
+    if v.ndim != 2:
+        raise ValueError("sqround expects a 2-D array")
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu" or interpret
+    if scale is None:
+        m = jnp.max(jnp.abs(v))
+        scale = jnp.where(m > 0, m, 1.0).astype(jnp.float32)
+    u = jax.random.bits(key, v.shape, dtype=jnp.uint32)
+    if not use_pallas:
+        return sqround_ref(v, u, scale, bits), scale
+    r, c = v.shape
+    br = min(block_r, r)
+    rp = _round_up(r, br)
+    v_p = jnp.pad(v, ((0, rp - r), (0, 0)))
+    u_p = jnp.pad(u, ((0, rp - r), (0, 0)))
+    codes = sqround_pallas(
+        v_p, u_p, scale.reshape(1, 1), bits=bits, block_r=br, interpret=interpret
+    )
+    return codes[:r], scale

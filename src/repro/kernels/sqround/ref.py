@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the stochastic-rounding quantizer kernel.
+
+Contract: given values ``v`` (float32), uniform random words ``u`` (uint32, same
+shape), a scalar ``scale`` and bit width ``bits``, produce int8 codes
+
+    scaled = clip(v/scale, -1, 1) * K
+    low    = floor(scaled)
+    code   = low + (uniform01(u) < scaled - low)
+
+where ``uniform01(u) = (u >> 8) * 2^-24`` (the standard 24-bit mantissa trick —
+bit-exact between the oracle and the kernel, unlike float division).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.quant.formats import BY_BITS
+
+
+def uniform01_from_bits(u: jnp.ndarray) -> jnp.ndarray:
+    return (u >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0**-24)
+
+
+def sqround_ref(v: jnp.ndarray, u: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    k = BY_BITS[bits].half_steps
+    scaled = jnp.clip(v / scale, -1.0, 1.0) * k
+    low = jnp.floor(scaled)
+    p_up = scaled - low
+    codes = low + (uniform01_from_bits(u) < p_up).astype(jnp.float32)
+    return jnp.clip(codes, -k, k).astype(jnp.int8)

@@ -1,0 +1,435 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces, with NO real allocation (ShapeDtypeStruct inputs):
+  * a compiled SPMD executable for the 16×16 single-pod mesh and the
+    2×16×16 multi-pod mesh (proving the sharding config is coherent),
+  * ``memory_analysis()``  — per-device bytes (proves it fits),
+  * ``cost_analysis()``    — HLO FLOPs / bytes for the §Roofline terms,
+  * collective bytes parsed from the optimized HLO (scan bodies × trip count),
+all recorded as JSON under experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen1_5_32b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all            # every runnable cell
+  python -m repro.launch.dryrun --arch ... --policy w4kv8   # quantized serving
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, BY_NAME, applicable, get_config
+from repro.configs.shapes import ALL_SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.quant.policy import FULL_PRECISION, W4KV8, W8, QuantPolicy
+from repro.train.steps import (
+    build_sharded_decode_step,
+    build_sharded_prefill,
+    build_sharded_train_step,
+    init_state,
+    train_input_specs,
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo: str, loop_trip: int) -> dict:
+    """Estimate per-device collective payload bytes from optimized HLO.
+
+    Sums the result-shape bytes of every collective op; ops inside while-loop
+    body computations (the layer scan) are multiplied by ``loop_trip``.
+    This is an estimate: result bytes ≈ payload for all-gather/all-reduce,
+    and scan bodies dominate, so trip-count weighting is the first-order term.
+    """
+    per_kind = {k: 0 for k in _COLLECTIVES}
+    count = 0
+    current_comp = ""
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->", stripped)
+        if m and stripped.endswith("{"):
+            current_comp = m.group(1)
+            continue
+        for kind in _COLLECTIVES:
+            # match the op use, e.g.  %x = f32[..] all-reduce(...)
+            if re.search(rf"=\s*[\w()\[\],\s{{}}/#*]*{kind}(-start|-done)?\(", stripped):
+                lhs = stripped.split("=", 1)[1]
+                b = _shape_bytes(lhs.split(kind)[0])
+                mult = loop_trip if ("body" in current_comp or "while" in current_comp) else 1
+                per_kind[kind] += b * mult
+                count += 1
+                break
+    per_kind["total"] = sum(per_kind[k] for k in _COLLECTIVES)
+    per_kind["op_count"] = count
+    return per_kind
+
+
+def _mem_analysis(compiled) -> dict:
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes", "host_argument_size_in_bytes",
+                     "peak_memory_in_bytes"):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                out[attr] = int(v)
+    except Exception as e:  # CPU backend may not support it
+        out["error"] = str(e)
+    return out
+
+
+def _cost_analysis(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and not k.startswith("utilization")}
+    except Exception as e:
+        return {"error": str(e)}
+
+
+def _loop_trip(cfg: ModelConfig) -> int:
+    from repro.models.model import _period_info
+
+    _, n_full, _ = _period_info(cfg)
+    return max(n_full, 1)
+
+
+def _depth_variants(cfg: ModelConfig):
+    """(cfg_P, cfg_2P, n_full, tail_frac): shallow configs for the scan-body
+    cost extrapolation. HloCostAnalysis counts while bodies ONCE (trip count is
+    dynamic), so per-device FLOPs/bytes are reconstructed linearly:
+
+        total ≈ f(P) + (n_full − 1 + |tail|/P) · (f(2P) − f(P))
+    """
+    import dataclasses as dc
+
+    from repro.models.model import _period_info
+
+    slots, n_full, tail = _period_info(cfg)
+    p = len(slots)
+    cfg1 = dc.replace(cfg, n_layers=p, scan_unroll=True)
+    cfg2 = dc.replace(cfg, n_layers=2 * p, scan_unroll=True)
+    return cfg1, cfg2, n_full, len(tail) / p
+
+
+def _extrapolate(v1: float, v2: float, n_full: int, tail_frac: float) -> float:
+    delta = max(v2 - v1, 0.0)
+    return v1 + (n_full - 1 + tail_frac) * delta
+
+
+def _sharded_state_bytes(tree, shardings, n_devices) -> int:
+    """Analytic per-device bytes: leaf bytes / number of shards."""
+    flat = jax.tree_util.tree_leaves(tree)
+    flat_sh = jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: hasattr(x, "spec")
+    )
+    total = 0
+    for leaf, sh in zip(flat, flat_sh):
+        nbytes = leaf.size * jnp.dtype(leaf.dtype).itemsize
+        try:
+            nshards = sh.num_devices_sharded(leaf.shape) if hasattr(sh, "num_devices_sharded") else None
+        except Exception:
+            nshards = None
+        if nshards is None:
+            # count mesh axes used in the spec
+            used = 1
+            mesh = sh.mesh
+            for ax in jax.tree_util.tree_leaves(tuple(sh.spec)):
+                if ax is not None:
+                    used *= mesh.shape[ax]
+            nshards = used
+        total += nbytes // max(nshards, 1)
+    return total
+
+
+POLICIES = {
+    "fp": FULL_PRECISION,
+    "w8": W8,
+    "w4kv8": W4KV8,
+    "w2kv8": QuantPolicy(weight_bits=2, kv_bits=8),
+    "qgrad8": QuantPolicy(grad_bits=8),
+}
+
+
+def _build_lowered(cfg: ModelConfig, shape, mesh, policy, seq_parallel,
+                   accum_steps: int = 1, serve_sharding: str = "train",
+                   serve_dtype: str = "float32"):
+    """Returns (lowered, state_tree, state_shardings, tokens, model_flops)."""
+    if shape.kind == "train":
+        opt = adamw(3e-4)
+        step, st_sh = build_sharded_train_step(
+            cfg, mesh, opt, shape.global_batch, policy=policy,
+            seq_parallel=seq_parallel, accum_steps=accum_steps,
+        )
+        state_abs = jax.eval_shape(lambda: init_state(cfg, opt, jax.random.PRNGKey(0)))
+        batch_abs = train_input_specs(cfg, mesh, shape.global_batch, shape.seq_len)
+        lowered = step.lower(state_abs, batch_abs)
+        tokens = shape.global_batch * shape.seq_len
+        return (lowered,
+                (state_abs.params, state_abs.opt.mu, state_abs.opt.nu),
+                (st_sh.params, st_sh.opt.mu, st_sh.opt.nu),
+                tokens, 6 * cfg.active_param_count() * tokens)
+    if shape.kind == "prefill":
+        run, (p_sh, tok_sh, c_sh) = build_sharded_prefill(
+            cfg, mesh, shape.global_batch, shape.seq_len, policy=policy,
+            serve_sharding=serve_sharding, serve_dtype=serve_dtype,
+        )
+        params_abs, cache_abs, mem_abs = _serve_abstracts(
+            cfg, policy, shape.global_batch, shape.seq_len, serve_dtype
+        )
+        tokens_abs = jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len), jnp.int32)
+        lowered = run.lower(params_abs, tokens_abs, cache_abs, mem_abs)
+        tokens = shape.global_batch * shape.seq_len
+        return (lowered, (params_abs, cache_abs), (p_sh, c_sh),
+                tokens, 2 * cfg.active_param_count() * tokens)
+    # decode
+    cache_len = shape.seq_len + 128
+    step, (p_sh, tok_sh, c_sh) = build_sharded_decode_step(
+        cfg, mesh, shape.global_batch, cache_len, policy=policy,
+        serve_sharding=serve_sharding, serve_dtype=serve_dtype,
+    )
+    params_abs, cache_abs, _ = _serve_abstracts(cfg, policy, shape.global_batch,
+                                                cache_len, serve_dtype)
+    token_abs = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    lowered = step.lower(params_abs, token_abs, cache_abs, pos_abs)
+    tokens = shape.global_batch
+    return (lowered, (params_abs, cache_abs), (p_sh, c_sh),
+            tokens, 2 * cfg.active_param_count() * tokens)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, policy_name: str = "fp",
+             seq_parallel: bool = True, depth_correct: bool = True,
+             accum_steps: int = 1, serve_sharding: str = "train",
+             serve_dtype: str = "float32", ssm_chunk: int = 0,
+             moe_group: int = 0) -> dict:
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if ssm_chunk:
+        cfg = _dc.replace(cfg, ssm_chunk=ssm_chunk)
+    if moe_group:
+        cfg = _dc.replace(cfg, moe_group_size=moe_group)
+    shape = BY_NAME[shape_name]
+    ok, why = applicable(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "policy": policy_name,
+        "seq_parallel": seq_parallel,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    policy = POLICIES[policy_name]
+
+    rec["accum_steps"] = accum_steps
+    rec["serve_sharding"] = serve_sharding
+    rec["serve_dtype"] = serve_dtype
+    t0 = time.time()
+    lowered, state_tree, state_sh, tokens, model_flops = _build_lowered(
+        cfg, shape, mesh, policy, seq_parallel, accum_steps, serve_sharding,
+        serve_dtype,
+    )
+    rec["lower_s"] = round(time.time() - t0, 1)
+    print(f"[dryrun] {arch} {shape_name} {rec['mesh']}: lowered in {rec['lower_s']}s",
+          flush=True)
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 1)
+    print(f"[dryrun] {arch} {shape_name} {rec['mesh']}: compiled in {rec['compile_s']}s",
+          flush=True)
+
+    mem = _mem_analysis(compiled)
+    cost = _cost_analysis(compiled)
+    print(f"[dryrun] {arch} {shape_name} {rec['mesh']}: memory_analysis={mem}")
+    print(f"[dryrun] {arch} {shape_name} {rec['mesh']}: cost_analysis="
+          f"{ {k: v for k, v in cost.items() if k in ('flops', 'bytes accessed')} }")
+
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo, _loop_trip(cfg))
+    rec.update(
+        status="ok",
+        memory_analysis=mem,
+        cost_analysis=cost,
+        collective_bytes=coll,
+        model_flops=model_flops,
+        tokens=tokens,
+        n_devices=mesh.devices.size,
+        state_bytes_per_device=_sharded_state_bytes_pair(state_tree, state_sh),
+        hlo_size=len(hlo),
+    )
+
+    # HloCostAnalysis counts scan (while) bodies once; reconstruct full-depth
+    # per-device FLOPs/bytes by compiling *fully-unrolled* depth-P and depth-2P
+    # probe variants and extrapolating linearly (see _depth_variants). Probes
+    # run at a reduced global batch (exactly divisible by the batch shards) so
+    # the unrolled HLO stays small; per-token-per-layer work is batch-linear
+    # (attention's S² term is preserved — seq_len untouched), so the scale-back
+    # factor is exact.
+    if depth_correct:
+        try:
+            import dataclasses as dc
+
+            cfg1, cfg2, n_full, tail_frac = _depth_variants(cfg)
+            batch_shards = 32 if multi_pod else 16
+            gb_probe = min(shape.global_batch, batch_shards)
+            if shape.global_batch % gb_probe:
+                gb_probe = shape.global_batch
+            probe_shape = dc.replace(shape, global_batch=gb_probe)
+            scale = shape.global_batch / gb_probe
+            # SSM compute is sequence-LINEAR (independent chunks) — probe at a
+            # shorter sequence too, else the unrolled inter-chunk scan
+            # (S/ssm_chunk steps) blows up the probe compile.
+            if cfg.family == "ssm" and shape.kind != "decode" and shape.seq_len > 4096:
+                seq_probe = 4096
+                probe_shape = dc.replace(probe_shape, seq_len=seq_probe)
+                scale *= shape.seq_len / seq_probe
+            if n_full > 1 or tail_frac:
+                costs = []
+                for c in (cfg1, cfg2):
+                    lw, *_ = _build_lowered(c, probe_shape, mesh, policy,
+                                            seq_parallel, accum_steps,
+                                            serve_sharding, serve_dtype)
+                    costs.append(_cost_analysis(lw.compile()))
+                corrected = {}
+                for k in ("flops", "bytes accessed"):
+                    if k in costs[0] and k in costs[1]:
+                        corrected[k] = scale * _extrapolate(
+                            costs[0][k], costs[1][k], n_full, tail_frac
+                        )
+                rec["cost_analysis_depth_corrected"] = corrected
+                rec["depth_correction"] = {
+                    "n_full": n_full, "tail_frac": tail_frac,
+                    "depth1": cfg1.n_layers, "depth2": cfg2.n_layers,
+                    "probe_batch": gb_probe, "batch_scale": scale,
+                    "cost_d1": {k: costs[0].get(k) for k in ("flops", "bytes accessed")},
+                    "cost_d2": {k: costs[1].get(k) for k in ("flops", "bytes accessed")},
+                }
+        except Exception as e:
+            rec["depth_correction"] = {"error": f"{type(e).__name__}: {e}"}
+    return rec
+
+
+def _sharded_state_bytes_pair(trees, shardings) -> int:
+    total = 0
+    for t, s in zip(trees, shardings):
+        total += _sharded_state_bytes(t, s, None)
+    return total
+
+
+def _serve_abstracts(cfg, policy, batch, cache_len, serve_dtype="float32"):
+    from repro.train.steps import serve_params_abstract
+
+    params_abs = serve_params_abstract(cfg, policy, serve_dtype)
+    mem_len = cfg.encoder_seq if cfg.family == "encdec" else (
+        cfg.n_image_tokens if cfg.family == "vlm" else 0
+    )
+    cache_abs = jax.eval_shape(
+        lambda: M.init_cache(cfg, batch, cache_len, policy, mem_len=mem_len)
+    )
+    mem_abs = (
+        jax.ShapeDtypeStruct((batch, mem_len, cfg.d_model), jnp.float32)
+        if mem_len else None
+    )
+    return params_abs, cache_abs, mem_abs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=[s.name for s in ALL_SHAPES])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--policy", default="fp", choices=sorted(POLICIES))
+    ap.add_argument("--no-seq-parallel", action="store_true")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--serve-sharding", default="train", choices=["train", "serve"])
+    ap.add_argument("--serve-dtype", default="float32", choices=["float32", "bfloat16"])
+    ap.add_argument("--ssm-chunk", type=int, default=0)
+    ap.add_argument("--moe-group", type=int, default=0)
+    ap.add_argument("--tag-suffix", default="")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    cells = []
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = [s.name for s in ALL_SHAPES] if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if (args.all or args.both_meshes) else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape, mp in cells:
+        tag = f"{arch}.{shape}.{'multi' if mp else 'single'}.{args.policy}" + args.tag_suffix
+        try:
+            rec = run_cell(arch, shape, mp, args.policy,
+                           seq_parallel=not args.no_seq_parallel,
+                           accum_steps=args.accum,
+                           serve_sharding=args.serve_sharding,
+                           serve_dtype=args.serve_dtype,
+                           ssm_chunk=args.ssm_chunk,
+                           moe_group=args.moe_group)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if mp else "16x16", "policy": args.policy,
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            failures += 1
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[dryrun] {tag}: {rec['status']}"
+              + (f" ({rec.get('error','')[:160]})" if rec["status"] == "error" else ""))
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run must set
+XLA_FLAGS before the first jax call, and tests must keep their 1-device view.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16×16 = 256 chips (data, model).
+    Multi-pod: 2×16×16 = 512 chips (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests/examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))

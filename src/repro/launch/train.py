@@ -1,0 +1,70 @@
+"""Training launcher: ``python -m repro.launch.train --arch starcoder2_3b --smoke``.
+
+On this CPU container, use ``--smoke`` (reduced config) with a small mesh.
+On real hardware the same entry point takes the full config and the
+production mesh (``--mesh 16x16``), with checkpoint/restore + preemption
+handling wired through repro.train.loop.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs import get_config, get_smoke_config
+from repro.data import SyntheticStream
+from repro.launch.mesh import make_production_mesh
+from repro.optim import IHTConfig, adamw, cosine_schedule
+from repro.quant.policy import QuantPolicy
+from repro.train import LoopConfig, init_state, train_loop
+from repro.train.steps import build_sharded_train_step, state_shardings
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-bits", type=int, default=0,
+                    help="quantized gradient compression (paper's Q on comms)")
+    ap.add_argument("--iht-sparsity", type=float, default=0.0,
+                    help="H_s weight projection (paper's operator as trainer)")
+    ap.add_argument("--mesh", default="1x1", help="data x model, e.g. 2x4")
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    dm, tm = (int(v) for v in args.mesh.split("x"))
+    n_needed = dm * tm
+    devs = np.array(jax.devices()[:n_needed]).reshape(dm, tm)
+    mesh = Mesh(devs, ("data", "model"))
+
+    policy = QuantPolicy(grad_bits=args.grad_bits or None)
+    iht = IHTConfig(sparsity=args.iht_sparsity) if args.iht_sparsity > 0 else None
+    opt = adamw(cosine_schedule(args.lr, warmup=20, total=args.steps))
+    step, st_sh = build_sharded_train_step(cfg, mesh, opt, args.batch,
+                                           policy=policy, iht=iht)
+    state = init_state(cfg, opt, jax.random.PRNGKey(0))
+    state = jax.device_put(state, st_sh)
+    stream = SyntheticStream(0, args.batch, args.seq, cfg.vocab_size, mesh=mesh)
+
+    def stepper(s, b):
+        b = dict(b)
+        b.setdefault("memory", None)
+        return step(s, b)
+
+    loop_cfg = LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                          ckpt_every=args.ckpt_every)
+    final = train_loop(stepper, state, stream, loop_cfg, state_shardings=st_sh)
+    print(f"[train] done at step {int(final.step)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Composable model zoo: dense GQA / MoE / SSM (Mamba-2 SSD) / hybrid
+(RG-LRU + local attn) / enc-dec (Whisper) / VLM (cross-attn image layers)."""
+from repro.models.config import ModelConfig
+from repro.models.model import (
+    decode_step,
+    encode,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)
+from repro.models.quantized import QWeight, QWeightStack, param_bytes, quantize_params
+
+__all__ = [
+    "ModelConfig",
+    "decode_step",
+    "encode",
+    "forward",
+    "init_cache",
+    "init_params",
+    "loss_fn",
+    "prefill",
+    "QWeight",
+    "QWeightStack",
+    "param_bytes",
+    "quantize_params",
+]

@@ -1,0 +1,418 @@
+"""Core neural layers (functional, framework-free): norms, RoPE, dense/GQA
+attention with chunked online-softmax (32k-safe), MLP variants, KV caches
+(float or int8-quantized — the paper's Q applied to the "observations").
+
+Parameters are plain nested dicts of jax Arrays; initialization is explicit.
+Sharding is attached later by path-based rules (repro.parallel.sharding), so
+layer code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.formats import BY_BITS
+
+# ---------------------------------------------------------------------------
+# init helpers
+
+
+def dense_init(key, in_dim: int, out_dim: int, bias: bool = False, scale: float = 0.02):
+    p = {"w": (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), jnp.float32)
+    return p
+
+
+def norm_init(d: int, norm_type: str):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# apply helpers
+
+
+def dense(p, x, dtype=None):
+    from repro.models.quantized import materialize
+
+    y = x @ materialize(p["w"], dtype or x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def apply_norm(p, x, norm_type: str, eps: float):
+    xf = x.astype(jnp.float32)
+    if norm_type == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freq        # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10_000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def sinusoidal_at(position: jax.Array, d: int) -> jax.Array:
+    """Sinusoidal embedding for one (traced) position — O(d), table-free."""
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = position.astype(jnp.float32) / (10_000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention (chunked online-softmax; pure XLA — Pallas flashattn is the TPU path)
+
+
+import functools
+
+
+def _pick_chunk(s: int, chunk: int) -> int:
+    """Largest divisor of s that is <= chunk (handles non-power-of-two seqs,
+    e.g. Whisper's 1500-frame encoder memory)."""
+    if s <= chunk:
+        return s
+    for c in range(chunk, 0, -1):
+        if s % c == 0:
+            return c
+    return s
+
+
+def _attn_mask(q_pos, k_pos, causal, window):
+    mask = jnp.ones((q_pos.shape[0], q_pos.shape[1], k_pos.shape[0]), bool)
+    if causal:
+        mask &= q_pos[:, :, None] >= k_pos[None, None, :]
+    if window is not None:
+        mask &= q_pos[:, :, None] - k_pos[None, None, :] < window
+    return mask
+
+
+def _flash_fwd_scan(qf, kf, vf, q_pos, k_pos, scale, causal, window, unroll):
+    b, h, nq, cq, d = qf.shape
+    nk = kf.shape[2]
+
+    def kv_step(carry, j):
+        m_run, l_run, acc = carry
+        kj = jax.lax.dynamic_index_in_dim(kf, j, axis=2, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vf, j, axis=2, keepdims=False)
+        s = jnp.einsum("bhncd,bhkd->bhnck", qf, kj) * scale
+        kp = jax.lax.dynamic_index_in_dim(k_pos, j, axis=0, keepdims=False)
+        s = jnp.where(_attn_mask(q_pos, kp, causal, window)[None, None], s, -1e30)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_run - m_new)
+        l_new = alpha * l_run + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = alpha * acc + jnp.einsum("bhnck,bhkd->bhncd", p, vj)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, nq, cq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, h, nq, cq, 1), jnp.float32)
+    a0 = jnp.zeros((b, h, nq, cq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk),
+                                  unroll=nk if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)
+    lse = m[..., 0] + jnp.log(jnp.maximum(l[..., 0], 1e-30))   # (b,h,nq,cq)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_core(qf, kf, vf, scale, causal, window, q_offset, unroll):
+    """Online-softmax attention over chunk grids with a flash-style backward:
+    only (out, logsumexp) are saved — O(S·d) residuals instead of the O(S²/ck)
+    scan carries a naive autodiff would store. This is what makes the 4k-train
+    and 32k-prefill cells fit HBM (see EXPERIMENTS.md §Perf)."""
+    b, h, nq, cq, d = qf.shape
+    sq = nq * cq
+    sk = kf.shape[2] * kf.shape[3]
+    q_pos = q_offset + jnp.arange(sq).reshape(nq, cq)
+    k_pos = jnp.arange(sk).reshape(kf.shape[2], kf.shape[3])
+    out, _ = _flash_fwd_scan(qf, kf, vf, q_pos, k_pos, scale, causal, window, unroll)
+    return out
+
+
+def _flash_core_fwd(qf, kf, vf, scale, causal, window, q_offset, unroll):
+    b, h, nq, cq, d = qf.shape
+    sq = nq * cq
+    q_pos = q_offset + jnp.arange(sq).reshape(nq, cq)
+    k_pos = jnp.arange(kf.shape[2] * kf.shape[3]).reshape(kf.shape[2], kf.shape[3])
+    out, lse = _flash_fwd_scan(qf, kf, vf, q_pos, k_pos, scale, causal, window, unroll)
+    return out, (qf, kf, vf, out, lse)
+
+
+def _flash_core_bwd(scale, causal, window, q_offset, unroll, res, dout):
+    qf, kf, vf, out, lse = res
+    b, h, nq, cq, d = qf.shape
+    nk, ck = kf.shape[2], kf.shape[3]
+    sq = nq * cq
+    q_pos = q_offset + jnp.arange(sq).reshape(nq, cq)
+    k_pos = jnp.arange(nk * ck).reshape(nk, ck)
+    delta = jnp.sum(dout * out, axis=-1, keepdims=True)        # (b,h,nq,cq,1)
+
+    def kv_step(dq, j):
+        kj = jax.lax.dynamic_index_in_dim(kf, j, axis=2, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vf, j, axis=2, keepdims=False)
+        kp = jax.lax.dynamic_index_in_dim(k_pos, j, axis=0, keepdims=False)
+        s = jnp.einsum("bhncd,bhkd->bhnck", qf, kj) * scale
+        s = jnp.where(_attn_mask(q_pos, kp, causal, window)[None, None], s, -1e30)
+        p = jnp.exp(s - lse[..., None])                        # (b,h,nq,cq,ck)
+        dv_j = jnp.einsum("bhnck,bhncd->bhkd", p, dout)
+        dp = jnp.einsum("bhncd,bhkd->bhnck", dout, vj)
+        ds = p * (dp - delta) * scale
+        dq = dq + jnp.einsum("bhnck,bhkd->bhncd", ds, kj)
+        dk_j = jnp.einsum("bhnck,bhncd->bhkd", ds, qf)
+        return dq, (dk_j, dv_j)
+
+    dq0 = jnp.zeros_like(qf)
+    dq, (dk, dv) = jax.lax.scan(kv_step, dq0, jnp.arange(nk),
+                                unroll=nk if unroll else 1)
+    dk = jnp.moveaxis(dk, 0, 2)                                 # (b,h,nk,ck,d)
+    dv = jnp.moveaxis(dv, 0, 2)
+    return dq, dk, dv
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def chunked_attention(
+    q: jax.Array,                # (B, Hq, Sq, D)
+    k: jax.Array,                # (B, Hkv, Sk, D)
+    v: jax.Array,                # (B, Hkv, Sk, D)
+    *,
+    causal: bool,
+    chunk: int = 1024,
+    window: Optional[int] = None,   # sliding-window (local) attention
+    q_offset: int = 0,              # global position of q[0] (cache decode/prefill)
+    unroll: bool = False,
+) -> jax.Array:
+    """Memory-efficient attention: O(Sq·chunk) live scores, flash-style custom
+    VJP (O(S·d) residuals). Masked chunk pairs are computed-and-discarded (XLA
+    has no dynamic skip; the Pallas kernel does skip them on TPU)."""
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    cq = _pick_chunk(sq, chunk)
+    ck = _pick_chunk(sk, chunk)
+    nq, nk = sq // cq, sk // ck
+
+    qf = q.astype(jnp.float32).reshape(b, hq, nq, cq, d)
+    kf = k.astype(jnp.float32).reshape(b, hkv, nk, ck, d)
+    vf = v.astype(jnp.float32).reshape(b, hkv, nk, ck, d)
+    if rep > 1:
+        kf = jnp.repeat(kf, rep, axis=1)
+        vf = jnp.repeat(vf, rep, axis=1)
+
+    out = _flash_core(qf, kf, vf, scale, causal, window, q_offset, unroll)
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,               # (B, Hq, 1, D)
+    k: jax.Array,               # (B, Hkv, S, D)
+    v: jax.Array,
+    *,
+    length: jax.Array,          # valid cache length (scalar int) — masks the tail
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Grouped-GQA decode attention: q is reshaped to (B, Hkv, rep, D) and
+    contracted against the UNREPEATED cache. Never materializes repeated K/V —
+    critical under SPMD: a jnp.repeat over the head dim forces the partitioner
+    to re-align (all-gather) the entire 32k cache every token (§Perf H1)."""
+    b, hq, _, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    qg = q[:, :, 0, :].reshape(b, hkv, rep, d)
+    # keep K/V in cache dtype; accumulate in f32 via preferred_element_type —
+    # an explicit .astype(f32) on the cache gets HOISTED out of the layer scan
+    # by XLA into a full-cache f32 materialization + reshard (§Perf H2).
+    logits = jnp.einsum("bhrd,bhkd->bhrk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(s)
+    mask = pos[None, None, None, :] < length
+    if window is not None:
+        mask &= pos[None, None, None, :] >= length - window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhrk,bhkd->bhrd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, hq, 1, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (float or int8 codes — the paper's Q(y) analog)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array                  # (B, Hkv, S, D) dtype or int8 codes
+    v: jax.Array
+    k_scale: Optional[jax.Array]  # (B, Hkv, S, 1) f32 when quantized
+    v_scale: Optional[jax.Array]
+    length: jax.Array             # scalar int32: tokens filled
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
+
+def init_kv_cache(b: int, hkv: int, s: int, d: int, dtype, kv_bits: Optional[int]) -> KVCache:
+    if kv_bits:
+        return KVCache(
+            k=jnp.zeros((b, hkv, s, d), jnp.int8),
+            v=jnp.zeros((b, hkv, s, d), jnp.int8),
+            k_scale=jnp.ones((b, hkv, s, 1), jnp.float32),
+            v_scale=jnp.ones((b, hkv, s, 1), jnp.float32),
+            length=jnp.zeros((), jnp.int32),
+        )
+    return KVCache(
+        k=jnp.zeros((b, hkv, s, d), dtype),
+        v=jnp.zeros((b, hkv, s, d), dtype),
+        k_scale=None,
+        v_scale=None,
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def _quantize_kv(x: jax.Array, bits: int):
+    """Per-(token, head) nearest-rounding quantization. x: (B, H, T, D)."""
+    kk = BY_BITS[bits].half_steps
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-6)
+    codes = jnp.clip(jnp.round(x / scale * kk), -kk, kk).astype(jnp.int8)
+    return codes, scale.astype(jnp.float32)
+
+
+def _dequantize_kv(codes: jax.Array, scale: jax.Array, bits: int, dtype):
+    kk = BY_BITS[bits].half_steps
+    return (codes.astype(jnp.float32) * (scale / kk)).astype(dtype)
+
+
+def cache_update(
+    cache: KVCache, k_new: jax.Array, v_new: jax.Array, kv_bits: Optional[int]
+) -> KVCache:
+    """Append T new tokens at cache.length. k_new: (B, Hkv, T, D)."""
+    idx = cache.length
+    if kv_bits:
+        kc, ks = _quantize_kv(k_new.astype(jnp.float32), kv_bits)
+        vc, vs = _quantize_kv(v_new.astype(jnp.float32), kv_bits)
+        return KVCache(
+            k=jax.lax.dynamic_update_slice_in_dim(cache.k, kc, idx, axis=2),
+            v=jax.lax.dynamic_update_slice_in_dim(cache.v, vc, idx, axis=2),
+            k_scale=jax.lax.dynamic_update_slice_in_dim(cache.k_scale, ks, idx, axis=2),
+            v_scale=jax.lax.dynamic_update_slice_in_dim(cache.v_scale, vs, idx, axis=2),
+            length=cache.length + k_new.shape[2],
+        )
+    return KVCache(
+        k=jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), idx, axis=2),
+        v=jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), idx, axis=2),
+        k_scale=None,
+        v_scale=None,
+        length=cache.length + k_new.shape[2],
+    )
+
+
+def cache_update_window(
+    cache: KVCache, k_new: jax.Array, v_new: jax.Array, window: int,
+    kv_bits: Optional[int],
+) -> KVCache:
+    """Sliding-window (ring-semantics) cache of fixed size ``window``.
+
+    Slots hold the last min(length, window) tokens in chronological order
+    (RoPE is already applied at absolute positions, so order is all we need).
+    Prefill (T >= 1): keeps the last ``window`` of the new tokens.
+    Decode (T == 1): shift-left-by-one when full, then write at the end.
+    """
+    t = k_new.shape[2]
+    if t >= window:
+        # prefill: the cache is exactly the last `window` tokens
+        kw, vw = k_new[:, :, -window:], v_new[:, :, -window:]
+        fresh = KVCache(
+            k=jnp.zeros_like(cache.k), v=jnp.zeros_like(cache.v),
+            k_scale=cache.k_scale, v_scale=cache.v_scale,
+            length=jnp.zeros((), jnp.int32),
+        )
+        out = cache_update(fresh, kw, vw, kv_bits)
+        return out._replace(length=cache.length + t)
+    if t != 1:
+        # prefill shorter than the window: plain append (cache starts empty)
+        return cache_update(cache, k_new, v_new, kv_bits)
+    full = cache.length >= window
+
+    def shift(a):
+        return jnp.where(full, jnp.roll(a, -1, axis=2), a)
+
+    idx = jnp.minimum(cache.length, window - 1)
+    shifted = KVCache(
+        k=shift(cache.k), v=shift(cache.v),
+        k_scale=shift(cache.k_scale) if cache.k_scale is not None else None,
+        v_scale=shift(cache.v_scale) if cache.v_scale is not None else None,
+        length=idx,
+    )
+    out = cache_update(shifted, k_new, v_new, kv_bits)
+    return out._replace(length=cache.length + 1)
+
+
+def window_valid_length(cache: KVCache, window: int) -> jax.Array:
+    return jnp.minimum(cache.length, window)
+
+
+def cache_kv(cache: KVCache, kv_bits: Optional[int], dtype):
+    if kv_bits:
+        return (
+            _dequantize_kv(cache.k, cache.k_scale, kv_bits, dtype),
+            _dequantize_kv(cache.v, cache.v_scale, kv_bits, dtype),
+        )
+    return cache.k, cache.v
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+
+
+def mlp_init(key, d: int, ff: int, mlp_type: str):
+    ks = jax.random.split(key, 3)
+    if mlp_type == "swiglu":
+        return {
+            "wi_gate": dense_init(ks[0], d, ff),
+            "wi_up": dense_init(ks[1], d, ff),
+            "wo": dense_init(ks[2], ff, d),
+        }
+    return {"wi": dense_init(ks[0], d, ff), "wo": dense_init(ks[1], ff, d)}
+
+
+def mlp_apply(p, x, mlp_type: str):
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(dense(p["wi_gate"], x, x.dtype)) * dense(p["wi_up"], x, x.dtype)
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(dense(p["wi"], x, x.dtype))
+    elif mlp_type == "relu2":
+        h = jnp.square(jax.nn.relu(dense(p["wi"], x, x.dtype)))
+    else:
+        raise ValueError(mlp_type)
+    return dense(p["wo"], h, x.dtype)

@@ -1,0 +1,623 @@
+"""Model assembly: decoder LMs (dense/MoE/SSM/hybrid/VLM) and enc-dec (Whisper).
+
+Layers are stacked *by period slot* and iterated with ``lax.scan`` so the HLO
+stays O(period) regardless of depth (94-layer MoE compiles as one scan):
+
+  pattern  = cfg.pattern_for_layers()          e.g. ('rec','rec','attn')×8 + tail
+  periods  = full repetitions  → scanned; tail = remainder → unrolled.
+
+Three execution paths share the block code:
+  * forward  — teacher-forced logits over (B, S) tokens (training),
+  * prefill  — forward + KV/state cache construction (serving, long prompts),
+  * decode   — one token against the cache (the bandwidth-bound loop the
+               paper's technique accelerates via weight/KV quantization).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import rglru, ssm
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    KVCache,
+    apply_norm,
+    cache_kv,
+    cache_update,
+    cache_update_window,
+    chunked_attention,
+    decode_attention,
+    dense,
+    dense_init,
+    init_kv_cache,
+    mlp_init,
+    mlp_apply,
+    norm_init,
+    rope,
+    sinusoidal_at,
+    sinusoidal_positions,
+    window_valid_length,
+)
+from repro.models.moe import moe_apply, moe_init
+from repro.quant.policy import QuantPolicy
+
+# ---------------------------------------------------------------------------
+# init
+
+
+def _attn_init(key, cfg: ModelConfig, cross: bool = False):
+    ks = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.head_dim_
+    hq, hkv = cfg.padded_heads, cfg.padded_kv_heads
+    return {
+        "wq": dense_init(ks[0], d, hq * hd, bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], d, hkv * hd, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], d, hkv * hd, bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], hq * hd, d),
+    }
+
+
+def _ffn_init(key, cfg: ModelConfig):
+    if cfg.n_experts:
+        return moe_init(key, cfg.d_model, cfg.d_ff, cfg.n_experts)
+    return mlp_init(key, cfg.d_model, cfg.d_ff, cfg.mlp_type)
+
+
+def _block_init(key, cfg: ModelConfig, kind: str):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p: dict[str, Any] = {"ln1": norm_init(d, cfg.norm_type)}
+    if kind == "attn":
+        p["attn"] = _attn_init(ks[0], cfg)
+        p["ln2"] = norm_init(d, cfg.norm_type)
+        p["ffn"] = _ffn_init(ks[1], cfg)
+    elif kind == "xattn":
+        p["attn"] = _attn_init(ks[0], cfg)
+        p["ln_x"] = norm_init(d, cfg.norm_type)
+        p["xattn"] = _attn_init(ks[2], cfg, cross=True)
+        p["ln2"] = norm_init(d, cfg.norm_type)
+        p["ffn"] = _ffn_init(ks[1], cfg)
+    elif kind == "rec":
+        p["rec"] = rglru.rglru_init(ks[0], d, cfg.rnn_width_, cfg.ssm_conv)
+        p["ln2"] = norm_init(d, cfg.norm_type)
+        p["ffn"] = _ffn_init(ks[1], cfg)
+    elif kind == "ssm":
+        p["ssm"] = ssm.ssd_init(
+            ks[0], d, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv
+        )
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _period_info(cfg: ModelConfig):
+    pattern = cfg.pattern_for_layers()
+    if cfg.family == "hybrid" and cfg.block_pattern:
+        period = len(cfg.block_pattern)
+    elif cfg.family == "vlm" and cfg.cross_attn_every:
+        period = cfg.cross_attn_every
+    else:
+        period = 1
+    n_full = cfg.n_layers // period
+    slots = pattern[:period]
+    tail = pattern[n_full * period :]
+    return slots, n_full, tail
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    slots, n_full, tail = _period_info(cfg)
+    keys = jax.random.split(key, 8)
+    d, v = cfg.d_model, cfg.padded_vocab
+
+    params: dict[str, Any] = {
+        "embed": {"w": jax.random.normal(keys[0], (v, d), jnp.float32) * 0.02},
+        "final_norm": norm_init(d, cfg.norm_type),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = {"w": jax.random.normal(keys[1], (v, d), jnp.float32) * 0.02}
+
+    def stack_init(base_key, kind, n):
+        ks = jax.random.split(base_key, n)
+        return jax.vmap(lambda k: _block_init(k, cfg, kind))(ks)
+
+    params["slots"] = {
+        f"slot{j}": stack_init(jax.random.fold_in(keys[2], j), kind, n_full)
+        for j, kind in enumerate(slots)
+    }
+    params["tail"] = [
+        _block_init(jax.random.fold_in(keys[3], i), cfg, kind)
+        for i, kind in enumerate(tail)
+    ]
+    if cfg.n_encoder_layers:
+        ks = jax.random.split(keys[4], cfg.n_encoder_layers)
+        params["encoder"] = {
+            "blocks": jax.vmap(lambda k: _block_init(k, cfg, "attn"))(ks),
+            "final_norm": norm_init(d, cfg.norm_type),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block application
+
+
+@dataclasses.dataclass
+class Ctx:
+    cfg: ModelConfig
+    positions: jax.Array                    # (B, S) int32
+    policy: QuantPolicy
+    memory: Optional[jax.Array] = None      # encoder output / image embeds (B, T, d)
+    causal: bool = True
+    window: Optional[int] = None
+    # activation-sharding hook (sequence parallelism): applied to the residual
+    # stream at period boundaries — these are exactly the tensors remat stores,
+    # so constraining them shards the activation footprint across TP.
+    constrain: Optional[Any] = None
+    # KV-cache sharding pin (decode): without it the SPMD partitioner may pick
+    # a head-sharded internal layout for the scan-carried cache and pay a
+    # full-cache all-gather at the loop boundary every token (§Perf H2-H4).
+    constrain_kv: Optional[Any] = None
+
+
+def _maybe_constrain(ctx, x):
+    return ctx.constrain(x) if ctx.constrain is not None else x
+
+
+def _qkv(p, x, cfg, positions, n_heads):
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    q = dense(p["wq"], x).reshape(b, s, n_heads, hd)
+    k = dense(p["wk"], x).reshape(b, s, cfg.padded_kv_heads, hd)
+    v = dense(p["wv"], x).reshape(b, s, cfg.padded_kv_heads, hd)
+    if positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    # (B, H, S, D)
+    return q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+
+
+def _self_attention(p, x, ctx: Ctx):
+    cfg = ctx.cfg
+    q, k, v = _qkv(p, x, cfg, ctx.positions if cfg.family != "encdec" else None,
+                   cfg.padded_heads)
+    out = chunked_attention(
+        q, k, v, causal=ctx.causal, chunk=cfg.attn_chunk, window=ctx.window,
+        unroll=cfg.scan_unroll,
+    )
+    b, h, s, hd = out.shape
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    return dense(p["wo"], out)
+
+
+def _cross_attention(p, x, ctx: Ctx):
+    cfg = ctx.cfg
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    q = dense(p["wq"], x).reshape(b, s, cfg.padded_heads, hd).transpose(0, 2, 1, 3)
+    mem = ctx.memory
+    k = dense(p["wk"], mem).reshape(b, -1, cfg.padded_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = dense(p["wv"], mem).reshape(b, -1, cfg.padded_kv_heads, hd).transpose(0, 2, 1, 3)
+    out = chunked_attention(q, k, v, causal=False, chunk=cfg.attn_chunk,
+                            unroll=cfg.scan_unroll)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.padded_heads * hd)
+    return dense(p["wo"], out)
+
+
+def _ffn_apply(p, x, cfg: ModelConfig):
+    if cfg.n_experts:
+        y, aux = moe_apply(
+            p, x, top_k=cfg.experts_per_token,
+            capacity_factor=cfg.moe_capacity_factor,
+            group_size=cfg.moe_group_size,
+            unroll=cfg.scan_unroll,
+        )
+        return y, aux
+    return mlp_apply(p, x, cfg.mlp_type), {}
+
+
+def apply_block_fwd(kind: str, p, x, ctx: Ctx):
+    """Full-sequence forward (train / encoder). Returns (x, aux)."""
+    cfg = ctx.cfg
+    aux = {}
+    h = apply_norm(p["ln1"], x, cfg.norm_type, cfg.norm_eps)
+    if kind in ("attn", "xattn"):
+        x = x + _self_attention(p["attn"], h, ctx)
+        if kind == "xattn":
+            hx = apply_norm(p["ln_x"], x, cfg.norm_type, cfg.norm_eps)
+            x = x + _cross_attention(p["xattn"], hx, ctx)
+    elif kind == "rec":
+        x = x + rglru.rglru_apply(p["rec"], h, cfg.rnn_width_)
+    elif kind == "ssm":
+        return x + ssm.ssd_apply(p["ssm"], h, cfg), aux
+    h2 = apply_norm(p["ln2"], x, cfg.norm_type, cfg.norm_eps)
+    y, aux = _ffn_apply(p["ffn"], h2, cfg)
+    return x + y, aux
+
+
+def _empty_cache_entry(kind: str, cfg: ModelConfig, b: int, cache_len: int, dtype,
+                       kv_bits, mem_len: int = 0):
+    hd = cfg.head_dim_
+    if kind == "attn":
+        if cfg.family == "hybrid" and cfg.local_window:
+            cache_len = min(cache_len, cfg.local_window)
+        return init_kv_cache(b, cfg.padded_kv_heads, cache_len, hd, dtype, kv_bits)
+    if kind == "xattn":
+        return {
+            "self": init_kv_cache(b, cfg.padded_kv_heads, cache_len, hd, dtype, kv_bits),
+            "ck": jnp.zeros((b, cfg.padded_kv_heads, mem_len, hd), dtype),
+            "cv": jnp.zeros((b, cfg.padded_kv_heads, mem_len, hd), dtype),
+        }
+    if kind == "rec":
+        return rglru.init_rglru_state(b, cfg.rnn_width_, cfg.ssm_conv)
+    if kind == "ssm":
+        return ssm.init_ssm_state(b, cfg)
+    raise ValueError(kind)
+
+
+def apply_block_prefill(kind: str, p, x, cache_entry, ctx: Ctx):
+    """Forward + cache fill. Returns (x, cache_entry)."""
+    cfg = ctx.cfg
+    if kind in ("attn", "xattn"):
+        h = apply_norm(p["ln1"], x, cfg.norm_type, cfg.norm_eps)
+        q, k, v = _qkv(p["attn"], h, cfg, ctx.positions, cfg.padded_heads)
+        out = chunked_attention(q, k, v, causal=True, chunk=cfg.attn_chunk,
+                                window=ctx.window, unroll=cfg.scan_unroll)
+        b, hh, s, hd = out.shape
+        x = x + dense(p["attn"]["wo"], out.transpose(0, 2, 1, 3).reshape(b, s, hh * hd))
+        if kind == "xattn":
+            hx = apply_norm(p["ln_x"], x, cfg.norm_type, cfg.norm_eps)
+            x = x + _cross_attention(p["xattn"], hx, ctx)
+            mem = ctx.memory
+            ck = dense(p["xattn"]["wk"], mem).reshape(b, -1, cfg.padded_kv_heads, hd).transpose(0, 2, 1, 3)
+            cv = dense(p["xattn"]["wv"], mem).reshape(b, -1, cfg.padded_kv_heads, hd).transpose(0, 2, 1, 3)
+            sc = cache_update(cache_entry["self"], k, v, ctx.policy.kv_bits)
+            cache_entry = {"self": sc, "ck": ck.astype(x.dtype), "cv": cv.astype(x.dtype)}
+        elif ctx.window is not None:
+            cache_entry = cache_update_window(cache_entry, k, v, ctx.window,
+                                              ctx.policy.kv_bits)
+        else:
+            cache_entry = cache_update(cache_entry, k, v, ctx.policy.kv_bits)
+        h2 = apply_norm(p["ln2"], x, cfg.norm_type, cfg.norm_eps)
+        y, _ = _ffn_apply(p["ffn"], h2, cfg)
+        return x + y, cache_entry
+    if kind == "rec":
+        # run the sequence, then reconstruct the final recurrent state
+        h = apply_norm(p["ln1"], x, cfg.norm_type, cfg.norm_eps)
+        y, new_state = _rglru_prefill(p["rec"], h, cfg, cache_entry)
+        x = x + y
+        h2 = apply_norm(p["ln2"], x, cfg.norm_type, cfg.norm_eps)
+        yf, _ = _ffn_apply(p["ffn"], h2, cfg)
+        return x + yf, new_state
+    if kind == "ssm":
+        h = apply_norm(p["ln1"], x, cfg.norm_type, cfg.norm_eps)
+        y, new_state = _ssd_prefill(p["ssm"], h, cfg, cache_entry)
+        return x + y, new_state
+    raise ValueError(kind)
+
+
+def _rglru_prefill(p, u, cfg, state: rglru.RGLRUState):
+    from repro.models.quantized import materialize as _mat
+
+    x = u @ _mat(p["in_x"]["w"], u.dtype)
+    gate = u @ _mat(p["in_gate"]["w"], u.dtype)
+    xc, conv_new = rglru._conv(p, x, state.conv)
+    a, b = rglru._gates(p, xc)
+
+    def combine(l, r):
+        return l[0] * r[0], r[0] * l[1] + r[1]
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = h.astype(u.dtype) * jax.nn.gelu(gate)
+    y = y @ _mat(p["out"]["w"], u.dtype)
+    return y, rglru.RGLRUState(conv=conv_new, h=h[:, -1])
+
+
+def _ssd_prefill(p, u, cfg, state: ssm.SSMState):
+    """Chunked SSD that also returns the final recurrent state."""
+    # reuse ssd_apply for outputs; recompute final state via one extra scan
+    y = ssm.ssd_apply(p, u, cfg)
+    # final state: run the decode recurrence over the last ssm_conv inputs is
+    # insufficient; instead compute exactly with the chunked state recursion.
+    final = _ssd_final_state(p, u, cfg)
+    # conv state: last (d_conv - 1) pre-conv channels
+    z, xr, bb, cc, dt = ssm._split_proj(p, u, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads)
+    xbc = jnp.concatenate([xr, bb, cc], axis=-1)
+    k = cfg.ssm_conv
+    conv_state = xbc[:, -(k - 1):, :].astype(jnp.float32) if k > 1 else state.conv
+    return y, ssm.SSMState(conv=conv_state, ssm=final)
+
+
+def _ssd_final_state(p, u, cfg):
+    b, s, _ = u.shape
+    h, hd, ds, ck = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, min(cfg.ssm_chunk, u.shape[1])
+    z, xr, bb, cc, dt = ssm._split_proj(p, u, cfg.d_inner, ds, h)
+    xbc = jnp.concatenate([xr, bb, cc], axis=-1)
+    xbc, _ = ssm._causal_conv(p, xbc)
+    xr, bb, cc = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + ds], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    da = (dt * a).reshape(b, s // ck, ck, h)
+    cum = jnp.cumsum(da, axis=2)
+    xh = xr.astype(jnp.float32).reshape(b, s // ck, ck, h, hd)
+    bh = bb.astype(jnp.float32).reshape(b, s // ck, ck, ds)
+    dth = dt.reshape(b, s // ck, ck, h)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)
+    states = jnp.einsum("bnsh,bnsh,bnshp,bnsd->bnhpd", decay_to_end, dth, xh, bh)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])
+
+    def step(carry, inp):
+        st_new, dec = inp
+        return carry * dec[:, :, None, None] + st_new, None
+
+    final, _ = jax.lax.scan(
+        step,
+        jnp.zeros((b, h, hd, ds), jnp.float32),
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    return final
+
+
+def apply_block_decode(kind: str, p, x, cache_entry, ctx: Ctx):
+    """One-token step against the cache. x: (B, 1, d)."""
+    cfg = ctx.cfg
+    h = apply_norm(p["ln1"], x, cfg.norm_type, cfg.norm_eps)
+    if kind in ("attn", "xattn"):
+        entry = cache_entry["self"] if kind == "xattn" else cache_entry
+        q, k_new, v_new = _qkv(p["attn"], h, cfg, ctx.positions, cfg.padded_heads)
+        if kind == "attn" and ctx.window is not None:
+            entry = cache_update_window(entry, k_new, v_new, ctx.window,
+                                        ctx.policy.kv_bits)
+            k_all, v_all = cache_kv(entry, ctx.policy.kv_bits, x.dtype)
+            out = decode_attention(
+                q, k_all, v_all, length=window_valid_length(entry, ctx.window)
+            )
+        else:
+            entry = cache_update(entry, k_new, v_new, ctx.policy.kv_bits)
+            if ctx.constrain_kv is not None:
+                entry = entry._replace(k=ctx.constrain_kv(entry.k),
+                                       v=ctx.constrain_kv(entry.v))
+            k_all, v_all = cache_kv(entry, ctx.policy.kv_bits, x.dtype)
+            out = decode_attention(q, k_all, v_all, length=entry.length)
+        b, hh, _, hd = out.shape
+        x = x + dense(p["attn"]["wo"], out.transpose(0, 2, 1, 3).reshape(b, 1, hh * hd))
+        if kind == "xattn":
+            hx = apply_norm(p["ln_x"], x, cfg.norm_type, cfg.norm_eps)
+            qx = dense(p["xattn"]["wq"], hx).reshape(b, 1, cfg.padded_heads, hd).transpose(0, 2, 1, 3)
+            ck, cv = cache_entry["ck"], cache_entry["cv"]
+            ox = decode_attention(qx, ck, cv, length=jnp.asarray(ck.shape[2]))
+            x = x + dense(p["xattn"]["wo"], ox.transpose(0, 2, 1, 3).reshape(b, 1, cfg.padded_heads * hd))
+            cache_entry = {"self": entry, "ck": ck, "cv": cv}
+        else:
+            cache_entry = entry
+        h2 = apply_norm(p["ln2"], x, cfg.norm_type, cfg.norm_eps)
+        y, _ = _ffn_apply(p["ffn"], h2, cfg)
+        return x + y, cache_entry
+    if kind == "rec":
+        y, new_state = rglru.rglru_decode_step(p["rec"], h, cache_entry, cfg.rnn_width_)
+        x = x + y
+        h2 = apply_norm(p["ln2"], x, cfg.norm_type, cfg.norm_eps)
+        yf, _ = _ffn_apply(p["ffn"], h2, cfg)
+        return x + yf, new_state
+    if kind == "ssm":
+        y, new_state = ssm.ssd_decode_step(p["ssm"], h, cache_entry, cfg)
+        return x + y, new_state
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# whole-model paths
+
+
+def _embed(cfg, params, tokens, dtype):
+    x = jnp.take(params["embed"]["w"], tokens, axis=0).astype(dtype)
+    return x
+
+
+def _unembed(cfg, params, x):
+    w = params["embed"]["w"] if cfg.tie_embeddings else params["unembed"]["w"]
+    from repro.models.quantized import materialize
+
+    wt = materialize(w, x.dtype)
+    if wt.shape[0] == cfg.padded_vocab:          # stored (V, d)
+        return x @ wt.T
+    return x @ wt
+
+
+def encode(cfg: ModelConfig, params, frames: jax.Array, policy: QuantPolicy):
+    """Whisper-style encoder over stub frame embeddings (B, T, d)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = frames.astype(dtype)
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(dtype)[None]
+    ctx = Ctx(cfg=cfg, positions=None, policy=policy, causal=False)
+
+    def body(x, p):
+        y, _ = apply_block_fwd("attn", p, x, ctx)
+        return y, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"],
+                        unroll=cfg.n_encoder_layers if cfg.scan_unroll else 1)
+    return apply_norm(params["encoder"]["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+
+
+def forward(
+    cfg: ModelConfig,
+    params,
+    tokens: jax.Array,
+    *,
+    policy: QuantPolicy = QuantPolicy(),
+    memory: Optional[jax.Array] = None,
+    constrain=None,
+):
+    """Teacher-forced logits (B, S, V). ``memory`` = encoder output (enc-dec)
+    or stub image embeddings (VLM)."""
+    dtype = jnp.dtype(cfg.dtype)
+    b, s = tokens.shape
+    slots, n_full, tail = _period_info(cfg)
+    x = _embed(cfg, params, tokens, dtype)
+    if cfg.family == "encdec":
+        x = x + sinusoidal_positions(s, cfg.d_model).astype(dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    window = cfg.local_window if cfg.family == "hybrid" else None
+    ctx = Ctx(cfg=cfg, positions=positions, policy=policy, memory=memory,
+              causal=True, window=window, constrain=constrain)
+    aux_acc = {"moe_load_loss": jnp.zeros((), jnp.float32)}
+    x = _maybe_constrain(ctx, x)
+
+    def period_body(carry, slot_params):
+        x, aux = carry
+        for j, kind in enumerate(slots):
+            x, a = apply_block_fwd(kind, slot_params[j], x, ctx)
+            if "moe_load_loss" in a:
+                aux = {"moe_load_loss": aux["moe_load_loss"] + a["moe_load_loss"]}
+        x = _maybe_constrain(ctx, x)
+        return (x, aux), None
+
+    body = jax.checkpoint(period_body) if cfg.remat else period_body
+    xs = tuple(params["slots"][f"slot{j}"] for j in range(len(slots)))
+    (x, aux_acc), _ = jax.lax.scan(body, (x, aux_acc), xs,
+                                   unroll=n_full if cfg.scan_unroll else 1)
+    for i, kind in enumerate(tail):
+        x, a = apply_block_fwd(kind, params["tail"][i], x, ctx)
+        if "moe_load_loss" in a:
+            aux_acc["moe_load_loss"] = aux_acc["moe_load_loss"] + a["moe_load_loss"]
+    x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    logits = _unembed(cfg, params, x)
+    return logits, aux_acc
+
+
+def loss_fn(cfg, params, batch, policy: QuantPolicy = QuantPolicy(), constrain=None):
+    """Mean next-token cross entropy. batch: tokens (B,S), labels (B,S) (-1=pad),
+    optional memory (enc-dec: stub frontend *frames*, encoded here; VLM: stub
+    patch embeddings, consumed directly by the cross-attn layers)."""
+    memory = batch.get("memory")
+    if cfg.family == "encdec" and memory is not None:
+        memory = encode(cfg, params, memory, policy)
+    logits, aux = forward(cfg, params, batch["tokens"], policy=policy,
+                          memory=memory, constrain=constrain)
+    labels = batch["labels"]
+    mask = labels >= 0
+    labels_safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels_safe[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    if cfg.n_experts:
+        loss = loss + 0.01 * aux["moe_load_loss"] / max(cfg.n_layers, 1)
+    return loss
+
+
+def init_cache(cfg: ModelConfig, b: int, cache_len: int,
+               policy: QuantPolicy = QuantPolicy(), mem_len: int = 0):
+    """Stacked cache pytree matching the slot structure."""
+    slots, n_full, tail = _period_info(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+
+    def stacked(kind):
+        one = _empty_cache_entry(kind, cfg, b, cache_len, dtype, policy.kv_bits, mem_len)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n_full,) + a.shape).copy(), one)
+
+    return {
+        "slots": {f"slot{j}": stacked(kind) for j, kind in enumerate(slots)},
+        "tail": [
+            _empty_cache_entry(kind, cfg, b, cache_len, dtype, policy.kv_bits, mem_len)
+            for kind in tail
+        ],
+    }
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache, *,
+            policy: QuantPolicy = QuantPolicy(), memory=None):
+    """Run the prompt, fill the cache. Returns (last-position logits, cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    b, s = tokens.shape
+    slots, n_full, tail = _period_info(cfg)
+    x = _embed(cfg, params, tokens, dtype)
+    if cfg.family == "encdec":
+        x = x + sinusoidal_positions(s, cfg.d_model).astype(dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    window = cfg.local_window if cfg.family == "hybrid" else None
+    ctx = Ctx(cfg=cfg, positions=positions, policy=policy, memory=memory,
+              causal=True, window=window)
+
+    def period_body(x, scanned):
+        slot_params, slot_caches = scanned
+        new_caches = []
+        for j, kind in enumerate(slots):
+            x, c = apply_block_prefill(kind, slot_params[j], x, slot_caches[j], ctx)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    xs = (
+        tuple(params["slots"][f"slot{j}"] for j in range(len(slots))),
+        tuple(cache["slots"][f"slot{j}"] for j in range(len(slots))),
+    )
+    x, new_slot_caches = jax.lax.scan(period_body, x, xs,
+                                      unroll=n_full if cfg.scan_unroll else 1)
+    new_cache = {
+        "slots": {f"slot{j}": new_slot_caches[j] for j in range(len(slots))},
+        "tail": [],
+    }
+    for i, kind in enumerate(tail):
+        x, c = apply_block_prefill(kind, params["tail"][i], x, cache["tail"][i], ctx)
+        new_cache["tail"].append(c)
+    x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    logits = _unembed(cfg, params, x[:, -1:, :])
+    return logits[:, 0], new_cache
+
+
+def decode_step(cfg: ModelConfig, params, token, cache, *,
+                policy: QuantPolicy = QuantPolicy(), position=None,
+                constrain_kv=None):
+    """One serving step. token: (B,) int32 → logits (B, V), updated cache."""
+    dtype = jnp.dtype(cfg.dtype)
+    b = token.shape[0]
+    slots, n_full, tail = _period_info(cfg)
+    x = _embed(cfg, params, token[:, None], dtype)
+    if position is None:
+        position = _cache_length(cfg, cache)
+    position = jnp.asarray(position, jnp.int32)
+    positions = jnp.broadcast_to(position.reshape(1, 1), (b, 1)).astype(jnp.int32)
+    if cfg.family == "encdec":
+        x = x + sinusoidal_at(position, cfg.d_model).astype(dtype)[None, None]
+    window = cfg.local_window if cfg.family == "hybrid" else None
+    ctx = Ctx(cfg=cfg, positions=positions, policy=policy, causal=True, window=window,
+              constrain_kv=constrain_kv)
+
+    def period_body(x, scanned):
+        slot_params, slot_caches = scanned
+        new_caches = []
+        for j, kind in enumerate(slots):
+            x, c = apply_block_decode(kind, slot_params[j], x, slot_caches[j], ctx)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    xs = (
+        tuple(params["slots"][f"slot{j}"] for j in range(len(slots))),
+        tuple(cache["slots"][f"slot{j}"] for j in range(len(slots))),
+    )
+    x, new_slot_caches = jax.lax.scan(period_body, x, xs,
+                                      unroll=n_full if cfg.scan_unroll else 1)
+    new_cache = {
+        "slots": {f"slot{j}": new_slot_caches[j] for j in range(len(slots))},
+        "tail": [],
+    }
+    for i, kind in enumerate(tail):
+        x, c = apply_block_decode(kind, params["tail"][i], x, cache["tail"][i], ctx)
+        new_cache["tail"].append(c)
+    x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    logits = _unembed(cfg, params, x)
+    return logits[:, 0], new_cache
+
+
+def _cache_length(cfg, cache):
+    """Current length from the first attention cache (or conv position proxy)."""
+    slots_dict = cache["slots"]
+    for v in slots_dict.values():
+        if isinstance(v, KVCache):
+            return v.length[0] if v.length.ndim else v.length
+        if isinstance(v, dict) and "self" in v:
+            return v["self"].length[0] if v["self"].length.ndim else v["self"].length
+    # attention-free: caller must pass position explicitly for RoPE-free stacks
+    return jnp.zeros((), jnp.int32)

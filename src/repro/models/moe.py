@@ -1,0 +1,107 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-factor dispatch einsums.
+
+Token-group formulation (Switch/Mesh-TF lineage, MaxText-style): tokens are
+processed in groups of ``group_size`` via ``lax.scan``; each group builds a
+(g, E, C) dispatch tensor with per-group capacity C = g·k/E·cf. This bounds
+live activation memory to O(g·k·cf·d) regardless of batch·seq, at the cost of
+re-streaming the expert weights once per group — the group size is therefore a
+first-order bandwidth/memory trade-off (exploited in EXPERIMENTS.md §Perf).
+
+Sharding: the expert dimension of the weights lives on the `model` mesh axis
+(expert parallelism); dispatch/combine einsums then induce all-to-all-style
+collectives under pjit.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.quantized import QWeight, materialize
+
+
+def moe_init(key, d: int, ff: int, n_experts: int):
+    ks = jax.random.split(key, 4)
+    scale = 0.02
+    return {
+        "router": dense_init(ks[0], d, n_experts),
+        "wi_gate": jax.random.normal(ks[1], (n_experts, d, ff), jnp.float32) * scale,
+        "wi_up": jax.random.normal(ks[2], (n_experts, d, ff), jnp.float32) * scale,
+        "wo": jax.random.normal(ks[3], (n_experts, ff, d), jnp.float32) * scale,
+    }
+
+
+def _group_moe(p, xg: jax.Array, *, top_k: int, cap: int, dtype):
+    """One token group. xg: (g, d) → (y (g, d), aux scalars)."""
+    g, d = xg.shape
+    rw = p["router"]["w"]
+    e = rw.packed.shape[-2] if isinstance(rw, QWeight) else rw.shape[1]
+    logits = xg.astype(jnp.float32) @ materialize(p["router"]["w"], jnp.float32)  # (g, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)                 # (g, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)             # (g, k, E)
+    flat = onehot.reshape(g * top_k, e)
+    pos = (jnp.cumsum(flat, axis=0) * flat - 1).reshape(g, top_k, e)  # slot index
+    within = (pos >= 0) & (pos < cap)
+
+    slot = jax.nn.one_hot(jnp.clip(pos, 0, cap - 1), cap, dtype=dtype)  # (g,k,E,C)
+    keep = (within[..., None].astype(dtype)) * onehot[..., None].astype(dtype)
+    disp = jnp.sum(slot * keep, axis=1)                                # (g, E, C)
+    combine = jnp.sum(slot * keep * gate_vals[:, :, None, None].astype(dtype), axis=1)
+
+    xe = jnp.einsum("td,tec->ecd", xg.astype(dtype), disp)            # (E, C, d)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, materialize(p["wi_gate"], dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, materialize(p["wi_up"], dtype))
+    ye = jnp.einsum("ecf,efd->ecd", h, materialize(p["wo"], dtype))   # (E, C, d)
+    y = jnp.einsum("ecd,tec->td", ye, combine)
+
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jnp.sum(onehot.astype(jnp.float32), axis=1), axis=0)
+    load_loss = e * jnp.sum(me * ce)
+    return y, load_loss
+
+
+def moe_apply(
+    p,
+    x: jax.Array,
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    group_size: int = 4096,
+    unroll: bool = False,
+):
+    """x: (B, S, d) → (B, S, d), aux dict. B·S is padded to a group multiple."""
+    b, s, d = x.shape
+    n_tok = b * s
+    rw = p["router"]["w"]
+    e = rw.packed.shape[-2] if isinstance(rw, QWeight) else rw.shape[1]
+    g = min(group_size, n_tok)
+    n_groups = -(-n_tok // g)
+    pad = n_groups * g - n_tok
+    xf = x.reshape(n_tok, d)
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    cap = max(1, int(g * top_k / e * capacity_factor))
+    xg = xf.reshape(n_groups, g, d)
+
+    if n_groups == 1:
+        y, load = _group_moe(p, xg[0], top_k=top_k, cap=cap, dtype=x.dtype)
+        ys = y[None]
+    else:
+        def step(_, xg_i):
+            y, load = _group_moe(p, xg_i, top_k=top_k, cap=cap, dtype=x.dtype)
+            return None, (y, load)
+
+        # remat per group: a group's dispatch/combine tensors are rebuilt in
+        # the backward instead of being stored for all n_groups at once —
+        # O(group) live memory instead of O(tokens) (EXPERIMENTS.md §Perf).
+        step = jax.checkpoint(step)
+        _, (ys, loads) = jax.lax.scan(step, None, xg,
+                                      unroll=n_groups if unroll else 1)
+        load = jnp.mean(loads)
+    out = ys.reshape(n_groups * g, d)[:n_tok].reshape(b, s, d)
+    return out, {"moe_load_loss": load}

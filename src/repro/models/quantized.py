@@ -1,0 +1,140 @@
+"""Weight-only quantized parameters — the paper's low-precision data
+representation applied to LM serving.
+
+Decode is the LM analog of IHT: an iterative, HBM-bandwidth-bound loop that
+re-streams a fixed large operand (weights ↔ measurement matrix) against a small
+iterate (activations ↔ residual). Storing weights as packed 2/4/8-bit codes
+cuts the streamed bytes by 16/8/4× — exactly the paper's FPGA/CPU mechanism.
+
+* :class:`QWeight` — packed codes + per-channel scale for an (..., in, out)
+  kernel; arbitrary leading dims are preserved, so scan-stacked layer weights
+  (L, in, out) and MoE expert stacks (L, E, in, out) quantize uniformly AND
+  slice correctly inside ``lax.scan`` (both leaves carry the leading dims).
+* :func:`qdense`/:func:`materialize` — dequantize in-graph (ref/dry-run path;
+  the Pallas ``qmm`` kernel consumes the same packed layout on TPU).
+* :func:`quantize_params` — rewrite a param tree for serving.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.formats import BY_BITS
+from repro.quant.pack import pack_codes, unpack_codes
+from repro.quant.quantize import quantize_codes
+
+
+@jax.tree_util.register_pytree_node_class
+class QWeight:
+    """An (..., in, out) kernel stored as (..., out, packed_in) codes."""
+
+    def __init__(self, packed: jax.Array, scale: jax.Array, bits: int, k_dim: int):
+        self.packed = packed          # (..., out, packed_len(in, bits)) uint8
+        self.scale = scale            # (..., out, 1) f32
+        self.bits = int(bits)
+        self.k_dim = int(k_dim)       # logical `in` (contraction) dimension
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        """Returns the (..., in, out) kernel."""
+        codes = unpack_codes(self.packed, self.bits, self.k_dim)  # (..., out, in)
+        k = BY_BITS[self.bits].half_steps
+        w = codes.astype(jnp.float32) * (self.scale / k)
+        return jnp.swapaxes(w, -1, -2).astype(dtype)
+
+    def tree_flatten(self):
+        return (self.packed, self.scale), (self.bits, self.k_dim)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0], aux[1])
+
+
+def quantize_weight(w: jax.Array, bits: int, key: Optional[jax.Array] = None) -> QWeight:
+    """Quantize an (..., in, out) kernel; per-(leading dims × out-channel) scale;
+    codes packed along the contraction (in) axis — the qmm kernel layout."""
+    wt = jnp.swapaxes(w, -1, -2)             # (..., out, in)
+    lead = wt.shape[:-1]
+    k_dim = wt.shape[-1]
+    flat = wt.reshape(-1, k_dim)
+    codes, scale = quantize_codes(flat, bits, key, channel_axis=0)
+    packed = pack_codes(codes, bits)
+    return QWeight(
+        packed.reshape(lead + (packed.shape[-1],)),
+        scale.reshape(lead + (1,)).astype(jnp.float32),
+        bits,
+        k_dim,
+    )
+
+
+def materialize(w, dtype):
+    """Dense kernel from either a plain array or a QWeight."""
+    if isinstance(w, QWeight):
+        return w.dequantize(dtype)
+    return w.astype(dtype)
+
+
+def qdense(p, x: jax.Array, dtype=None) -> jax.Array:
+    dtype = dtype or x.dtype
+    y = x @ materialize(p["w"], dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+_SKIP_SUBTREES = ("embed",)            # token-embedding gather stays dense
+_QUANT_KEYS = ("w", "wi_gate", "wi_up", "wo")
+
+
+def quantize_params(params, bits: int, key: Optional[jax.Array] = None,
+                    stochastic: bool = False):
+    """Rewrite eligible kernels (any >=2-D float 'w' / MoE expert stack outside
+    norms and the token embedding) as packed Q-weights. Deterministic nearest
+    rounding by default — serving wants reproducible weights; stochastic+key
+    gives the unbiased variant."""
+    counter = [0]
+
+    def next_key():
+        counter[0] += 1
+        if stochastic and key is not None:
+            return jax.random.fold_in(key, counter[0])
+        return None
+
+    def eligible(k, v):
+        return (
+            k in _QUANT_KEYS
+            and hasattr(v, "ndim")
+            and v.ndim >= 2
+            and v.dtype in (jnp.float32, jnp.bfloat16)
+        )
+
+    def rewrite(path, sub):
+        if isinstance(sub, (list, tuple)):
+            return type(sub)(rewrite(path + (str(i),), e) for i, e in enumerate(sub))
+        if not isinstance(sub, dict):
+            return sub
+        out = {}
+        for k, v in sub.items():
+            p = path + (k,)
+            if any(s in p for s in _SKIP_SUBTREES):
+                out[k] = v
+            elif isinstance(v, (dict, list, tuple)):
+                out[k] = rewrite(p, v)
+            elif eligible(k, v):
+                out[k] = quantize_weight(v, bits, next_key())
+            else:
+                out[k] = v
+        return out
+
+    return rewrite((), params)
+
+
+# backwards-compat alias (expert stacks are plain QWeights now)
+QWeightStack = QWeight
+
+
+def param_bytes(params) -> int:
+    """Total stored bytes of a (possibly quantized) param tree."""
+    leaves = jax.tree_util.tree_leaves(params)
+    return sum(l.size * l.dtype.itemsize for l in leaves)

@@ -1,0 +1,106 @@
+"""RecurrentGemma's recurrent block: temporal conv + RG-LRU (arXiv 2402.19427).
+
+RG-LRU recurrence (per channel):
+    r_t = σ(W_r x_t),  i_t = σ(W_i x_t)
+    a_t = exp(−c · softplus(Λ) · r_t)                    (c = 8)
+    h_t = a_t · h_{t−1} + sqrt(1 − a_t²) · (i_t · x_t)
+
+Block layout (Griffin): in-proj to two branches (x, gate); x-branch: conv1d →
+RG-LRU; merged: h · gelu(gate) → out-proj.
+
+Training/prefill evaluates the linear recurrence with an associative scan
+(log-depth — this is the TPU-friendly formulation); decode is O(1) per step.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.quantized import materialize
+
+_C = 8.0
+
+
+def rglru_init(key, d_model: int, width: int, d_conv: int):
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": dense_init(ks[0], d_model, width),
+        "in_gate": dense_init(ks[1], d_model, width),
+        "conv_w": jax.random.normal(ks[2], (d_conv, width), jnp.float32) * 0.02,
+        "conv_b": jnp.zeros((width,), jnp.float32),
+        "w_r": dense_init(ks[3], width, width),
+        "w_i": dense_init(ks[4], width, width),
+        # Λ init so that a^c is roughly in [0.9, 0.999]
+        "lambda_raw": jnp.linspace(0.3, 1.5, width).astype(jnp.float32),
+        "out": dense_init(ks[5], width, d_model),
+    }
+
+
+class RGLRUState(NamedTuple):
+    conv: jax.Array   # (B, d_conv-1, width)
+    h: jax.Array      # (B, width)
+
+
+def init_rglru_state(b: int, width: int, d_conv: int) -> RGLRUState:
+    return RGLRUState(
+        conv=jnp.zeros((b, d_conv - 1, width), jnp.float32),
+        h=jnp.zeros((b, width), jnp.float32),
+    )
+
+
+def _conv(p, x, conv_state=None):
+    w = p["conv_w"].astype(x.dtype)
+    k = w.shape[0]
+    pad = (
+        jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+        if conv_state is None
+        else conv_state.astype(x.dtype)
+    )
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    out = out + p["conv_b"].astype(x.dtype)
+    new_state = xp[:, -(k - 1) :, :] if k > 1 else pad
+    return out, new_state
+
+
+def _gates(p, x):
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ materialize(p["w_r"]["w"], jnp.float32))
+    i = jax.nn.sigmoid(xf @ materialize(p["w_i"]["w"], jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lambda_raw"]) * r          # (B,S,W) <= 0
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return a, gated_in
+
+
+def rglru_apply(p, u: jax.Array, width: int) -> jax.Array:
+    """u: (B, S, d_model) → (B, S, d_model) via associative scan over S."""
+    x = u @ materialize(p["in_x"]["w"], u.dtype)
+    gate = u @ materialize(p["in_gate"]["w"], u.dtype)
+    x, _ = _conv(p, x)
+    a, b = _gates(p, x)                                          # (B,S,W) each
+
+    # h_t = a_t h_{t-1} + b_t  — associative: (a1,b1)∘(a2,b2) = (a1a2, a2 b1 + b2)
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = h.astype(u.dtype) * jax.nn.gelu(gate)
+    return y @ materialize(p["out"]["w"], u.dtype)
+
+
+def rglru_decode_step(p, u: jax.Array, state: RGLRUState, width: int):
+    """u: (B, 1, d_model) → (y, new_state)."""
+    x = u @ materialize(p["in_x"]["w"], u.dtype)
+    gate = u @ materialize(p["in_gate"]["w"], u.dtype)
+    x, conv_new = _conv(p, x, state.conv)
+    a, b = _gates(p, x)                                          # (B,1,W)
+    h = a[:, 0] * state.h + b[:, 0]                              # (B,W)
+    y = h[:, None, :].astype(u.dtype) * jax.nn.gelu(gate)
+    y = y @ materialize(p["out"]["w"], u.dtype)
+    return y, RGLRUState(conv=conv_new, h=h)

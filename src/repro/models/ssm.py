@@ -1,0 +1,180 @@
+"""Mamba-2 (SSD — state-space duality) block, after Dao & Gu 2024 (arXiv
+2405.21060), in the minimal chunked-discrete formulation:
+
+  per head h, scalar decay a_t = exp(Δ_t · A_h)   (A_h = −exp(A_log_h) < 0)
+  h_t = a_t · h_{t−1} + Δ_t · B_t xᵀ_t            (state: (headdim, d_state))
+  y_t = C_t · h_t + D_h · x_t
+
+Training/prefill uses the chunked algorithm (intra-chunk quadratic attention-
+like term + inter-chunk state recurrence, chunk = cfg.ssm_chunk); decode is the
+O(1) recurrent step — which is what makes the 500k-context shape tractable.
+
+Layout: in_proj → (z, x, B, C, Δ); depthwise causal conv on (x, B, C);
+gated RMSNorm on y·silu(z); out_proj.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.quantized import materialize
+
+
+def ssd_init(key, d_model: int, d_inner: int, d_state: int, n_heads: int, d_conv: int):
+    ks = jax.random.split(key, 5)
+    conv_dim = d_inner + 2 * d_state
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * d_inner + 2 * d_state + n_heads),
+        "conv_w": jax.random.normal(ks[1], (d_conv, conv_dim), jnp.float32) * 0.02,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads).astype(jnp.float32)),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[2], d_inner, d_model),
+    }
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # (B, d_conv-1, conv_dim) rolling conv inputs
+    ssm: jax.Array    # (B, H, headdim, d_state) recurrent state
+
+
+def init_ssm_state(b: int, cfg) -> SSMState:
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return SSMState(
+        conv=jnp.zeros((b, cfg.ssm_conv - 1, conv_dim), jnp.float32),
+        ssm=jnp.zeros((b, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+    )
+
+
+def _split_proj(p, u, d_inner, d_state, n_heads):
+    zxbcdt = u @ materialize(p["in_proj"]["w"], u.dtype)
+    z, xr, bb, cc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + d_state, 2 * d_inner + 2 * d_state], axis=-1
+    )
+    return z, xr, bb, cc, dt
+
+
+def _causal_conv(p, xbc, conv_state=None):
+    """Depthwise causal conv1d over (B, S, C); returns (out, new_state)."""
+    w = p["conv_w"].astype(xbc.dtype)           # (K, C)
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)     # (B, S+K-1, C)
+    out = sum(xp[:, i : i + xbc.shape[1], :] * w[i] for i in range(k))
+    out = jax.nn.silu(out + p["conv_b"].astype(xbc.dtype))
+    new_state = xp[:, -(k - 1) :, :] if k > 1 else pad
+    return out, new_state
+
+
+def _gated_norm(p, y, z, eps=1e-6):
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    var = jnp.mean(gf * gf, axis=-1, keepdims=True)
+    return (gf * jax.lax.rsqrt(var + eps) * p["norm_scale"]).astype(y.dtype)
+
+
+def ssd_apply(p, u: jax.Array, cfg) -> jax.Array:
+    """Chunked SSD forward. u: (B, S, d_model) → (B, S, d_model).
+    S is zero-padded to a chunk multiple internally (causal: trailing pad
+    positions cannot affect real outputs)."""
+    s_orig = u.shape[1]
+    ck0 = min(cfg.ssm_chunk, s_orig)
+    pad = (-s_orig) % ck0
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+    b, s, _ = u.shape
+    h, hd, ds, ck = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, ck0
+    z, xr, bb, cc, dt = _split_proj(p, u, cfg.d_inner, ds, h)
+    xbc = jnp.concatenate([xr, bb, cc], axis=-1)
+    xbc, _ = _causal_conv(p, xbc)
+    xr, bb, cc = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + ds], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])       # (B,S,H)
+    a = -jnp.exp(p["a_log"])                                          # (H,)
+    da = dt * a                                                       # (B,S,H) log-decay
+    nc = s // ck
+    xh = xr.astype(jnp.float32).reshape(b, nc, ck, h, hd)
+    bh = bb.astype(jnp.float32).reshape(b, nc, ck, ds)
+    chh = cc.astype(jnp.float32).reshape(b, nc, ck, ds)
+    dah = da.reshape(b, nc, ck, h)
+    dth = dt.reshape(b, nc, ck, h)
+
+    # cumulative log-decay within chunk
+    cum = jnp.cumsum(dah, axis=2)                                     # (B,nc,ck,H)
+    # intra-chunk: L[t,τ] = exp(cum_t − cum_τ) for t >= τ.
+    # Mask the EXPONENT (not the exp) — upper-triangle entries are large
+    # positive and would overflow, poisoning gradients through jnp.where.
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]               # (B,nc,t,τ,H)
+    tri = jnp.tril(jnp.ones((ck, ck), bool))[None, None, :, :, None]
+    l_mat = jnp.exp(jnp.where(tri, seg, -1e30))
+    scores = jnp.einsum("bntd,bnsd->bnts", chh, bh)                   # (B,nc,t,τ)
+    y_diag = jnp.einsum("bnts,bntsh,bnsh,bnshp->bnthp",
+                        scores, l_mat, dth, xh)
+
+    # chunk-final states: S_n = Σ_τ exp(cum_end − cum_τ)·Δ_τ·x_τ Bᵀ_τ
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)                   # (B,nc,ck,H)
+    states = jnp.einsum("bnsh,bnsh,bnshp,bnsd->bnhpd",
+                        decay_to_end, dth, xh, bh)                    # (B,nc,H,hd,ds)
+
+    # inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                           # (B,nc,H)
+
+    def chunk_step(carry, inp):
+        st_prev = carry                                               # (B,H,hd,ds)
+        st_new, dec = inp
+        st = st_prev * dec[:, :, None, None] + st_new
+        return st, st_prev
+
+    (final, prev_states) = jax.lax.scan(
+        chunk_step,
+        jnp.zeros((b, h, hd, ds), jnp.float32),
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+        unroll=nc if getattr(cfg, "scan_unroll", False) else 1,
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)                # (B,nc,H,hd,ds)
+
+    # inter-chunk contribution: y_t += C_t · exp(cum_t)·S_{n−1}
+    decay_in = jnp.exp(cum)                                           # (B,nc,ck,H)
+    y_off = jnp.einsum("bntd,bnth,bnhpd->bnthp", chh, decay_in, prev_states)
+
+    y = (y_diag + y_off).reshape(b, s, h, hd)
+    y = y + xh.reshape(b, s, h, hd) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, cfg.d_inner)
+    y = _gated_norm(p, y.astype(u.dtype), z)
+    y = y @ materialize(p["out_proj"]["w"], u.dtype)
+    return y[:, :s_orig] if pad else y
+
+
+def ssd_decode_step(p, u: jax.Array, state: SSMState, cfg):
+    """One-token recurrent step. u: (B, 1, d_model) → (y (B,1,d_model), state)."""
+    b = u.shape[0]
+    h, hd, ds = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    z, xr, bb, cc, dt = _split_proj(p, u, cfg.d_inner, ds, h)
+    xbc = jnp.concatenate([xr, bb, cc], axis=-1)
+    xbc, conv_new = _causal_conv(p, xbc, state.conv)
+    xr, bb, cc = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + ds], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    dec = jnp.exp(dt * a)                                              # (B,H)
+    xh = xr.astype(jnp.float32).reshape(b, h, hd)
+    bh = bb.astype(jnp.float32)[:, 0]                                  # (B,ds)
+    chh = cc.astype(jnp.float32)[:, 0]                                 # (B,ds)
+
+    ssm_new = state.ssm * dec[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bd->bhpd", dt, xh, bh
+    )
+    y = jnp.einsum("bd,bhpd->bhp", chh, ssm_new)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, cfg.d_inner).astype(u.dtype)
+    y = _gated_norm(p, y, z)
+    y = y @ materialize(p["out_proj"]["w"], u.dtype)
+    return y, SSMState(conv=conv_new, ssm=ssm_new)

@@ -1,0 +1,8 @@
+"""Optimizers and the IHT sparsity projector."""
+from repro.optim.adamw import AdamWState, Optimizer, adamw, cosine_schedule
+from repro.optim.iht import IHTConfig, maybe_project, project_params, sparsity_report
+
+__all__ = [
+    "AdamWState", "Optimizer", "adamw", "cosine_schedule",
+    "IHTConfig", "maybe_project", "project_params", "sparsity_report",
+]

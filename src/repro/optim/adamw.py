@@ -1,0 +1,82 @@
+"""AdamW, from scratch (no optax in this container), pytree-native.
+
+Moments inherit the parameter sharding (ZeRO-style: FSDP-sharded params →
+FSDP-sharded moments for free under pjit out_shardings)."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def _cast_tree(tree, fn):
+    return jax.tree_util.tree_map(fn, tree)
+
+
+def adamw(
+    lr: Union[float, Callable],
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+) -> Optimizer:
+    def init(params):
+        zeros = _cast_tree(params, lambda p: jnp.zeros_like(p, dtype=jnp.float32))
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                          nu=_cast_tree(params, lambda p: jnp.zeros_like(p, jnp.float32)))
+
+    def update(grads, state: AdamWState, params):
+        step = state.step + 1
+        lr_t = lr(step) if callable(lr) else lr
+
+        # global-norm clip
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree_util.tree_leaves(grads))
+        )
+        clip = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32) * clip
+            m_new = b1 * m + (1 - b1) * gf
+            v_new = b2 * v + (1 - b2) * gf * gf
+            m_hat = m_new / (1 - b1 ** step.astype(jnp.float32))
+            v_hat = v_new / (1 - b2 ** step.astype(jnp.float32))
+            delta = m_hat / (jnp.sqrt(v_hat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m_new, v_new
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        flat_p = treedef.flatten_up_to(params)
+        new = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = jax.tree_util.tree_unflatten(treedef, [a for a, _, _ in new])
+        new_m = jax.tree_util.tree_unflatten(treedef, [b for _, b, _ in new])
+        new_v = jax.tree_util.tree_unflatten(treedef, [c for _, _, c in new])
+        return new_p, AdamWState(step=step, mu=new_m, nu=new_v), {"grad_norm": gnorm, "lr": lr_t}
+
+    return Optimizer(init=init, update=update)
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(s < warmup, warm, cos)
+
+    return lr

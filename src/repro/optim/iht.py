@@ -1,0 +1,72 @@
+"""IHT as a training feature: projected-gradient sparsity via H_s.
+
+The paper's hard-threshold operator, applied to model weights after each
+optimizer update, is exactly iterative magnitude pruning as projected gradient
+descent — ``w ← H_s(w − η∇L)``. Exposed as a wrapper so any arch can train
+s-sparse weight matrices. (No Theorem-3 recovery guarantee transfers to LM
+weights — see DESIGN.md §5 — this is the *mechanism* as a framework feature.)
+
+Uses the streaming histogram threshold (kernels/hsthresh semantics) so the
+projection is O(N) per matrix, never a sort.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hsthresh.ref import hist_ref, select_threshold
+
+
+class IHTConfig(NamedTuple):
+    sparsity: float = 0.5          # fraction of entries to ZERO per matrix
+    min_size: int = 4096           # only project matrices at least this big
+    every: int = 1                 # project every k optimizer steps
+
+
+def _project_matrix(w: jax.Array, keep: int, nbins: int = 4096) -> jax.Array:
+    flat = jnp.abs(w.astype(jnp.float32)).ravel()
+    vmax = jnp.maximum(jnp.max(flat), 1e-30)
+    h = hist_ref(flat, vmax, nbins)
+    t = select_threshold(h, vmax, keep)
+    return jnp.where(jnp.abs(w) > t, w, jnp.zeros_like(w))
+
+
+def project_params(params, cfg: IHTConfig):
+    """H_s on every large 2-D+ weight leaf (path key 'w' or expert stacks)."""
+
+    def one(path, leaf):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        eligible = (
+            hasattr(leaf, "ndim")
+            and leaf.ndim >= 2
+            and leaf.size >= cfg.min_size
+            and name in ("w", "wi_gate", "wi_up", "wo")
+            and leaf.dtype in (jnp.float32, jnp.bfloat16)
+        )
+        if not eligible:
+            return leaf
+        keep = max(1, int(leaf.size * (1.0 - cfg.sparsity)))
+        return _project_matrix(leaf, keep)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def maybe_project(params, step: jax.Array, cfg: IHTConfig):
+    """Project on schedule (every k steps) inside a jitted train step."""
+    do = (step % cfg.every) == 0
+    return jax.lax.cond(do, lambda p: project_params(p, cfg), lambda p: p, params)
+
+
+def sparsity_report(params, cfg: IHTConfig):
+    """Measured zero-fraction of eligible matrices (diagnostics)."""
+    total = 0
+    zeros = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if (hasattr(leaf, "ndim") and leaf.ndim >= 2 and leaf.size >= cfg.min_size
+                and name in ("w", "wi_gate", "wi_up", "wo")):
+            total += leaf.size
+            zeros += int(jnp.sum(leaf == 0))
+    return zeros / max(total, 1)

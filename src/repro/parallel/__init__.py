@@ -1,0 +1,24 @@
+"""Distribution layer: sharding rules, meshes, compressed collectives."""
+from repro.parallel.collectives import (
+    fake_grad_compression,
+    make_qgrad_allreduce,
+    quantized_allreduce_mean,
+)
+from repro.parallel.sharding import (
+    batch_axes,
+    batch_spec,
+    params_shardings,
+    replicated,
+    spec_for_path,
+)
+
+__all__ = [
+    "fake_grad_compression",
+    "make_qgrad_allreduce",
+    "quantized_allreduce_mean",
+    "batch_axes",
+    "batch_spec",
+    "params_shardings",
+    "replicated",
+    "spec_for_path",
+]

@@ -1,0 +1,164 @@
+"""Path-based parameter sharding rules: FSDP (`data`) × TP/EP (`model`) × DP
+(`pod`), with divisibility-aware fallback to replication.
+
+Rules are written against the *logical* (unstacked) weight shapes; scanned
+stacks (leading n_periods/n_layers dim) get a ``None`` prepended automatically.
+A dim is sharded only when its size divides the mesh axis — otherwise that dim
+falls back to ``None`` (replicated), which encodes the DESIGN.md §7 decisions
+(e.g. kv-head replication when kv_heads % TP != 0) without special cases.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (path regex, spec for the trailing dims). "fsdp" → data axis, "tp" → model axis.
+_RULES: list[tuple[str, tuple]] = [
+    (r"embed/w$",               ("tp", "fsdp")),
+    (r"unembed/w$",             ("tp", "fsdp")),
+    (r"attn/wq/w$",             ("fsdp", "tp")),
+    (r"attn/wk/w$",             ("fsdp", "tp")),
+    (r"attn/wv/w$",             ("fsdp", "tp")),
+    (r"attn/wo/w$",             ("tp", "fsdp")),
+    (r"xattn/wq/w$",            ("fsdp", "tp")),
+    (r"xattn/wk/w$",            ("fsdp", "tp")),
+    (r"xattn/wv/w$",            ("fsdp", "tp")),
+    (r"xattn/wo/w$",            ("tp", "fsdp")),
+    (r"attn/w[qkvo]/b$",        ("tp",)),
+    (r"xattn/w[qkvo]/b$",       ("tp",)),
+    (r"ffn/wi_gate/w$",         ("fsdp", "tp")),
+    (r"ffn/wi_up/w$",           ("fsdp", "tp")),
+    (r"ffn/wi/w$",              ("fsdp", "tp")),
+    (r"ffn/wo/w$",              ("tp", "fsdp")),
+    (r"ffn/router/w$",          ("fsdp", None)),
+    # MoE expert stacks (E, d, ff): expert-parallel over the model axis
+    (r"ffn/wi_gate$",           ("tp", "fsdp", None)),
+    (r"ffn/wi_up$",             ("tp", "fsdp", None)),
+    (r"ffn/wo$",                ("tp", None, "fsdp")),
+    # SSM
+    (r"ssm/in_proj/w$",         ("fsdp", None)),
+    (r"ssm/out_proj/w$",        ("tp", "fsdp")),
+    (r"ssm/conv_w$",            (None, None)),
+    # RG-LRU
+    (r"rec/in_x/w$",            ("fsdp", "tp")),
+    (r"rec/in_gate/w$",         ("fsdp", "tp")),
+    (r"rec/w_r/w$",             ("fsdp", "tp")),
+    (r"rec/w_i/w$",             ("fsdp", "tp")),
+    (r"rec/out/w$",             ("tp", "fsdp")),
+    (r"rec/conv_w$",            (None, None)),
+]
+
+
+def _axis(kind: Optional[str], mesh: Mesh) -> Optional[str]:
+    if kind == "fsdp":
+        return "data" if "data" in mesh.axis_names else None
+    if kind == "tp":
+        return "model" if "model" in mesh.axis_names else None
+    return None
+
+
+def _divisible(dim: int, axis: Optional[str], mesh: Mesh) -> bool:
+    if axis is None:
+        return False
+    return dim % mesh.shape[axis] == 0
+
+
+def spec_for_path(path: str, shape: tuple, mesh: Mesh) -> P:
+    """PartitionSpec for one parameter. Unmatched paths → fully replicated."""
+    for pattern, rule in _RULES:
+        if re.search(pattern, path):
+            n_extra = len(shape) - len(rule)
+            if n_extra < 0:
+                continue
+            spec = [None] * n_extra
+            for dim_size, kind in zip(shape[n_extra:], rule):
+                ax = _axis(kind, mesh)
+                spec.append(ax if _divisible(dim_size, ax, mesh) else None)
+            return P(*spec)
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(p.name)
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# serve-mode overrides: K/V projections are contraction-sharded (their OUTPUT
+# must stay head-replicated or the partitioner re-lays-out the whole KV cache
+# at the layer-scan boundary every token — §Perf H2/H3).
+_SERVE_OVERRIDES: list[tuple[str, tuple]] = [
+    (r"attn/wk/w$",  ("tp", None)),
+    (r"attn/wv/w$",  ("tp", None)),
+    (r"xattn/wk/w$", ("tp", None)),
+    (r"xattn/wv/w$", ("tp", None)),
+    (r"attn/w[kv]/b$",  (None,)),
+    (r"xattn/w[kv]/b$", (None,)),
+]
+
+
+def params_shardings(params, mesh: Mesh, mode: str = "train"):
+    """NamedSharding tree matching an (abstract or concrete) param tree.
+
+    mode="train": FSDP over `data` × TP over `model` (ZeRO-style).
+    mode="serve": TP only — weights replicated across the DP axes so the
+    decode loop never all-gathers them (they are read-only and re-streamed
+    every token; gathering per step is pure collective waste — §Perf), with
+    K/V projections contraction-sharded (see _SERVE_OVERRIDES)."""
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        spec = None
+        if mode == "serve":
+            for pattern, rule in _SERVE_OVERRIDES:
+                if re.search(pattern, ps):
+                    n_extra = len(leaf.shape) - len(rule)
+                    parts = [None] * n_extra
+                    for dim_size, kind in zip(leaf.shape[n_extra:], rule):
+                        ax = _axis(kind, mesh)
+                        parts.append(ax if _divisible(dim_size, ax, mesh) else None)
+                    spec = P(*parts)
+                    break
+        if spec is None:
+            spec = spec_for_path(ps, leaf.shape, mesh)
+        if mode == "serve":
+            spec = P(*(None if ax == "data" else ax for ax in spec))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_axes(mesh: Mesh):
+    """Mesh axes over which the global batch is split (DP): pod × data."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if axes else None
+
+
+def batch_spec(mesh: Mesh, batch_size: int, rank: int) -> P:
+    """Spec for a (B, ...) input: batch over pod+data when divisible."""
+    axes = batch_axes(mesh)
+    if axes is None:
+        return P()
+    total = int(np.prod([mesh.shape[a] for a in axes]))
+    if batch_size % total == 0:
+        return P(axes, *([None] * (rank - 1)))
+    # try data-only
+    if "data" in mesh.axis_names and batch_size % mesh.shape["data"] == 0:
+        return P("data", *([None] * (rank - 1)))
+    return P(*([None] * rank))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

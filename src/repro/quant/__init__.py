@@ -1,0 +1,47 @@
+"""Low-precision data representation: formats, stochastic quantization, packing."""
+from repro.quant.formats import BY_BITS, INT2, INT4, INT8, SUPPORTED_BITS, QuantFormat
+from repro.quant.pack import pack_codes, packed_len, unpack_codes
+from repro.quant.policy import (
+    FULL_PRECISION,
+    PAPER_2_8,
+    PAPER_4_8,
+    PAPER_8_8,
+    W2KV8,
+    W4,
+    W4KV8,
+    W8,
+    QuantPolicy,
+)
+from repro.quant.quantize import (
+    QTensor,
+    dequantize_codes,
+    fake_quantize,
+    quantize,
+    quantize_codes,
+)
+
+__all__ = [
+    "BY_BITS",
+    "INT2",
+    "INT4",
+    "INT8",
+    "SUPPORTED_BITS",
+    "QuantFormat",
+    "pack_codes",
+    "packed_len",
+    "unpack_codes",
+    "FULL_PRECISION",
+    "PAPER_2_8",
+    "PAPER_4_8",
+    "PAPER_8_8",
+    "W2KV8",
+    "W4",
+    "W4KV8",
+    "W8",
+    "QuantPolicy",
+    "QTensor",
+    "dequantize_codes",
+    "fake_quantize",
+    "quantize",
+    "quantize_codes",
+]

@@ -1,0 +1,72 @@
+"""Numeric formats for low-precision data representation.
+
+The paper (Remark 3) uses a symmetric grid with an *odd* number of levels so that
+zero is exactly representable and FPGA fixed-point arithmetic stays symmetric:
+
+    levels  L(b) = 2^(b-1) + 1     equally spaced on [-1, 1]
+    half-range steps  K(b) = 2^(b-2) ... more precisely K = (L-1)/2 = 2^(b-2) * 2 / 2
+
+i.e. integer code ``k`` in ``[-K, +K]`` with value ``scale * k / K`` where
+``K = 2^(b-1) / 2 = 2^(b-2+1)/2``.  Concretely::
+
+    b=2 -> L=3,   K=1,  codes {-1, 0, +1}          (ternary)
+    b=4 -> L=9,   K=4,  codes {-4 ... +4}
+    b=8 -> L=129, K=64, codes {-64 ... +64}
+
+The inter-level spacing is ``Delta = scale / K = scale / 2^(b-2) / 2`` and matches
+Lemma 4's bound ``E||Q(v)-v||_2 <= c_v * sqrt(M) / 2^(b-1)`` exactly
+(per-element worst expected error = Delta/2 = scale/2^(b-1)).
+
+Codes always fit two's-complement ``b`` bits (|k| <= 2^(b-2)*2 <= 2^(b-1)-? ...
+b=2: |k|<=1 < 2; b=4: |k|<=4 < 8; b=8: |k|<=64 < 128), so packed storage uses
+exactly ``b`` bits per value.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+SUPPORTED_BITS = (2, 4, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantFormat:
+    """A symmetric odd-level integer format with ``bits`` bits per value."""
+
+    bits: int
+
+    def __post_init__(self):
+        if self.bits not in SUPPORTED_BITS:
+            raise ValueError(f"bits must be one of {SUPPORTED_BITS}, got {self.bits}")
+
+    @property
+    def levels(self) -> int:
+        """Number of representable levels (odd)."""
+        return 2 ** (self.bits - 1) + 1
+
+    @property
+    def half_steps(self) -> int:
+        """K: number of positive steps; codes live in [-K, K] (K = 2^(b-1)/2)."""
+        return 2 ** (self.bits - 1) // 2
+
+    @property
+    def values_per_byte(self) -> int:
+        return 8 // self.bits
+
+    @property
+    def code_min(self) -> int:
+        return -self.half_steps
+
+    @property
+    def code_max(self) -> int:
+        return self.half_steps
+
+    def expected_error_bound(self, scale: float, m: int) -> float:
+        """Lemma 4: E||Q(v) - v||_2 <= c_v * sqrt(M) / 2^(b-1)."""
+        return scale * (m ** 0.5) / (2 ** (self.bits - 1))
+
+
+INT2 = QuantFormat(2)
+INT4 = QuantFormat(4)
+INT8 = QuantFormat(8)
+
+BY_BITS = {2: INT2, 4: INT4, 8: INT8}

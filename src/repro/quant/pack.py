@@ -1,0 +1,62 @@
+"""Bit-packing of integer quantization codes into dense uint8 words.
+
+The whole point of the paper's systems result is that *packed* low-precision data
+moves fewer bytes: 2-bit codes pack 4-to-a-byte (16x fewer bytes than f32), 4-bit
+2-to-a-byte (8x), 8-bit 1-to-a-byte (4x). On TPU the packed array is what streams
+HBM->VMEM; the Pallas `qmm` kernel unpacks in-register.
+
+Packing is along the **last axis** (the contraction axis of the matmuls), which
+keeps unpacked values contiguous along the TPU minor (lane) dimension.
+Codes are stored biased by +K so they are non-negative in ``b`` bits.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.quant.formats import BY_BITS
+
+
+def packed_len(n: int, bits: int) -> int:
+    vpb = 8 // bits
+    return (n + vpb - 1) // vpb
+
+
+def pack_codes(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack int8 codes in [-K, K] into uint8 words along the last axis.
+
+    The last axis is zero-padded (code 0 -> biased K) to a multiple of 8//bits.
+    Output last axis has length ``packed_len(codes.shape[-1], bits)``.
+    """
+    fmt = BY_BITS[bits]
+    vpb = fmt.values_per_byte
+    k = fmt.half_steps
+    n = codes.shape[-1]
+    pad = (-n) % vpb
+    if pad:
+        codes = jnp.pad(codes, [(0, 0)] * (codes.ndim - 1) + [(0, pad)])
+    biased = (codes.astype(jnp.int32) + k).astype(jnp.uint8)  # in [0, 2K] < 2^bits
+    if vpb == 1:
+        return biased
+    new_shape = codes.shape[:-1] + ((n + pad) // vpb, vpb)
+    groups = biased.reshape(new_shape)
+    out = jnp.zeros(new_shape[:-1], dtype=jnp.uint8)
+    for i in range(vpb):
+        out = out | (groups[..., i] << (bits * i)).astype(jnp.uint8)
+    return out
+
+
+def unpack_codes(packed: jnp.ndarray, bits: int, n: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_codes`; returns int8 codes with last axis length n."""
+    fmt = BY_BITS[bits]
+    vpb = fmt.values_per_byte
+    k = fmt.half_steps
+    if vpb == 1:
+        biased = packed.astype(jnp.int32)
+    else:
+        mask = (1 << bits) - 1
+        parts = [
+            ((packed.astype(jnp.int32) >> (bits * i)) & mask) for i in range(vpb)
+        ]
+        biased = jnp.stack(parts, axis=-1).reshape(packed.shape[:-1] + (packed.shape[-1] * vpb,))
+    codes = biased - k
+    return codes[..., :n].astype(jnp.int8)

@@ -1,0 +1,60 @@
+"""Quantization policy: how the paper's Q_b is applied across the framework.
+
+A :class:`QuantPolicy` travels with every model/config and controls which tensors
+get the low-precision data representation:
+
+* ``weight_bits``   — weight-only quantized matmuls (None = full precision). The
+  direct analog of quantizing the measurement matrix ``Φ``: weights are the large,
+  repeatedly-streamed operand of a bandwidth-bound iterative computation (decode).
+* ``kv_bits``       — KV-cache / cross-attention-memory quantization. The analog of
+  quantizing the observations ``y`` (a fixed vector consumed every iteration).
+* ``grad_bits``     — gradient all-reduce compression for multi-pod training
+  (stochastic rounding keeps it unbiased, per the paper's Q).
+* ``stochastic``    — stochastic (unbiased) vs nearest rounding for weights.
+* ``phi_bits`` / ``y_bits`` — the CS solver's own b_Φ and b_y.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+VALID_BITS = (None, 2, 4, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    weight_bits: Optional[int] = None
+    kv_bits: Optional[int] = None
+    grad_bits: Optional[int] = None
+    stochastic: bool = True
+    # CS solver data precision (paper notation b_Phi & b_y)
+    phi_bits: Optional[int] = None
+    y_bits: Optional[int] = None
+
+    def __post_init__(self):
+        for name in ("weight_bits", "kv_bits", "grad_bits", "phi_bits", "y_bits"):
+            v = getattr(self, name)
+            if v not in VALID_BITS:
+                raise ValueError(f"{name} must be in {VALID_BITS}, got {v}")
+
+    @property
+    def quantizes_weights(self) -> bool:
+        return self.weight_bits is not None
+
+    @property
+    def quantizes_kv(self) -> bool:
+        return self.kv_bits is not None
+
+    @property
+    def quantizes_grads(self) -> bool:
+        return self.grad_bits is not None
+
+
+FULL_PRECISION = QuantPolicy()
+W8 = QuantPolicy(weight_bits=8)
+W4 = QuantPolicy(weight_bits=4)
+W4KV8 = QuantPolicy(weight_bits=4, kv_bits=8)
+W2KV8 = QuantPolicy(weight_bits=2, kv_bits=8)
+PAPER_2_8 = QuantPolicy(phi_bits=2, y_bits=8)   # the paper's headline "2&8 bit" IHT
+PAPER_4_8 = QuantPolicy(phi_bits=4, y_bits=8)
+PAPER_8_8 = QuantPolicy(phi_bits=8, y_bits=8)

@@ -1,0 +1,146 @@
+"""Stochastic quantization Q_b (the paper's Section 3 operator), in pure JAX.
+
+``quantize`` maps a float (or complex) tensor onto the symmetric odd-level integer
+grid described in :mod:`repro.quant.formats`.  With ``key`` given it performs
+*stochastic rounding* (unbiased: ``E[Q_b(v)] = v``); without a key it rounds to
+nearest (biased but deterministic — used where reproducibility beats unbiasedness).
+
+Complex tensors are quantized component-wise (real & imaginary parts share one
+scale), matching how the paper treats the complex measurement matrix entries.
+
+The returned :class:`QTensor` stores integer codes in ``int8`` (unpacked). Packed
+2-/4-bit storage lives in :mod:`repro.quant.pack`; the Pallas kernels consume the
+packed form.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.formats import BY_BITS, QuantFormat
+
+
+@jax.tree_util.register_pytree_node_class
+class QTensor:
+    """A quantized tensor: integer codes + scale + bit-width.
+
+    ``dequantize()`` returns ``codes * (scale / K)`` in the original dtype.
+    For complex tensors, codes have a leading axis of size 2 (real, imag).
+    """
+
+    def __init__(self, codes: jax.Array, scale: jax.Array, bits: int, is_complex: bool = False):
+        self.codes = codes
+        self.scale = scale
+        self.bits = int(bits)
+        self.is_complex = bool(is_complex)
+
+    @property
+    def fmt(self) -> QuantFormat:
+        return BY_BITS[self.bits]
+
+    @property
+    def shape(self):
+        return self.codes.shape[1:] if self.is_complex else self.codes.shape
+
+    def dequantize(self, dtype=None) -> jax.Array:
+        k = self.fmt.half_steps
+        step = self.scale / k
+        vals = self.codes.astype(jnp.float32) * step
+        if self.is_complex:
+            out = jax.lax.complex(vals[0], vals[1])
+            return out.astype(dtype) if dtype is not None else out
+        return vals.astype(dtype) if dtype is not None else vals
+
+    def tree_flatten(self):
+        return (self.codes, self.scale), (self.bits, self.is_complex)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codes, scale = children
+        bits, is_complex = aux
+        return cls(codes, scale, bits, is_complex)
+
+
+def _max_abs(v: jax.Array, axis=None) -> jax.Array:
+    m = jnp.max(jnp.abs(v), axis=axis, keepdims=axis is not None)
+    # Guard against all-zero tensors: scale 0 would produce NaNs on dequant paths.
+    return jnp.where(m > 0, m, jnp.ones_like(m))
+
+
+def quantize_codes(
+    v: jax.Array,
+    bits: int,
+    key: Optional[jax.Array] = None,
+    scale: Optional[jax.Array] = None,
+    channel_axis: Optional[int] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Quantize a *real* tensor to integer codes in [-K, K]. Returns (codes, scale).
+
+    scale: per-tensor max-abs by default; per-channel when ``channel_axis`` given
+    (the scale then has keepdims shape). Values are clipped to [-scale, scale]
+    before rounding (the paper assumes values confined to [-1, 1] a priori; the
+    scale implements that normalization).
+    """
+    fmt = BY_BITS[bits]
+    k = fmt.half_steps
+    if scale is None:
+        if channel_axis is None:
+            scale = _max_abs(v)
+        else:
+            axes = tuple(a for a in range(v.ndim) if a != channel_axis)
+            scale = _max_abs(v, axis=axes)
+    scaled = jnp.clip(v / scale, -1.0, 1.0) * k
+    if key is None:
+        codes = jnp.round(scaled)
+    else:
+        low = jnp.floor(scaled)
+        p_up = scaled - low
+        u = jax.random.uniform(key, v.shape, dtype=jnp.float32)
+        codes = low + (u < p_up).astype(jnp.float32)
+    codes = jnp.clip(codes, -k, k).astype(jnp.int8)
+    return codes, scale
+
+
+def quantize(
+    v: jax.Array,
+    bits: int,
+    key: Optional[jax.Array] = None,
+    scale: Optional[jax.Array] = None,
+    channel_axis: Optional[int] = None,
+) -> QTensor:
+    """Quantize a real or complex tensor into a :class:`QTensor`."""
+    if jnp.iscomplexobj(v):
+        re, im = jnp.real(v), jnp.imag(v)
+        if scale is None:
+            if channel_axis is not None:
+                raise NotImplementedError("per-channel complex quantization unused")
+            scale = jnp.maximum(_max_abs(re), _max_abs(im))
+        if key is not None:
+            kre, kim = jax.random.split(key)
+        else:
+            kre = kim = None
+        cre, _ = quantize_codes(re, bits, kre, scale)
+        cim, _ = quantize_codes(im, bits, kim, scale)
+        return QTensor(jnp.stack([cre, cim]), scale, bits, is_complex=True)
+    codes, scale = quantize_codes(v, bits, key, scale, channel_axis)
+    return QTensor(codes, scale, bits, is_complex=False)
+
+
+def dequantize_codes(codes: jax.Array, scale: jax.Array, bits: int, dtype=jnp.float32) -> jax.Array:
+    fmt = BY_BITS[bits]
+    return (codes.astype(jnp.float32) * (scale / fmt.half_steps)).astype(dtype)
+
+
+def fake_quantize(
+    v: jax.Array,
+    bits: int,
+    key: Optional[jax.Array] = None,
+    scale: Optional[jax.Array] = None,
+    channel_axis: Optional[int] = None,
+) -> jax.Array:
+    """Quantize-dequantize round trip (the reference 'Q(v)' of the paper's math)."""
+    return quantize(v, bits, key, scale, channel_axis).dequantize(
+        v.dtype if not jnp.iscomplexobj(v) else None
+    )

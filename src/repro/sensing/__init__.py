@@ -1,0 +1,27 @@
+"""Radio-astronomy application substrate (paper §3.3 and supplementary §7)."""
+from repro.sensing.gaussian import CSProblem, make_gaussian_problem
+from repro.sensing.sky import ascii_render, make_sky, to_image
+from repro.sensing.telescope import (
+    Station,
+    dirty_beam,
+    dirty_image,
+    measurement_matrix,
+    sky_grid,
+    tune_extent_for_gamma,
+    visibilities,
+)
+
+__all__ = [
+    "CSProblem",
+    "make_gaussian_problem",
+    "ascii_render",
+    "make_sky",
+    "to_image",
+    "Station",
+    "dirty_beam",
+    "dirty_image",
+    "measurement_matrix",
+    "sky_grid",
+    "tune_extent_for_gamma",
+    "visibilities",
+]

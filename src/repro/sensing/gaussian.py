@@ -1,0 +1,49 @@
+"""Gaussian toy problem (paper supplementary §10 / Fig. 11):
+Φ, e i.i.d. Gaussian; x s-sparse; sweep SNR; compare 2&8-bit vs 32-bit IHT."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class CSProblem:
+    phi: jax.Array
+    y: jax.Array
+    x_true: jax.Array
+    e: jax.Array
+    s: int
+
+
+def make_gaussian_problem(
+    m: int = 256,
+    n: int = 512,
+    s: int = 16,
+    snr_db: Optional[float] = 10.0,
+    key: Optional[jax.Array] = None,
+    x_dist: str = "gaussian",
+) -> CSProblem:
+    """Random dense-Gaussian CS instance (Φ_{ij} ~ N(0, 1), unit variance as in
+    supplementary §10; NIHT is scale-invariant so no column normalization)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    kphi, kx, kflux, ke = jax.random.split(key, 4)
+    phi = jax.random.normal(kphi, (m, n), jnp.float32)
+    idx = jax.random.choice(kx, n, (s,), replace=False)
+    if x_dist == "gaussian":
+        vals = jax.random.normal(kflux, (s,), jnp.float32)
+    elif x_dist == "signs":
+        vals = jnp.sign(jax.random.normal(kflux, (s,), jnp.float32))
+    else:
+        raise ValueError(x_dist)
+    x = jnp.zeros((n,), jnp.float32).at[idx].set(vals)
+    clean_y = phi @ x
+    if snr_db is None:
+        e = jnp.zeros((m,), jnp.float32)
+    else:
+        sig_pow = jnp.vdot(clean_y, clean_y)
+        sigma = jnp.sqrt(sig_pow / (10.0 ** (snr_db / 10.0)) / m)
+        e = sigma * jax.random.normal(ke, (m,), jnp.float32)
+    return CSProblem(phi=phi, y=clean_y + e, x_true=x, e=e, s=s)

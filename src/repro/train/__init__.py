@@ -1,0 +1,23 @@
+"""Training runtime: sharded steps, checkpointing, fault tolerance."""
+from repro.train.checkpoint import available_steps, latest_step, restore, restore_latest, save
+from repro.train.fault import PreemptionGuard, StepTimer, run_with_restarts
+from repro.train.loop import LoopConfig, train_loop
+from repro.train.state import TrainState
+from repro.train.steps import (
+    build_sharded_decode_step,
+    build_sharded_prefill,
+    build_sharded_train_step,
+    init_state,
+    make_train_step,
+    state_shardings,
+    train_input_specs,
+)
+
+__all__ = [
+    "available_steps", "latest_step", "restore", "restore_latest", "save",
+    "PreemptionGuard", "StepTimer", "run_with_restarts",
+    "LoopConfig", "train_loop", "TrainState",
+    "build_sharded_decode_step", "build_sharded_prefill",
+    "build_sharded_train_step", "init_state", "make_train_step",
+    "state_shardings", "train_input_specs",
+]

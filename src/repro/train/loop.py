@@ -1,0 +1,77 @@
+"""The training loop: checkpoint/restore, preemption, telemetry.
+
+Restart-safe by construction: state is a pure function of (seed, step) plus
+the newest complete checkpoint, and the data stream is counter-based (see
+repro.data.synthetic) — a restarted worker replays identically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+
+from repro.data.synthetic import SyntheticStream
+from repro.train import checkpoint as ckpt
+from repro.train.fault import PreemptionGuard, StepTimer
+from repro.train.state import TrainState
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    ckpt_keep: int = 3
+    ckpt_async: bool = True
+    log_every: int = 10
+
+
+def train_loop(
+    step_fn: Callable,
+    state: TrainState,
+    stream: SyntheticStream,
+    loop_cfg: LoopConfig,
+    *,
+    state_shardings=None,
+    log: Callable[[str], None] = print,
+) -> TrainState:
+    """Run (or resume) training. Returns the final state."""
+    start = 0
+    if loop_cfg.ckpt_dir:
+        restored, step = ckpt.restore_latest(
+            loop_cfg.ckpt_dir, jax.eval_shape(lambda: state), state_shardings
+        )
+        if restored is not None:
+            state = restored
+            start = step
+            log(f"[loop] resumed from checkpoint step {step}")
+
+    timer = StepTimer()
+    pending = None
+    with PreemptionGuard() as guard:
+        for step in range(start, loop_cfg.total_steps):
+            batch = stream.at_step(step)
+            state, metrics = step_fn(state, batch)
+            timer.tick()
+            if step % loop_cfg.log_every == 0:
+                log(f"[loop] step={step} loss={float(metrics['loss']):.4f} "
+                    f"gnorm={float(metrics['grad_norm']):.3f} "
+                    f"step_time={timer.mean*1e3:.1f}ms")
+            should_ckpt = loop_cfg.ckpt_dir and (
+                (step + 1) % loop_cfg.ckpt_every == 0 or guard.requested
+            )
+            if should_ckpt:
+                if pending is not None:
+                    pending.join()
+                pending = ckpt.save(
+                    loop_cfg.ckpt_dir, step + 1, state,
+                    keep=loop_cfg.ckpt_keep,
+                    async_=loop_cfg.ckpt_async and not guard.requested,
+                )
+            if guard.requested:
+                log(f"[loop] preemption: checkpointed at step {step + 1}, exiting")
+                break
+    if pending is not None:
+        pending.join()
+    return state

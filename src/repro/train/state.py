@@ -1,0 +1,15 @@
+"""Training state pytree."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+
+from repro.optim.adamw import AdamWState
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Any
+    opt: AdamWState
+    rng: jax.Array

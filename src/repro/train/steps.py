@@ -1,0 +1,286 @@
+"""Step builders: sharded train / prefill / decode programs + input specs.
+
+``build_train_step`` assembles loss→grad→(optional QSGD grad compression)→
+AdamW→(optional IHT projection) as one pjit program with explicit in/out
+shardings and donated state buffers. ``input_specs`` produces the
+ShapeDtypeStruct stand-ins the multi-pod dry-run lowers against (the same
+pattern shannon/kernels uses: weak-type-correct, shardable, no allocation).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim.adamw import Optimizer
+from repro.optim.iht import IHTConfig, maybe_project
+from repro.parallel.collectives import fake_grad_compression
+from repro.parallel.sharding import batch_spec, params_shardings
+from repro.quant.policy import QuantPolicy
+from repro.train.state import TrainState
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
+                    policy: QuantPolicy = QuantPolicy(),
+                    iht: Optional[IHTConfig] = None,
+                    constrain=None,
+                    accum_steps: int = 1):
+    """The pure function (state, batch) -> (state, metrics).
+
+    ``accum_steps > 1``: gradient accumulation over microbatches (scan) —
+    divides live activation memory by the accumulation factor at the cost of
+    re-streaming the weights per microbatch."""
+
+    def _grads(params, batch):
+        def loss_of(p):
+            return M.loss_fn(cfg, p, batch, policy=policy, constrain=constrain)
+
+        return jax.value_and_grad(loss_of)(params)
+
+    def step(state: TrainState, batch):
+        rng = jax.random.fold_in(state.rng, state.step)
+
+        if accum_steps > 1:
+            def split(leaf):
+                if leaf is None or leaf.ndim == 0:
+                    return leaf
+                b = leaf.shape[0]
+                return leaf.reshape((accum_steps, b // accum_steps) + leaf.shape[1:])
+
+            micro = {k: split(v) for k, v in batch.items()}
+
+            def acc(carry, mb):
+                loss_sum, g_sum = carry
+                l, g = _grads(state.params, mb)
+                g_sum = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32), g_sum, g)
+                return (loss_sum + l, g_sum), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss_sum, g_sum), _ = jax.lax.scan(acc, (jnp.zeros((), jnp.float32), g0),
+                                                micro)
+            loss = loss_sum / accum_steps
+            grads = jax.tree.map(lambda g: g / accum_steps, g_sum)
+        else:
+            loss, grads = _grads(state.params, batch)
+        if policy.grad_bits:
+            # unbiased b-bit compression of the cross-replica gradient payload
+            grads = fake_grad_compression(grads, policy.grad_bits, rng)
+        new_params, new_opt, om = optimizer.update(grads, state.opt, state.params)
+        if iht is not None:
+            new_params = maybe_project(new_params, new_opt.step, iht)
+        metrics = {"loss": loss, **om}
+        return TrainState(step=state.step + 1, params=new_params,
+                          opt=new_opt, rng=state.rng), metrics
+
+    return step
+
+
+def init_state(cfg: ModelConfig, optimizer: Optimizer, key: jax.Array) -> TrainState:
+    params = M.init_params(cfg, key)
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      opt=optimizer.init(params), rng=key)
+
+
+# ---------------------------------------------------------------------------
+# sharded (pjit) builders
+
+
+def state_shardings(state_abs, mesh: Mesh) -> TrainState:
+    """Shardings for a TrainState: params rules; moments follow params."""
+    p_sh = params_shardings(state_abs.params, mesh)
+    rep = NamedSharding(mesh, P())
+    return TrainState(
+        step=rep,
+        params=p_sh,
+        opt=type(state_abs.opt)(step=rep,
+                                mu=params_shardings(state_abs.opt.mu, mesh),
+                                nu=params_shardings(state_abs.opt.nu, mesh)),
+        rng=rep,
+    )
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, global_batch: int, with_memory: bool):
+    tok = NamedSharding(mesh, batch_spec(mesh, global_batch, 2))
+    out = {"tokens": tok, "labels": tok, "memory": None}
+    if with_memory:
+        out["memory"] = NamedSharding(mesh, batch_spec(mesh, global_batch, 3))
+    return out
+
+
+def build_sharded_train_step(cfg: ModelConfig, mesh: Mesh, optimizer: Optimizer,
+                             global_batch: int,
+                             policy: QuantPolicy = QuantPolicy(),
+                             iht: Optional[IHTConfig] = None,
+                             seq_parallel: bool = True,
+                             accum_steps: int = 1):
+    """jit-with-shardings train step for lowering or execution.
+
+    ``seq_parallel``: shard the residual-stream activations' sequence dim over
+    the `model` axis at period boundaries (Megatron-style sequence parallelism)
+    — these are the remat-stored tensors, so this divides the activation
+    footprint by the TP degree."""
+    constrain = None
+    if seq_parallel and "model" in mesh.axis_names:
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        sp = NamedSharding(mesh, P(dp if dp else None, "model", None))
+
+        def constrain(x):
+            if x.ndim == 3 and x.shape[1] % mesh.shape["model"] == 0 and (
+                not dp or x.shape[0] % __import__("numpy").prod([mesh.shape[a] for a in dp]) == 0
+            ):
+                return jax.lax.with_sharding_constraint(x, sp)
+            return x
+
+    step_fn = make_train_step(cfg, optimizer, policy, iht, constrain=constrain,
+                              accum_steps=accum_steps)
+    key = jax.random.PRNGKey(0)
+    state_abs = jax.eval_shape(lambda: init_state(cfg, optimizer, key))
+    st_sh = state_shardings(state_abs, mesh)
+    with_mem = cfg.family in ("encdec", "vlm")
+    b_sh = batch_shardings(cfg, mesh, global_batch, with_mem)
+    rep = NamedSharding(mesh, P())
+    metric_sh = {"loss": rep, "grad_norm": rep, "lr": rep}
+    return jax.jit(
+        step_fn,
+        in_shardings=(st_sh, b_sh),
+        out_shardings=(st_sh, metric_sh),
+        donate_argnums=(0,),
+    ), st_sh
+
+
+def build_sharded_decode_step(cfg: ModelConfig, mesh: Mesh, global_batch: int,
+                              cache_len: int,
+                              policy: QuantPolicy = QuantPolicy(),
+                              serve_sharding: str = "train",
+                              serve_dtype: str = "float32"):
+    """jit-with-shardings one-token serve step (token, cache, params)."""
+
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    kv_sh = NamedSharding(mesh, P(dp if dp else None, None, None, None))
+
+    def constrain_kv(a):
+        if a.ndim == 4 and (not dp or a.shape[0] % int(
+                __import__("numpy").prod([mesh.shape[x] for x in dp])) == 0):
+            return jax.lax.with_sharding_constraint(a, kv_sh)
+        return a
+
+    def step(params, token, cache, position):
+        return M.decode_step(cfg, params, token, cache, policy=policy,
+                             position=position, constrain_kv=constrain_kv)
+
+    params_abs = serve_params_abstract(cfg, policy, serve_dtype)
+    p_sh = params_shardings(params_abs, mesh, mode=serve_sharding)
+    mem_len = _mem_len(cfg)
+    cache_abs = jax.eval_shape(
+        lambda: M.init_cache(cfg, global_batch, cache_len, policy, mem_len=mem_len)
+    )
+    c_sh = cache_shardings(cache_abs, mesh, global_batch)
+    rep = NamedSharding(mesh, P())
+    tok_sh = NamedSharding(mesh, batch_spec(mesh, global_batch, 1))
+    logit_sh = NamedSharding(mesh, batch_spec(mesh, global_batch, 2))
+    return jax.jit(
+        step,
+        in_shardings=(p_sh, tok_sh, c_sh, rep),
+        out_shardings=(logit_sh, c_sh),
+        donate_argnums=(2,),
+    ), (p_sh, tok_sh, c_sh)
+
+
+def serve_params_abstract(cfg: ModelConfig, policy: QuantPolicy,
+                          serve_dtype: str = "float32"):
+    """Abstract serving params: optionally bf16-cast, optionally weight-quantized
+    (the paper's low-precision representation of the streamed operand)."""
+    key = jax.random.PRNGKey(0)
+    params_abs = jax.eval_shape(lambda: M.init_params(cfg, key))
+    if serve_dtype != "float32":
+        dt = jnp.dtype(serve_dtype)
+        params_abs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, dt if s.dtype == jnp.float32 else s.dtype),
+            params_abs,
+        )
+    if policy.weight_bits:
+        from repro.models.quantized import quantize_params
+
+        params_abs = jax.eval_shape(
+            lambda: quantize_params(
+                jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params_abs),
+                policy.weight_bits,
+            )
+        )
+    return params_abs
+
+
+def build_sharded_prefill(cfg: ModelConfig, mesh: Mesh, global_batch: int,
+                          seq_len: int,
+                          policy: QuantPolicy = QuantPolicy(),
+                          serve_sharding: str = "train",
+                          serve_dtype: str = "float32"):
+    def run(params, tokens, cache, memory):
+        return M.prefill(cfg, params, tokens, cache, policy=policy, memory=memory)
+
+    params_abs = serve_params_abstract(cfg, policy, serve_dtype)
+    p_sh = params_shardings(params_abs, mesh, mode=serve_sharding)
+    mem_len = _mem_len(cfg)
+    cache_abs = jax.eval_shape(
+        lambda: M.init_cache(cfg, global_batch, seq_len, policy, mem_len=mem_len)
+    )
+    c_sh = cache_shardings(cache_abs, mesh, global_batch)
+    tok_sh = NamedSharding(mesh, batch_spec(mesh, global_batch, 2))
+    mem_sh = NamedSharding(mesh, batch_spec(mesh, global_batch, 3))
+    logit_sh = NamedSharding(mesh, batch_spec(mesh, global_batch, 2))
+    return jax.jit(
+        run,
+        in_shardings=(p_sh, tok_sh, c_sh, mem_sh if _mem_len(cfg) else None),
+        out_shardings=(logit_sh, c_sh),
+        donate_argnums=(2,),
+    ), (p_sh, tok_sh, c_sh)
+
+
+def _mem_len(cfg: ModelConfig) -> int:
+    if cfg.family == "encdec":
+        return cfg.encoder_seq
+    if cfg.family == "vlm":
+        return cfg.n_image_tokens
+    return 0
+
+
+def cache_shardings(cache_abs, mesh: Mesh, global_batch: int):
+    """Caches: batch over DP axes; kv-heads/state heads over model when
+    divisible (falls back automatically via batch_spec/dim checks)."""
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        # leading dim may be the scan stack (n_periods) — batch dim is where
+        # size == global_batch
+        spec = [None] * leaf.ndim
+        for i, d in enumerate(leaf.shape):
+            if d == global_batch:
+                bs = batch_spec(mesh, global_batch, 1)
+                spec[i] = bs[0] if bs else None
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, cache_abs)
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs (ShapeDtypeStruct stand-ins; no allocation)
+
+
+def train_input_specs(cfg: ModelConfig, mesh: Mesh, global_batch: int, seq: int):
+    tok = jax.ShapeDtypeStruct((global_batch, seq), jnp.int32)
+    batch = {"tokens": tok, "labels": tok}
+    if cfg.family in ("encdec", "vlm"):
+        batch["memory"] = jax.ShapeDtypeStruct(
+            (global_batch, _mem_len(cfg), cfg.d_model), jnp.float32
+        )
+    else:
+        batch["memory"] = None
+    return batch

@@ -1,0 +1,73 @@
+"""Tests for the comparison algorithms (paper Fig. 4 / Fig. 9 baselines)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clean, cosamp, fista_l1, iht, relative_error, spectral_norm, support_recovery
+from repro.sensing import (
+    Station,
+    dirty_beam,
+    dirty_image,
+    make_gaussian_problem,
+    make_sky,
+    measurement_matrix,
+    visibilities,
+)
+
+
+class TestIHT:
+    def test_noiseless_recovery(self):
+        prob = make_gaussian_problem(128, 256, 8, snr_db=None, key=jax.random.PRNGKey(0))
+        x, resid = iht(prob.phi, prob.y, prob.s, n_iters=150)
+        assert float(relative_error(x, prob.x_true)) < 1e-3
+
+    def test_residual_finite_and_shrinking(self):
+        prob = make_gaussian_problem(64, 128, 4, snr_db=20.0, key=jax.random.PRNGKey(1))
+        x, resid = iht(prob.phi, prob.y, prob.s, n_iters=100)
+        r = np.asarray(resid)
+        assert np.isfinite(r).all() and r[-1] < r[0]
+
+
+class TestCoSaMP:
+    def test_noiseless_recovery(self):
+        prob = make_gaussian_problem(128, 256, 8, snr_db=None, key=jax.random.PRNGKey(2))
+        x, _ = cosamp(prob.phi, prob.y, prob.s, n_iters=15)
+        assert float(relative_error(x, prob.x_true)) < 1e-3
+
+    def test_noisy_support(self):
+        prob = make_gaussian_problem(128, 256, 8, snr_db=20.0, key=jax.random.PRNGKey(3))
+        x, _ = cosamp(prob.phi, prob.y, prob.s, n_iters=15)
+        assert float(support_recovery(x, prob.x_true, prob.s)) >= 0.8
+
+
+class TestFISTA:
+    def test_support_recovery(self):
+        prob = make_gaussian_problem(128, 256, 8, snr_db=25.0, key=jax.random.PRNGKey(4))
+        x, _ = fista_l1(prob.phi, prob.y, n_iters=300)
+        assert float(support_recovery(x, prob.x_true, prob.s)) >= 0.8
+
+    def test_spectral_norm_power_iteration(self):
+        a = jax.random.normal(jax.random.PRNGKey(5), (40, 60))
+        est = float(spectral_norm(a, iters=60))
+        true = float(jnp.linalg.svd(a, compute_uv=False)[0])
+        assert abs(est - true) / true < 1e-3
+
+
+class TestCLEAN:
+    def test_clean_reduces_residual_and_finds_sources(self):
+        st = Station(n_antennas=20)
+        r = 32
+        phi = measurement_matrix(st, r, extent=1.5)
+        key = jax.random.PRNGKey(6)
+        x = make_sky(r, 5, key, min_sep=5)
+        y, _ = visibilities(phi, x, 20.0, key)
+        di = dirty_image(phi, y, r)
+        db = dirty_beam(phi, r)
+        comps, resid, peaks = clean(di, db, gain=0.2, n_iters=150)
+        p = np.asarray(peaks)
+        assert p[-1] < p[0]
+        # the strongest CLEAN component should sit on (or next to) a true source
+        ci = int(jnp.argmax(jnp.abs(comps)))
+        ti = np.argwhere(np.asarray(x.reshape(r, r)) > 0)
+        dist = np.min(np.max(np.abs(ti - np.array([ci // r, ci % r])), axis=1))
+        assert dist <= 1

@@ -1,0 +1,109 @@
+"""Dry-run machinery tests, scaled to CI: lower+compile smoke configs on a
+small host-device mesh in a subprocess (the production 512-device sweep runs
+via scripts/run_dryruns.py; this validates the same code path)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_SCRIPT = r"""
+import os
+# importing repro.launch.dryrun sets XLA_FLAGS to 512 placeholder devices (its
+# production default); import it FIRST, then pin the CI-sized count before the
+# first jax device query locks the backend.
+from repro.launch.dryrun import collective_bytes_from_hlo, _cost_analysis, _serve_abstracts
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.configs import get_smoke_config
+from repro.optim import adamw
+from repro.quant.policy import QuantPolicy, W4KV8
+from repro.train.steps import (
+    build_sharded_decode_step, build_sharded_prefill, build_sharded_train_step,
+    init_state, train_input_specs,
+)
+from repro.models import model as M
+
+mesh = Mesh(np.array(jax.devices()).reshape(2, 2, 2), ("pod", "data", "model"))
+
+# --- train step lowers, compiles, reports cost + collectives -------------
+cfg = get_smoke_config("starcoder2_3b")
+opt = adamw(1e-3)
+step, st_sh = build_sharded_train_step(cfg, mesh, opt, global_batch=8)
+state_abs = jax.eval_shape(lambda: init_state(cfg, opt, jax.random.PRNGKey(0)))
+batch_abs = train_input_specs(cfg, mesh, 8, 32)
+lowered = step.lower(state_abs, batch_abs)
+compiled = lowered.compile()
+cost = _cost_analysis(compiled)
+assert cost.get("flops", 0) > 0, cost
+coll = collective_bytes_from_hlo(compiled.as_text(), loop_trip=2)
+assert coll["total"] > 0, coll     # DP gradient sync must appear
+
+# --- decode step with quantized weights lowers on the multi-pod mesh -----
+cfg2 = get_smoke_config("qwen1_5_32b")
+dstep, _ = build_sharded_decode_step(cfg2, mesh, global_batch=8, cache_len=64,
+                                     policy=W4KV8)
+params_abs, cache_abs, _ = _serve_abstracts(cfg2, W4KV8, 8, 64)
+tok = jax.ShapeDtypeStruct((8,), jnp.int32)
+pos = jax.ShapeDtypeStruct((), jnp.int32)
+dcomp = dstep.lower(params_abs, tok, cache_abs, pos).compile()
+assert _cost_analysis(dcomp).get("flops", 0) > 0
+
+# --- ssm decode (attention-free) lowers too -------------------------------
+cfg3 = get_smoke_config("mamba2_370m")
+sstep, _ = build_sharded_decode_step(cfg3, mesh, global_batch=8, cache_len=64)
+p_abs, c_abs, _ = _serve_abstracts(cfg3, QuantPolicy(), 8, 64)
+scomp = sstep.lower(p_abs, tok, c_abs, pos).compile()
+print("DRYRUN_SMALL_OK")
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_small_mesh_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    res = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=560, cwd=_ROOT)
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "DRYRUN_SMALL_OK" in res.stdout
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import _shape_bytes, collective_bytes_from_hlo
+
+    assert _shape_bytes("f32[16,4]") == 256
+    assert _shape_bytes("bf16[8]{0}") == 16
+    assert _shape_bytes("(f32[4], s32[2])") == 24
+    hlo = """
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %ar = f32[8]{0} all-reduce(%a), replica_groups={}
+  ROOT %r = f32[8] copy(%ar)
+}
+%while_body.1 (p: f32[4]) -> f32[4] {
+  %ag = f32[4]{0} all-gather(%p), dimensions={0}
+}
+"""
+    out = collective_bytes_from_hlo(hlo, loop_trip=10)
+    assert out["all-reduce"] == 32
+    assert out["all-gather"] == 16 * 10  # body multiplied by trip count
+    assert out["op_count"] == 2
+
+
+def test_applicability_matrix():
+    from repro.configs import ARCH_IDS, applicable, get_config
+    from repro.configs.shapes import ALL_SHAPES
+
+    runnable = 0
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in ALL_SHAPES:
+            ok, why = applicable(cfg, shape)
+            if ok:
+                runnable += 1
+            else:
+                assert shape.name == "long_500k" and why
+    # 10 archs x 4 shapes - 8 long_500k skips (only ssm + hybrid run it)
+    assert runnable == 32

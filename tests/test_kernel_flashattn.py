@@ -1,0 +1,87 @@
+"""Pallas flash attention: interpret-mode allclose sweeps vs the naive oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.flashattn.ops import flash_attention
+from repro.kernels.flashattn.ref import attention_ref
+
+
+def _rand_qkv(key, b, hq, hkv, sq, sk, d, dtype=jnp.float32):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, hq, sq, d)).astype(dtype)
+    k = jax.random.normal(kk, (b, hkv, sk, d)).astype(dtype)
+    v = jax.random.normal(kv, (b, hkv, sk, d)).astype(dtype)
+    return q, k, v
+
+
+class TestFlashVsOracle:
+    @given(
+        causal=st.booleans(),
+        b=st.integers(1, 3),
+        h=st.sampled_from([1, 2, 4]),
+        s_blocks=st.integers(1, 4),
+        d=st.sampled_from([32, 64]),
+        seed=st.integers(0, 99),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_shape_sweep(self, causal, b, h, s_blocks, d, seed):
+        s = 64 * s_blocks
+        q, k, v = _rand_qkv(jax.random.PRNGKey(seed), b, h, h, s, s, d)
+        out = flash_attention(q, k, v, causal=causal, use_pallas=True,
+                              interpret=True, block_q=64, block_k=64)
+        ref = flash_attention(q, k, v, causal=causal, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("hq,hkv", [(4, 1), (4, 2), (8, 8)])
+    def test_gqa_ratios(self, hq, hkv):
+        q, k, v = _rand_qkv(jax.random.PRNGKey(0), 2, hq, hkv, 128, 128, 64)
+        out = flash_attention(q, k, v, causal=True, use_pallas=True,
+                              interpret=True, block_q=64, block_k=64)
+        ref = flash_attention(q, k, v, causal=True, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        q, k, v = _rand_qkv(jax.random.PRNGKey(1), 1, 2, 2, 128, 128, 64, dtype)
+        out = flash_attention(q, k, v, causal=True, use_pallas=True,
+                              interpret=True, block_q=64, block_k=64)
+        ref = flash_attention(q, k, v, causal=True, use_pallas=False)
+        assert out.dtype == dtype
+        np.testing.assert_allclose(
+            np.asarray(out, jnp.float32), np.asarray(ref, jnp.float32), rtol=2e-2, atol=2e-2
+        )
+
+    def test_cross_attention_longer_kv(self):
+        """Sq != Sk (decode/cross-attn shape), non-causal."""
+        q, k, v = _rand_qkv(jax.random.PRNGKey(2), 2, 2, 2, 64, 256, 32)
+        out = flash_attention(q, k, v, causal=False, use_pallas=True,
+                              interpret=True, block_q=64, block_k=64)
+        ref = flash_attention(q, k, v, causal=False, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+class TestSemantics:
+    def test_causality(self):
+        """Changing future keys must not change causal outputs."""
+        q, k, v = _rand_qkv(jax.random.PRNGKey(3), 1, 1, 1, 128, 128, 32)
+        out1 = flash_attention(q, k, v, causal=True, use_pallas=True,
+                               interpret=True, block_q=64, block_k=64)
+        k2 = k.at[:, :, 100:].set(99.0)
+        v2 = v.at[:, :, 100:].set(-99.0)
+        out2 = flash_attention(q, k2, v2, causal=True, use_pallas=True,
+                               interpret=True, block_q=64, block_k=64)
+        np.testing.assert_allclose(
+            np.asarray(out1[:, :, :100]), np.asarray(out2[:, :, :100]), rtol=1e-5, atol=1e-5
+        )
+
+    def test_softmax_rows_convex(self):
+        """Each output row is a convex combination of V rows (bounded by V range)."""
+        q, k, v = _rand_qkv(jax.random.PRNGKey(4), 1, 1, 1, 64, 64, 16)
+        out = flash_attention(q, k, v, causal=False, use_pallas=True,
+                              interpret=True, block_q=64, block_k=64)
+        assert float(out.max()) <= float(v.max()) + 1e-4
+        assert float(out.min()) >= float(v.min()) - 1e-4

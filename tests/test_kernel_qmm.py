@@ -1,0 +1,124 @@
+"""Pallas qmm kernel: interpret-mode allclose sweeps against the ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.qmm.ops import (
+    pack_operator,
+    pack_weights,
+    packed_matvec,
+    packed_rmatvec,
+    qmm,
+)
+from repro.kernels.qmm.ref import qmm_ref
+from repro.quant import fake_quantize
+
+BITS = [2, 4, 8]
+
+
+class TestQmmVsOracle:
+    @given(
+        bits=st.sampled_from(BITS),
+        m=st.integers(1, 40),
+        k=st.integers(1, 300),
+        n=st.integers(1, 150),
+        seed=st.integers(0, 1000),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_shape_sweep(self, bits, m, k, n, seed):
+        key = jax.random.PRNGKey(seed)
+        x = jax.random.normal(key, (m, k), jnp.float32)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (n, k), jnp.float32)
+        pw = pack_weights(w, bits, jax.random.fold_in(key, 2))
+        ref = qmm_ref(x, pw.packed, pw.scale, bits, k)
+        out = qmm(x, pw, use_pallas=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-4)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("bits", BITS)
+    def test_dtype_sweep(self, dtype, bits):
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (16, 256)).astype(dtype)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (64, 256), jnp.float32)
+        pw = pack_weights(w, bits, jax.random.fold_in(key, 2))
+        ref = qmm_ref(x, pw.packed, pw.scale, bits, 256)
+        out = qmm(x, pw, use_pallas=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-2, atol=1e-2)
+
+    @pytest.mark.parametrize("bits", BITS)
+    def test_exact_block_multiple_shapes(self, bits):
+        key = jax.random.PRNGKey(1)
+        x = jax.random.normal(key, (128, 512), jnp.float32)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (128, 512), jnp.float32)
+        pw = pack_weights(w, bits, jax.random.fold_in(key, 2))
+        ref = qmm_ref(x, pw.packed, pw.scale, bits, 512)
+        out = qmm(x, pw, use_pallas=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-4)
+
+
+class TestQmmSemantics:
+    @pytest.mark.parametrize("bits", BITS)
+    def test_matches_dequantized_matmul(self, bits):
+        """qmm == x @ Q(w)^T where Q is the framework quantizer (per-channel)."""
+        key = jax.random.PRNGKey(2)
+        x = jax.random.normal(key, (8, 100), jnp.float32)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (32, 100), jnp.float32)
+        kq = jax.random.fold_in(key, 2)
+        pw = pack_weights(w, bits, kq)
+        out = qmm(x, pw, use_pallas=False)
+        w_deq = fake_quantize(w, bits, kq, channel_axis=0)
+        ref = x @ w_deq.T
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+    def test_8bit_quantization_error_small(self):
+        key = jax.random.PRNGKey(3)
+        x = jax.random.normal(key, (8, 128), jnp.float32)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (32, 128), jnp.float32)
+        pw = pack_weights(w, 8, jax.random.fold_in(key, 2))
+        exact = x @ w.T
+        out = qmm(x, pw, use_pallas=True, interpret=True)
+        rel = float(jnp.linalg.norm(out - exact) / jnp.linalg.norm(exact))
+        assert rel < 0.05
+
+    def test_compression_bytes(self):
+        w = jax.random.normal(jax.random.PRNGKey(4), (64, 512), jnp.float32)
+        assert pack_weights(w, 2).nbytes == 64 * 128   # 16x vs f32
+        assert pack_weights(w, 4).nbytes == 64 * 256   # 8x
+        assert pack_weights(w, 8).nbytes == 64 * 512   # 4x
+
+
+class TestPackedOperator:
+    @pytest.mark.parametrize("bits", BITS)
+    def test_complex_matvec_adjoint_consistency(self, bits):
+        """<Φ̂x, r> == <x, Φ̂†r> exactly when fwd/adj share one deterministic
+        quantization. (With stochastic keys the two orientations are
+        *independent* quantizations by design — Algorithm 1's pairing — and the
+        identity only holds in expectation.)"""
+        key = jax.random.PRNGKey(5)
+        phi = (
+            jax.random.normal(key, (24, 48)) + 1j * jax.random.normal(jax.random.fold_in(key, 1), (24, 48))
+        ).astype(jnp.complex64)
+        op = pack_operator(phi, bits, key=None)
+        x = jax.random.normal(jax.random.fold_in(key, 3), (48,), jnp.float32)
+        r = (
+            jax.random.normal(jax.random.fold_in(key, 4), (24,))
+            + 1j * jax.random.normal(jax.random.fold_in(key, 5), (24,))
+        ).astype(jnp.complex64)
+        lhs = jnp.vdot(packed_matvec(op, x), r)
+        rhs = jnp.vdot(x.astype(jnp.complex64), packed_rmatvec(op, r))
+        denom = max(float(jnp.abs(lhs)), 1e-6)
+        assert float(jnp.abs(lhs - rhs)) / denom < 1e-4
+
+    def test_interpret_matches_ref_path(self):
+        key = jax.random.PRNGKey(6)
+        phi = (
+            jax.random.normal(key, (30, 70)) + 1j * jax.random.normal(jax.random.fold_in(key, 1), (30, 70))
+        ).astype(jnp.complex64)
+        op = pack_operator(phi, 4, jax.random.fold_in(key, 2))
+        x = jax.random.normal(jax.random.fold_in(key, 3), (70,), jnp.float32)
+        a = packed_matvec(op, x, use_pallas=True, interpret=True)
+        b = packed_matvec(op, x, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)

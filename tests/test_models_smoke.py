@@ -1,0 +1,156 @@
+"""Per-architecture smoke tests: REDUCED same-family configs, one forward +
+one train-style loss/grad step + serve consistency, on CPU.
+
+(The FULL assigned configs are exercised only via the dry-run —
+ShapeDtypeStruct lowering, no allocation.)
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import (
+    decode_step,
+    encode,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    param_bytes,
+    prefill,
+    quantize_params,
+)
+from repro.quant.policy import QuantPolicy
+
+KEY = jax.random.PRNGKey(0)
+POL = QuantPolicy()
+
+
+def _batch(cfg, b=2, s=16, with_mem=True):
+    tokens = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    memory = None
+    if with_mem and cfg.family == "encdec":
+        memory = jax.random.normal(KEY, (b, cfg.encoder_seq, cfg.d_model))
+    elif with_mem and cfg.family == "vlm":
+        memory = jax.random.normal(KEY, (b, cfg.n_image_tokens, cfg.d_model))
+    return tokens, memory
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestArchSmoke:
+    def test_forward_shapes_and_finite(self, arch):
+        cfg = get_smoke_config(arch)
+        params = init_params(cfg, KEY)
+        tokens, memory = _batch(cfg)
+        if cfg.family == "encdec":
+            memory = encode(cfg, params, memory, POL)
+        logits, _ = forward(cfg, params, tokens, memory=memory)
+        assert logits.shape == (2, 16, cfg.padded_vocab)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_train_step_grads(self, arch):
+        cfg = get_smoke_config(arch)
+        params = init_params(cfg, KEY)
+        tokens, memory = _batch(cfg)   # enc-dec: raw frames (loss_fn encodes)
+        batch = {"tokens": tokens, "labels": tokens, "memory": memory}
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, batch))(params)
+        assert bool(jnp.isfinite(loss))
+        gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                             for g in jax.tree_util.tree_leaves(grads)))
+        assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
+
+    def test_serve_consistency(self, arch):
+        """prefill+decode logits match teacher-forced forward (capacity-drop-free
+        MoE config to make routing deterministic across paths)."""
+        cfg = get_smoke_config(arch)
+        if cfg.n_experts:
+            cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0)
+        params = init_params(cfg, KEY)
+        b, s = 2, 16
+        tokens = jax.random.randint(KEY, (b, s + 1), 0, cfg.vocab_size)
+        memory = None
+        if cfg.family == "encdec":
+            frames = jax.random.normal(KEY, (b, cfg.encoder_seq, cfg.d_model))
+            memory = encode(cfg, params, frames, POL)
+        elif cfg.family == "vlm":
+            memory = jax.random.normal(KEY, (b, cfg.n_image_tokens, cfg.d_model))
+        logits_full, _ = forward(cfg, params, tokens, memory=memory)
+        mem_len = memory.shape[1] if memory is not None else 0
+        cache = init_cache(cfg, b, s + 8, POL, mem_len=mem_len)
+        lp, cache = prefill(cfg, params, tokens[:, :s], cache, memory=memory, policy=POL)
+        ld, _ = decode_step(cfg, params, tokens[:, s], cache, policy=POL,
+                            position=jnp.asarray(s))
+        scale = float(jnp.max(jnp.abs(logits_full))) + 1e-9
+        assert float(jnp.max(jnp.abs(lp - logits_full[:, s - 1]))) / scale < 2e-2
+        assert float(jnp.max(jnp.abs(ld - logits_full[:, s]))) / scale < 2e-2
+
+    def test_full_config_matches_assignment(self, arch):
+        """The FULL config carries the exact assigned dimensions."""
+        cfg = get_config(arch)
+        assigned = {
+            "qwen1_5_32b": (64, 5120, 40, 40, 27392, 152064),
+            "starcoder2_3b": (30, 3072, 24, 2, 12288, 49152),
+            "minitron_4b": (32, 3072, 24, 8, 9216, 256000),
+            "stablelm_12b": (40, 5120, 32, 8, 13824, 100352),
+            "mamba2_370m": (48, 1024, 0, 0, 0, 50280),
+            "whisper_tiny": (4, 384, 6, 6, 1536, 51865),
+            "recurrentgemma_2b": (26, 2560, 10, 1, 7680, 256000),
+            "llama32_vision_11b": (40, 4096, 32, 8, 14336, 128256),
+            "qwen3_moe_30b": (48, 2048, 32, 4, 768, 151936),
+            "qwen3_moe_235b": (94, 4096, 64, 4, 1536, 151936),
+        }[arch]
+        got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+               cfg.d_ff, cfg.vocab_size)
+        assert got == assigned
+
+
+class TestWeightQuantization:
+    """The paper's technique as a serving feature (per-arch weight quant)."""
+
+    @pytest.mark.parametrize("arch", ["qwen1_5_32b", "qwen3_moe_30b", "mamba2_370m"])
+    def test_quantized_forward_error_scaling(self, arch):
+        """8-bit output error is small, and the 4-bit error scales like the
+        step-size ratio 2^(8-4) = 16 (the Lemma-4 law at the logits level).
+        Tiny smoke widths (d=64) make absolute errors large — the *scaling*
+        is the meaningful invariant."""
+        cfg = get_smoke_config(arch)
+        params = init_params(cfg, KEY)
+        tokens, _ = _batch(cfg, with_mem=False)
+        lf, _ = forward(cfg, params, tokens)
+
+        def rel(bits):
+            lq, _ = forward(cfg, quantize_params(params, bits), tokens)
+            return float(jnp.linalg.norm(lq - lf) / (jnp.linalg.norm(lf) + 1e-9))
+
+        r8, r4 = rel(8), rel(4)
+        assert r8 < 0.08
+        assert r4 < 0.75
+        assert 4.0 < r4 / max(r8, 1e-9) < 64.0  # ~16x expected
+
+    def test_quantized_bytes_shrink(self):
+        """Stored bytes drop with bits (embedding stays f32 → the floor)."""
+        cfg = get_smoke_config("qwen1_5_32b")
+        params = init_params(cfg, KEY)
+        base = param_bytes(params)
+        b8 = param_bytes(quantize_params(params, 8))
+        b4 = param_bytes(quantize_params(params, 4))
+        b2 = param_bytes(quantize_params(params, 2))
+        assert b8 < 0.45 * base
+        assert b4 < b8 and b4 < 0.36 * base
+        assert b2 < b4 and b2 < 0.31 * base
+
+    def test_param_counts_match_family_size(self):
+        """Full-config param counts are in the advertised ballpark."""
+        approx = {
+            "qwen1_5_32b": 32e9,
+            "qwen3_moe_30b": 30e9,
+            "qwen3_moe_235b": 235e9,
+            "mamba2_370m": 0.37e9,
+            "recurrentgemma_2b": 2.7e9,
+        }
+        for arch, target in approx.items():
+            n = get_config(arch).param_count()
+            assert 0.5 * target < n < 1.7 * target, (arch, n, target)

@@ -1,0 +1,120 @@
+"""System-behaviour tests for NIHT / QNIHT (the paper's Algorithm 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    eps_q,
+    eps_s,
+    niht,
+    qniht,
+    relative_error,
+    rics_sampled,
+    support_recovery,
+    theorem3_bound,
+)
+from repro.sensing import make_gaussian_problem
+
+
+class TestNIHT:
+    def test_noiseless_exact_recovery(self):
+        prob = make_gaussian_problem(128, 256, 8, snr_db=None, key=jax.random.PRNGKey(0))
+        res = niht(prob.phi, prob.y, prob.s, n_iters=60)
+        assert float(relative_error(res.x, prob.x_true)) < 1e-4
+        assert float(support_recovery(res.x, prob.x_true, prob.s)) == 1.0
+
+    def test_noisy_recovery(self):
+        prob = make_gaussian_problem(128, 256, 8, snr_db=20.0, key=jax.random.PRNGKey(1))
+        res = niht(prob.phi, prob.y, prob.s, n_iters=60)
+        assert float(relative_error(res.x, prob.x_true)) < 0.1
+
+    def test_support_invariant(self):
+        """||x^[n]||_0 <= s at every iteration (H_s projection invariant)."""
+        prob = make_gaussian_problem(64, 128, 5, snr_db=15.0, key=jax.random.PRNGKey(2))
+        res = niht(prob.phi, prob.y, prob.s, n_iters=30)
+        assert int(jnp.sum(jnp.abs(res.x) > 0)) <= prob.s
+
+    def test_residual_decreases(self):
+        """The quantized-cost trace should be (weakly) decreasing overall."""
+        prob = make_gaussian_problem(128, 256, 8, snr_db=25.0, key=jax.random.PRNGKey(3))
+        res = niht(prob.phi, prob.y, prob.s, n_iters=40)
+        r = np.asarray(res.trace.resid_q)
+        assert r[-1] <= r[0]
+        # allow small non-monotonic blips, require 90% of steps non-increasing
+        frac = np.mean(np.diff(r) <= 1e-4 * r[0])
+        assert frac > 0.9
+
+    def test_scale_invariance(self):
+        """NIHT is scale-invariant in Phi (Remark 1): scaling Phi & y together
+        changes nothing; scaling only Phi rescales x by 1/scale."""
+        prob = make_gaussian_problem(96, 192, 6, snr_db=None, key=jax.random.PRNGKey(4))
+        res1 = niht(prob.phi, prob.y, prob.s, n_iters=50)
+        res2 = niht(prob.phi * 7.5, prob.y * 7.5, prob.s, n_iters=50)
+        np.testing.assert_allclose(
+            np.asarray(res1.x), np.asarray(res2.x), rtol=1e-3, atol=1e-5
+        )
+
+    @given(seed=st.integers(0, 30))
+    @settings(max_examples=8, deadline=None)
+    def test_backtracking_accepts(self, seed):
+        """Property: the accepted step never leaves the run in a divergent state
+        (residual stays finite, support stays <= s)."""
+        prob = make_gaussian_problem(48, 96, 4, snr_db=10.0, key=jax.random.PRNGKey(seed))
+        res = niht(prob.phi, prob.y, prob.s, n_iters=15)
+        assert np.isfinite(np.asarray(res.trace.resid_q)).all()
+        assert int(jnp.sum(jnp.abs(res.x) > 0)) <= prob.s
+
+
+class TestQNIHT:
+    def test_8bit_matches_full_precision(self):
+        prob = make_gaussian_problem(128, 256, 8, snr_db=25.0, key=jax.random.PRNGKey(5))
+        r32 = niht(prob.phi, prob.y, prob.s, n_iters=40)
+        r8 = qniht(prob.phi, prob.y, prob.s, n_iters=40, bits_phi=8, bits_y=8,
+                   key=jax.random.PRNGKey(6))
+        e32 = float(relative_error(r32.x, prob.x_true))
+        e8 = float(relative_error(r8.x, prob.x_true))
+        assert e8 < e32 + 0.05  # negligible loss (paper Fig. 11)
+
+    def test_requires_key(self):
+        prob = make_gaussian_problem(32, 64, 3, key=jax.random.PRNGKey(7))
+        with pytest.raises(ValueError):
+            qniht(prob.phi, prob.y, prob.s, bits_phi=4)
+
+    def test_pair_vs_fixed_modes_run(self):
+        prob = make_gaussian_problem(64, 128, 4, snr_db=20.0, key=jax.random.PRNGKey(8))
+        for mode in ("pair", "fixed"):
+            res = qniht(prob.phi, prob.y, prob.s, n_iters=20, bits_phi=4, bits_y=8,
+                        key=jax.random.PRNGKey(9), requantize=mode)
+            assert np.isfinite(np.asarray(res.trace.resid_true)).all()
+
+    def test_theorem3_bound_holds(self):
+        """E||x^ - x^s|| <= 2^-n ||x^s|| + 10 eps_s + 5 eps_q  (Theorem 3).
+        Statistical check with sampled RICs on a well-conditioned instance."""
+        key = jax.random.PRNGKey(10)
+        prob = make_gaussian_problem(256, 384, 4, snr_db=25.0, key=key)
+        _, beta = rics_sampled(prob.phi, 2 * prob.s, 16, key)
+        n_iters = 25
+        res = qniht(prob.phi, prob.y, prob.s, n_iters=n_iters, bits_phi=8, bits_y=8, key=key)
+        err = float(jnp.linalg.norm(res.x - prob.x_true))
+        e_norm = float(jnp.linalg.norm(prob.e))
+        es = float(eps_s(prob.x_true, prob.s, e_norm, float(beta)))
+        eq = eps_q(
+            prob.phi.shape[0], float(beta), float(jnp.linalg.norm(prob.x_true)), 8, 8,
+            c_phi=float(jnp.max(jnp.abs(prob.phi))), c_y=float(jnp.max(jnp.abs(prob.y))),
+        )
+        bound = theorem3_bound(n_iters, float(jnp.linalg.norm(prob.x_true)), es, eq)
+        assert err <= bound
+
+    def test_quantized_y_only(self):
+        prob = make_gaussian_problem(96, 192, 6, snr_db=20.0, key=jax.random.PRNGKey(11))
+        res = qniht(prob.phi, prob.y, prob.s, n_iters=30, bits_y=8, key=jax.random.PRNGKey(12))
+        assert float(relative_error(res.x, prob.x_true)) < 0.15
+
+    def test_real_signal_projection(self):
+        prob = make_gaussian_problem(64, 128, 4, snr_db=20.0, key=jax.random.PRNGKey(13))
+        res = niht(prob.phi, prob.y, prob.s, n_iters=20, real_signal=True, nonneg=True)
+        assert res.x.dtype == jnp.float32
+        assert float(jnp.min(res.x)) >= 0.0

@@ -1,0 +1,92 @@
+"""Tests for the RIP machinery (Lemma 1, Theorem 3 terms, Fig. 7/8 quantities)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    corollary1_coeffs,
+    eps_q,
+    gamma_from_rics,
+    gamma_full,
+    gamma_hat_bound,
+    min_bits_lemma1,
+    rics_sampled,
+    singular_values,
+)
+from repro.quant import fake_quantize
+
+
+class TestSpectra:
+    def test_orthogonal_matrix_gamma_zero(self):
+        q, _ = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(0), (64, 64)))
+        assert float(gamma_full(q)) == pytest.approx(0.0, abs=1e-4)
+
+    def test_singular_values_match_svd(self):
+        a = jax.random.normal(jax.random.PRNGKey(1), (16, 40))
+        sv = np.asarray(singular_values(a))[:16]
+        ref = np.asarray(jnp.linalg.svd(a, compute_uv=False))
+        np.testing.assert_allclose(sv, ref, rtol=1e-4, atol=1e-4)
+
+    def test_sampled_rics_bracket_submatrix_spectrum(self):
+        phi = jax.random.normal(jax.random.PRNGKey(2), (64, 256)) / 8.0
+        key = jax.random.PRNGKey(3)
+        alpha, beta = rics_sampled(phi, 8, 32, key)
+        idx = jax.random.choice(jax.random.PRNGKey(4), 256, (8,), replace=False)
+        sv = jnp.linalg.svd(jnp.take(phi, idx, axis=1), compute_uv=False)
+        # one more random support cannot exceed sampled extremes by much
+        assert float(sv[0]) <= float(beta) * 1.5
+        assert float(sv[-1]) >= float(alpha) / 1.5
+
+    def test_gamma_from_rics(self):
+        assert float(gamma_from_rics(1.0, 1.0)) == pytest.approx(0.0)
+        assert float(gamma_from_rics(1.0, 2.0)) == pytest.approx(1.0)
+
+
+class TestLemma1:
+    def test_more_bits_for_smaller_margin(self):
+        b_tight = min_bits_lemma1(gamma=1 / 16 - 1e-3, alpha=1.0, support_size=16)
+        b_loose = min_bits_lemma1(gamma=1 / 32, alpha=1.0, support_size=16)
+        assert b_tight > b_loose
+
+    def test_infeasible_returns_sentinel(self):
+        assert min_bits_lemma1(gamma=0.5, alpha=1.0, support_size=16) == 64
+
+    def test_bound_formula(self):
+        # b >= log2(2*sqrt(16)/(eps*alpha)), eps = 1/16 - 1/32 = 1/32, alpha=2
+        expected = math.ceil(math.log2(2 * 4 / ((1 / 32) * 2)))
+        assert min_bits_lemma1(1 / 32, 2.0, 16) == expected
+
+    def test_gamma_hat_empirical(self):
+        """Eqn. 48: quantizing cannot inflate gamma beyond the Lemma-1 bound
+        (statistical check on a random well-conditioned matrix)."""
+        key = jax.random.PRNGKey(5)
+        phi = jax.random.normal(key, (128, 64)) / math.sqrt(128)
+        s = 8
+        alpha, beta = rics_sampled(phi, s, 24, key)
+        gamma = float(gamma_from_rics(alpha, beta))
+        bits = 8
+        phi_hat = fake_quantize(phi, bits, jax.random.fold_in(key, 1))
+        a_h, b_h = rics_sampled(phi_hat, s, 24, key)
+        gamma_hat = float(gamma_from_rics(a_h, b_h))
+        # Lemma-1 bound uses the worst case; scale by c_phi since entries != [-1,1]
+        c_phi = float(jnp.max(jnp.abs(phi)))
+        bound = gamma_hat_bound(gamma, float(alpha), s, bits) + c_phi * math.sqrt(s) / (
+            2 ** (bits - 1) * float(alpha)
+        )
+        assert gamma_hat <= bound + 0.05
+
+
+class TestErrorTerms:
+    def test_eps_q_halves_per_bit(self):
+        e2 = eps_q(900, 30.0, 5.0, 2, 8)
+        e3 = eps_q(900, 30.0, 5.0, 3, 8)
+        # phi term dominates here; one more bit ~halves it
+        assert e3 < e2 and e3 > e2 / 2.2
+
+    def test_corollary1_coeffs(self):
+        c1, c2 = corollary1_coeffs(30, 60.0, 50.0)
+        assert c1 == pytest.approx(math.sqrt(30) / 60.0)
+        assert c2 == pytest.approx(30 / 50.0)

@@ -1,0 +1,201 @@
+"""Runtime tests: optimizer, IHT sparsifier, data determinism, fault handling,
+sharding rules, end-to-end training integration (loss decreases; restart
+resumes bit-exactly)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_smoke_config
+from repro.data import SyntheticStream, synthetic_batch
+from repro.optim import IHTConfig, adamw, cosine_schedule, project_params, sparsity_report
+from repro.parallel.collectives import fake_grad_compression
+from repro.parallel.sharding import batch_spec, spec_for_path
+from repro.train import (
+    LoopConfig,
+    TrainState,
+    init_state,
+    make_train_step,
+    run_with_restarts,
+    train_loop,
+)
+
+
+class TestAdamW:
+    def test_quadratic_convergence(self):
+        opt = adamw(lr=0.1, weight_decay=0.0)
+        params = {"w": jnp.asarray([5.0, -3.0])}
+        state = opt.init(params)
+        for _ in range(200):
+            grads = {"w": 2 * params["w"]}  # d/dw ||w||^2
+            params, state, m = opt.update(grads, state, params)
+        assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+    def test_grad_clip(self):
+        opt = adamw(lr=0.1, grad_clip=1.0)
+        params = {"w": jnp.zeros((4,))}
+        state = opt.init(params)
+        _, _, m = opt.update({"w": jnp.full((4,), 100.0)}, state, params)
+        assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+    def test_cosine_schedule(self):
+        lr = cosine_schedule(1.0, warmup=10, total=100)
+        assert float(lr(jnp.asarray(0))) == pytest.approx(0.0)
+        assert float(lr(jnp.asarray(10))) == pytest.approx(1.0, rel=0.01)
+        assert float(lr(jnp.asarray(100))) == pytest.approx(0.1, rel=0.05)
+
+
+class TestIHTSparsifier:
+    def test_projection_sparsity(self):
+        key = jax.random.PRNGKey(0)
+        params = {"layer": {"w": jax.random.normal(key, (128, 64))}}
+        cfg = IHTConfig(sparsity=0.75, min_size=1024)
+        out = project_params(params, cfg)
+        frac = float(jnp.mean(out["layer"]["w"] == 0))
+        assert 0.70 <= frac <= 0.80
+        assert sparsity_report(out, cfg) == pytest.approx(frac, abs=1e-6)
+
+    def test_small_and_norm_leaves_untouched(self):
+        params = {"ln": {"scale": jnp.ones((64,))},
+                  "tiny": {"w": jnp.ones((4, 4))}}
+        out = project_params(params, IHTConfig(sparsity=0.9, min_size=1024))
+        assert float(jnp.min(out["ln"]["scale"])) == 1.0
+        assert float(jnp.min(out["tiny"]["w"])) == 1.0
+
+    def test_keeps_largest(self):
+        w = jnp.arange(1.0, 4097.0).reshape(64, 64)
+        out = project_params({"m": {"w": w}}, IHTConfig(sparsity=0.5, min_size=1))
+        kept = out["m"]["w"]
+        assert float(kept[-1, -1]) == 4096.0  # largest survives
+        assert float(kept[0, 0]) == 0.0       # smallest zeroed
+
+
+class TestData:
+    def test_deterministic_replay(self):
+        a = synthetic_batch(jax.random.PRNGKey(1), 7, 4, 16, 100)
+        b = synthetic_batch(jax.random.PRNGKey(1), 7, 4, 16, 100)
+        np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+
+    def test_labels_are_next_tokens(self):
+        b = synthetic_batch(jax.random.PRNGKey(2), 0, 2, 8, 50)
+        assert b["tokens"].shape == (2, 8) and b["labels"].shape == (2, 8)
+        assert int(b["tokens"].max()) < 50
+
+    def test_steps_differ(self):
+        a = synthetic_batch(jax.random.PRNGKey(1), 0, 4, 16, 100)
+        b = synthetic_batch(jax.random.PRNGKey(1), 1, 4, 16, 100)
+        assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+
+
+class TestGradCompression:
+    def test_unbiased(self):
+        g = {"w": jax.random.normal(jax.random.PRNGKey(3), (32,))}
+        keys = jax.random.split(jax.random.PRNGKey(4), 2000)
+        outs = jax.vmap(lambda k: fake_grad_compression(g, 8, k)["w"])(keys)
+        np.testing.assert_allclose(np.asarray(outs.mean(0)), np.asarray(g["w"]),
+                                   atol=0.02)
+
+    def test_error_bounded(self):
+        g = {"w": jax.random.normal(jax.random.PRNGKey(5), (64,))}
+        out = fake_grad_compression(g, 8, jax.random.PRNGKey(6))
+        scale = float(jnp.max(jnp.abs(g["w"])))
+        assert float(jnp.max(jnp.abs(out["w"] - g["w"]))) <= scale / 64 + 1e-6
+
+
+class TestShardingRules:
+    def _mesh(self):
+        dev = np.array(jax.devices()[:1]).reshape(1, 1)
+        return Mesh(dev, ("data", "model"))
+
+    def test_attention_rules(self):
+        mesh = self._mesh()
+        assert spec_for_path("slots/slot0/attn/wq/w", (2, 64, 64), mesh) == P(None, "data", "model")
+        assert spec_for_path("slots/slot0/attn/wo/w", (2, 64, 64), mesh) == P(None, "model", "data")
+        assert spec_for_path("embed/w", (512, 64), mesh) == P("model", "data")
+
+    def test_indivisible_falls_back_to_replication(self):
+        dev = np.array(jax.devices() * 1)[:1].reshape(1, 1)
+        mesh = Mesh(dev, ("data", "model"))
+        # mesh axis size 1 divides everything; simulate a fat axis via a fake
+        # mesh by checking the rule logic directly on odd dims
+        from repro.parallel.sharding import _divisible
+
+        assert not _divisible(7, None, mesh)
+
+    def test_norms_replicated(self):
+        mesh = self._mesh()
+        assert spec_for_path("final_norm/scale", (64,), mesh) == P()
+
+    def test_moe_expert_parallel(self):
+        mesh = self._mesh()
+        assert spec_for_path("slots/slot0/ffn/wi_gate", (2, 8, 64, 32), mesh) == \
+            P(None, "model", "data", None)
+
+    def test_batch_spec(self):
+        mesh = self._mesh()
+        assert batch_spec(mesh, 8, 2) == P(("data",), None) or \
+            batch_spec(mesh, 8, 2) == P("data", None)
+
+
+class TestTrainIntegration:
+    def _setup(self):
+        cfg = get_smoke_config("starcoder2_3b")
+        opt = adamw(3e-3)
+        state = init_state(cfg, opt, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(cfg, opt))
+
+        def stepper(state, batch):
+            batch = dict(batch)
+            batch["memory"] = None
+            return step(state, batch)
+
+        stream = SyntheticStream(0, 8, 32, cfg.vocab_size)
+        return cfg, stepper, state, stream
+
+    def test_loss_decreases(self):
+        cfg, step, state, stream = self._setup()
+        first = last = None
+        for i in range(25):
+            state, m = step(state, stream.at_step(i))
+            if first is None:
+                first = float(m["loss"])
+            last = float(m["loss"])
+        assert last < first - 0.2
+
+    def test_restart_resumes_bit_exact(self, tmp_path):
+        """Kill training mid-run; the restarted loop must continue to the same
+        final loss as an uninterrupted run (deterministic data + checkpoints)."""
+        cfg, step, state0, stream = self._setup()
+        loop_cfg = LoopConfig(total_steps=12, ckpt_dir=str(tmp_path),
+                              ckpt_every=4, ckpt_async=False, log_every=100)
+
+        # uninterrupted reference
+        ref_state = train_loop(step, state0, stream, loop_cfg, log=lambda s: None)
+
+        # interrupted: run 6 steps (crash), then resume via the loop itself
+        crash_dir = str(tmp_path / "crashy")
+        os.makedirs(crash_dir)
+        c_cfg = LoopConfig(total_steps=12, ckpt_dir=crash_dir, ckpt_every=4,
+                           ckpt_async=False, log_every=100)
+
+        calls = {"n": 0}
+
+        def body(attempt):
+            calls["n"] += 1
+            if attempt == 0:
+                # run 6 steps then die (after the step-4 checkpoint exists)
+                partial_cfg = LoopConfig(total_steps=6, ckpt_dir=crash_dir,
+                                         ckpt_every=4, ckpt_async=False, log_every=100)
+                train_loop(step, state0, stream, partial_cfg, log=lambda s: None)
+                raise RuntimeError("injected node failure")
+            return train_loop(step, state0, stream, c_cfg, log=lambda s: None)
+
+        final = run_with_restarts(body, max_restarts=2)
+        assert calls["n"] == 2
+        a = jax.tree.leaves(ref_state.params)
+        b = jax.tree.leaves(final.params)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

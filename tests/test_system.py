@@ -1,0 +1,103 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The paper's pipeline, run whole: simulate the instrument → quantize ALL input
+data (Φ to 2 bits, y to 8 bits) → recover → validate against the full-precision
+run and the theory-side quantities. Plus the framework-level integration the
+paper's insight feeds (quantized serving bytes, compressed-gradient training).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    eps_q,
+    niht,
+    qniht,
+    relative_error,
+    rics_sampled,
+    source_recovery,
+    support_recovery,
+)
+from repro.quant import PAPER_2_8
+from repro.sensing import Station, make_sky, measurement_matrix, visibilities
+
+
+class TestPaperPipelineEndToEnd:
+    """The full QNIHT pipeline at CI scale (paper §4 scaled down)."""
+
+    def setup_method(self):
+        self.key = jax.random.PRNGKey(302)
+        self.r, self.s = 32, 8
+        st = Station(n_antennas=30, seed=302)
+        self.phi = measurement_matrix(st, self.r, extent=1.5)
+        self.x = make_sky(self.r, self.s, self.key, min_sep=4)
+        self.y, _ = visibilities(self.phi, self.x, 0.0, self.key)  # 0 dB
+
+    def test_low_precision_recovery_matches_full(self):
+        full = niht(self.phi, self.y, self.s, 40, real_signal=True, nonneg=True)
+        low = qniht(self.phi, self.y, self.s, 40,
+                    bits_phi=PAPER_2_8.phi_bits, bits_y=PAPER_2_8.y_bits,
+                    key=self.key, real_signal=True, nonneg=True)
+        e_full = float(relative_error(full.x, self.x))
+        e_low = float(relative_error(low.x, self.x))
+        assert float(support_recovery(low.x, self.x, self.s)) >= 0.85
+        assert e_low <= e_full + 0.15    # "negligible loss" at 1/16th the bytes
+        img = jnp.real(low.x).reshape(self.r, self.r)
+        assert float(source_recovery(img, self.x.reshape(self.r, self.r),
+                                     self.s, 1)) >= 0.85
+
+    def test_quantization_error_term_small_vs_signal(self):
+        """Corollary-1 mechanics: ε_q with the measured β̂_2s is bounded at the
+        signal's order for this instrument (why 2 bits suffice here)."""
+        _, beta_hat = rics_sampled(self.phi, 2 * self.s, 16, self.key)
+        xs_norm = float(jnp.linalg.norm(self.x))
+        e_q = eps_q(self.phi.shape[0], float(beta_hat), xs_norm, 2, 8)
+        assert e_q < 2.0 * xs_norm
+
+    def test_monotone_in_bits(self):
+        """8&8 ≈ full precision (quantization error vanishes with bits)."""
+        e8 = float(relative_error(
+            qniht(self.phi, self.y, self.s, 40, bits_phi=8, bits_y=8,
+                  key=self.key, real_signal=True, nonneg=True).x, self.x))
+        full = float(relative_error(
+            niht(self.phi, self.y, self.s, 40, real_signal=True, nonneg=True).x,
+            self.x))
+        assert abs(e8 - full) < 0.05
+
+
+class TestFrameworkIntegration:
+    def test_serving_bytes_law(self):
+        """Weight quantization shrinks the streamed serving bytes (the paper's
+        bandwidth law, LM side)."""
+        from repro.configs import get_smoke_config
+        from repro.models import init_params, param_bytes, quantize_params
+
+        cfg = get_smoke_config("qwen3_moe_30b")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        b32 = param_bytes(params)
+        b4 = param_bytes(quantize_params(params, 4))
+        b2 = param_bytes(quantize_params(params, 2))
+        assert b4 < 0.45 * b32
+        assert b2 < b4
+
+    def test_compressed_gradient_training_converges(self):
+        """Unbiased Q8 gradients do not break optimization (QSGD lineage)."""
+        from repro.configs import get_smoke_config
+        from repro.data import SyntheticStream
+        from repro.optim import adamw
+        from repro.quant.policy import QuantPolicy
+        from repro.train import init_state, make_train_step
+
+        cfg = get_smoke_config("minitron_4b")
+        opt = adamw(3e-3)
+        step = jax.jit(make_train_step(cfg, opt, policy=QuantPolicy(grad_bits=8)))
+        state = init_state(cfg, opt, jax.random.PRNGKey(0))
+        stream = SyntheticStream(0, 8, 32, cfg.vocab_size)
+        losses = []
+        for i in range(20):
+            b = stream.at_step(i)
+            b["memory"] = None
+            state, m = step(state, b)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0] - 0.2
+        assert all(np.isfinite(losses))

@@ -1,0 +1,76 @@
+"""Tests for the hard-threshold operator H_s (exact and bisection variants)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import find_threshold_bisect, hard_threshold, hard_threshold_bisect, top_s_mask
+
+
+class TestHardThreshold:
+    def test_keeps_top_s(self):
+        x = jnp.asarray([0.1, -5.0, 2.0, 0.0, -3.0])
+        out = hard_threshold(x, 2)
+        np.testing.assert_allclose(np.asarray(out), [0.0, -5.0, 0.0, 0.0, -3.0])
+
+    def test_support_size(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (100,))
+        for s in [1, 7, 50, 100]:
+            out = hard_threshold(x, s)
+            assert int(jnp.sum(jnp.abs(out) > 0)) == s
+
+    def test_s_ge_n_identity(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (10,))
+        np.testing.assert_array_equal(np.asarray(hard_threshold(x, 10)), np.asarray(x))
+        np.testing.assert_array_equal(np.asarray(hard_threshold(x, 20)), np.asarray(x))
+
+    def test_complex_magnitude(self):
+        x = jnp.asarray([1 + 1j, 0.5 + 0j, 3j, -0.1 + 0.1j], dtype=jnp.complex64)
+        out = hard_threshold(x, 2)
+        assert out[2] == 3j and out[0] == 1 + 1j
+        assert out[1] == 0 and out[3] == 0
+
+    def test_rejects_matrix(self):
+        with pytest.raises(ValueError):
+            hard_threshold(jnp.ones((2, 2)), 1)
+
+    def test_best_s_term_approximation(self):
+        """H_s(x) is the best s-term approximation in l2."""
+        key = jax.random.PRNGKey(2)
+        x = jax.random.normal(key, (50,))
+        s = 5
+        xs = hard_threshold(x, s)
+        err = float(jnp.linalg.norm(x - xs))
+        for trial in range(10):
+            idx = jax.random.choice(jax.random.fold_in(key, trial), 50, (s,), replace=False)
+            alt = jnp.zeros_like(x).at[idx].set(x[idx])
+            assert err <= float(jnp.linalg.norm(x - alt)) + 1e-6
+
+
+class TestBisect:
+    @given(n=st.integers(8, 300), s_frac=st.floats(0.05, 0.9), seed=st.integers(0, 99))
+    @settings(max_examples=40, deadline=None)
+    def test_matches_topk_distinct(self, n, s_frac, seed):
+        """With distinct magnitudes the bisection H_s equals the exact H_s."""
+        s = max(1, int(n * s_frac))
+        x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+        a = np.asarray(hard_threshold(x, s))
+        b = np.asarray(hard_threshold_bisect(x, s))
+        np.testing.assert_allclose(a, b, atol=1e-6)
+
+    def test_threshold_value(self):
+        x = jnp.asarray([1.0, 2.0, 3.0, 4.0, 5.0])
+        t = float(find_threshold_bisect(jnp.abs(x), 2))
+        assert 3.0 <= t < 4.0
+
+    def test_ties_keep_at_most_s(self):
+        x = jnp.asarray([1.0, 1.0, 1.0, 1.0, 2.0])
+        out = hard_threshold_bisect(x, 2)
+        assert int(jnp.sum(jnp.abs(out) > 0)) <= 2
+
+    def test_top_s_mask(self):
+        x = jnp.asarray([3.0, -1.0, 2.0])
+        m = top_s_mask(x, 2)
+        np.testing.assert_array_equal(np.asarray(m), [True, False, True])
