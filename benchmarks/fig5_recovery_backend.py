@@ -1,0 +1,117 @@
+"""Fig. 5 (end-to-end): dense vs fake vs packed QNIHT recovery on the Gaussian toy.
+
+The paper's headline systems claim is that recovery time is bound by
+``size(Φ̂)/bandwidth`` (suppl. §8.1), so streaming packed 2/4/8-bit codes
+instead of f32 should cut the hot loop's traffic by 32/bits×. This suite times
+the three solver backends end-to-end (traces disabled — the loop is pure
+algorithm traffic) and reports the streamed-bytes model alongside wall time;
+wall-clock speedups require the Pallas kernels on real TPU HBM, the bytes
+column is the hardware-independent law. A batched run (B observations of one
+Φ̂) shows the amortization of the heavy-traffic serving mode.
+
+Rows double as the perf trajectory: every run rewrites ``BENCH_recovery.json``
+(list of row dicts for THIS run; override the path with the
+``BENCH_RECOVERY_JSON`` env var) — the committed file tracks one run per PR,
+so the trajectory lives in its git history without unbounded growth.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.configs.gaussian_toy import CONFIG, SMOKE
+from repro.core import qniht, qniht_batch, relative_error
+from repro.sensing import make_gaussian_problem
+
+JSON_PATH = os.environ.get("BENCH_RECOVERY_JSON", "BENCH_recovery.json")
+BATCH = 8
+
+
+def _streamed_bytes_per_iter(m: int, n: int, bits) -> int:
+    """Operator bytes one NIHT iteration streams (no backtracks): 3 forward
+    applications (residual, µ, acceptance) + 1 adjoint, each size(Φ̂)."""
+    per_app = m * n * 4 if bits is None else m * ((n * bits + 7) // 8)
+    return 4 * per_app
+
+
+def run(fast: bool = True):
+    g = SMOKE if fast else CONFIG
+    key = jax.random.PRNGKey(0)
+    prob = make_gaussian_problem(g.m, g.n, g.s, 20.0, key)
+    Y = jnp.stack([prob.y] * BATCH)
+    f32_bytes = _streamed_bytes_per_iter(g.m, g.n, None)
+    rows, records = [], []
+
+    def add(name, us, stream_bits, rel_err, extra="", bits_phi=None):
+        # stream_bits: width of the bytes actually streamed (None → f32; the
+        # fake backend quantizes VALUES but still streams f32). bits_phi: the
+        # quantization level of Φ̂'s values, recorded separately.
+        streamed = _streamed_bytes_per_iter(g.m, g.n, stream_bits)
+        ratio = f32_bytes / streamed
+        derived = (f"streamed_bytes={streamed} vs_f32={ratio:.1f}x_fewer "
+                   f"rel_error={rel_err:.4f}" + (f" {extra}" if extra else ""))
+        rows.append(row(name, us, derived))
+        records.append({
+            "name": name, "us_per_call": round(us, 1), "bits_phi": bits_phi,
+            "stream_bits": stream_bits, "streamed_bytes": streamed,
+            "bytes_vs_f32": round(ratio, 2), "rel_error": round(rel_err, 5),
+            "m": g.m, "n": g.n, "s": g.s, "n_iters": g.n_iters, "extra": extra,
+        })
+
+    def measure(fn):
+        """(µs, result): the result call doubles as the compile warmup."""
+        res = jax.block_until_ready(fn())
+        return time_fn(fn, warmup=0, iters=3), res
+
+    # dense f32 baseline
+    us_dense, res = measure(
+        lambda: qniht(prob.phi, prob.y, g.s, g.n_iters, with_trace=False))
+    rel = float(relative_error(res.x, prob.x_true))
+    add("fig5b/recover_dense_f32", us_dense, None, rel, "speedup=1.00x")
+
+    us_single_packed = {}
+    for bits in (8, 4, 2):
+        # fake: quantized values, dense f32 compute + traffic
+        us, res = measure(
+            lambda b=bits: qniht(prob.phi, prob.y, g.s, g.n_iters, bits_phi=b,
+                                 bits_y=8, key=key, requantize="fixed",
+                                 with_trace=False))
+        rel = float(relative_error(res.x, prob.x_true))
+        add(f"fig5b/recover_fake_int{bits}", us, None, rel, bits_phi=bits)
+
+        # packed: stream uint8 codes through the qmm kernels
+        us, res = measure(
+            lambda b=bits: qniht(prob.phi, prob.y, g.s, g.n_iters, bits_phi=b,
+                                 bits_y=8, key=key, requantize="fixed",
+                                 backend="packed", with_trace=False))
+        us_single_packed[bits] = us
+        rel = float(relative_error(res.x, prob.x_true))
+        add(f"fig5b/recover_packed_int{bits}", us, bits, rel,
+            f"bw_model_speedup={32 / bits:.2f}x", bits_phi=bits)
+
+    # batched serving: B observations amortize one packed Φ̂ stream
+    for bits in (8, 2):
+        us, res = measure(
+            lambda b=bits: qniht_batch(prob.phi, Y, g.s, g.n_iters, bits_phi=b,
+                                       bits_y=8, key=key, requantize="fixed",
+                                       backend="packed", with_trace=False))
+        rel = float(relative_error(res.x[0], prob.x_true))
+        amort = us / (BATCH * us_single_packed[bits])
+        add(f"fig5b/recover_packed_int{bits}_batch{BATCH}", us, bits, rel,
+            f"batch={BATCH} vs_{BATCH}_singles={amort:.2f}x", bits_phi=bits)
+
+    _write_json(records)
+    return rows
+
+
+def _write_json(records) -> None:
+    stamp = time.strftime("%Y-%m-%dT%H:%M:%S")
+    for r in records:
+        r["timestamp"] = stamp
+    with open(JSON_PATH, "w") as f:
+        json.dump(records, f, indent=1)

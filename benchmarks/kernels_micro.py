@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import row, time_fn
-from repro.kernels import hsthresh, pack_weights, qmm, sqround
+from repro.kernels import hsthresh, pack_operator, pack_weights, packed_matvec, qmm, sqround
 from repro.kernels.qmm.ref import qmm_ref
 
 
@@ -26,6 +26,22 @@ def run(fast: bool = True):
         rows.append(row(
             f"kernels/qmm_int{bits}_ref", us,
             f"streamed_bytes={pw.nbytes} vs_f32={f32_bytes / pw.nbytes:.1f}x_fewer"
+        ))
+
+    # packed-operator matvec, single vector vs a served batch: one kernel call
+    # streams Φ̂ once for all B rows (the qniht_batch amortization primitive)
+    batch = 8
+    phi = w  # (n, k) as a real measurement matrix
+    v1 = jax.random.normal(jax.random.fold_in(key, 3), (k,), jnp.float32)
+    vb = jax.random.normal(jax.random.fold_in(key, 4), (batch, k), jnp.float32)
+    for bits in (8, 2):
+        op = pack_operator(phi, bits, jax.random.fold_in(key, 5), shared=True)
+        f1 = jax.jit(lambda v, oo=op: packed_matvec(oo, v, use_pallas=False))
+        us1 = time_fn(f1, v1, warmup=2, iters=5)
+        usb = time_fn(f1, vb, warmup=2, iters=5)
+        rows.append(row(
+            f"kernels/qmm_opmv_int{bits}_batch{batch}", usb,
+            f"single_us={us1:.1f} amortized={usb / (batch * us1):.2f}x_of_{batch}_singles"
         ))
 
     v = jax.random.normal(key, (512, 512), jnp.float32)

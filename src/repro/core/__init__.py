@@ -1,7 +1,20 @@
 """The paper's primary contribution: low-precision normalized IHT (QNIHT)
 with recovery guarantees, plus the baselines and RIP theory around it."""
 from repro.core.baselines import clean, cosamp, fista_l1, iht, spectral_norm
-from repro.core.niht import IHTResult, IHTTrace, niht, niht_iteration, qniht, stopping_iterations
+from repro.core.niht import (
+    IHTResult,
+    IHTTrace,
+    niht,
+    niht_iteration,
+    qniht,
+    qniht_batch,
+    stopping_iterations,
+)
+from repro.core.operators import (
+    DenseOperator,
+    FakeQuantPairOperator,
+    PackedStreamingOperator,
+)
 from repro.core.recovery import (
     psnr,
     relative_error,
@@ -31,7 +44,9 @@ from repro.core.threshold import (
 
 __all__ = [
     "clean", "cosamp", "fista_l1", "iht", "spectral_norm",
-    "IHTResult", "IHTTrace", "niht", "niht_iteration", "qniht", "stopping_iterations",
+    "IHTResult", "IHTTrace", "niht", "niht_iteration", "qniht", "qniht_batch",
+    "stopping_iterations",
+    "DenseOperator", "FakeQuantPairOperator", "PackedStreamingOperator",
     "psnr", "relative_error", "snr_db", "source_recovery", "support_recovery",
     "corollary1_coeffs", "eps_q", "eps_s", "gamma_from_rics", "gamma_full",
     "gamma_hat_bound", "min_bits_lemma1", "rics_sampled", "singular_values",

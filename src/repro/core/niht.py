@@ -11,22 +11,51 @@ Implements the paper's Algorithm 1 faithfully:
   (``requantize="pair"``) or a single fixed quantization (``requantize="fixed"`` —
   what the CPU/FPGA systems actually stream, since data arrives pre-quantized).
 
+The loop only touches Φ̂ through ``mv``/``rmv`` products, so it is generic over
+the :mod:`repro.core.operators` backends:
+
+* ``backend="dense"`` — dense XLA dots. With ``bits_phi`` set this is
+  *fake quantization*: Φ̂'s values are quantized but carried as f32/c64, so the
+  math matches deployment while the memory traffic stays full-precision.
+  Faithful to Algorithm 1 in both ``requantize`` modes.
+* ``backend="packed"`` — ``requantize="fixed"`` only: Φ̂ and Φ̂† are quantized
+  ONCE (shared codes, identical to the dense fixed path bit-for-bit) and packed
+  to uint8; every iteration streams the packed codes through the Pallas ``qmm``
+  kernels — 4/8/16× fewer operator bytes at 8/4/2 bits, the paper's headline
+  systems result (Fig. 5/6, suppl. §8.1).
+
+``qniht_batch`` recovers B observation vectors of the SAME Φ̂ at once: every
+matvec lifts to one (B, ·) matmul / kernel call, amortizing the Φ̂ stream
+across the batch (the heavy-traffic serving scenario). Key contract: row ``b``
+of ``qniht_batch(phi, Y, key=k)`` computes exactly what ``qniht(phi, Y[b],
+key=k)`` computes (same quantization draws), up to f32 batching accumulation.
+
+``threshold="hsthresh"`` (real-signal path) swaps the exact ``top_k`` H_s for
+the streaming histogram-select-mask kernel (paper §8's FPGA top-S search);
+support size stays ≤ s by construction.
+
 Everything is a ``lax.scan`` over iterations → one compiled program, traces out.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable, NamedTuple, Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.operators import (
+    DenseOperator,
+    FakeQuantPairOperator,
+    PackedStreamingOperator,
+)
 from repro.core.threshold import hard_threshold, top_s_mask
+from repro.kernels.hsthresh.ops import hsthresh
 from repro.quant.quantize import fake_quantize
 
 
 class IHTTrace(NamedTuple):
-    """Per-iteration diagnostics (arrays of length n_iters)."""
+    """Per-iteration diagnostics (length n_iters; batched runs add a B axis)."""
 
     resid_q: jax.Array        # ||ŷ − Φ̂ x||₂ (the cost the algorithm minimizes)
     resid_true: jax.Array     # ||y − Φ x||₂ against full-precision data
@@ -44,6 +73,11 @@ def _sqnorm(v: jax.Array) -> jax.Array:
     return jnp.real(jnp.vdot(v, v))
 
 
+def _rows_sqnorm(v: jax.Array) -> jax.Array:
+    """Squared l2 norm along the last axis (per problem)."""
+    return jnp.real(jnp.sum(v * jnp.conj(v), axis=-1))
+
+
 def _project(a: jax.Array, real_signal: bool, nonneg: bool) -> jax.Array:
     if real_signal:
         a = jnp.real(a)
@@ -52,78 +86,187 @@ def _project(a: jax.Array, real_signal: bool, nonneg: bool) -> jax.Array:
     return a
 
 
-def niht_iteration(
-    x: jax.Array,
-    y_hat: jax.Array,
-    phi1_mv: Callable[[jax.Array], jax.Array],
-    phi1_rmv: Callable[[jax.Array], jax.Array],
-    phi2_mv: Callable[[jax.Array], jax.Array],
+def _make_hs(threshold: str, s: int):
+    """Batched H_s: (B, N) → (B, N) with per-row support size ≤ s."""
+    if threshold == "topk":
+        return jax.vmap(lambda v: hard_threshold(v, s))
+    if threshold == "hsthresh":
+        return jax.vmap(lambda v: hsthresh(v, s))
+    raise ValueError(f"unknown threshold {threshold!r} (use 'topk' or 'hsthresh')")
+
+
+def _niht_iteration_batch(
+    X: jax.Array,
+    Yhat: jax.Array,
+    op1,
+    op2,
     s: int,
     c: float,
     shrink_k: float,
     max_backtracks: int,
     real_signal: bool,
     nonneg: bool,
+    hs,
 ):
-    """One NIHT step (Algorithm 1 body). Returns (x_new, mu, changed, n_backtracks).
+    """One NIHT step (Algorithm 1 body) on a batch of problems sharing Φ̂.
 
-    ``phi1_*`` is Φ̂_{2n-1} (gradient / step-size / acceptance matrix), ``phi2_mv``
-    is Φ̂_{2n} (residual matrix), matching the paper's pairing.
+    ``op1`` is Φ̂_{2n-1} (gradient / step-size / acceptance), ``op2`` is Φ̂_{2n}
+    (residual), matching the paper's pairing. Every operator application serves
+    the whole batch in one matmul; support logic and backtracking are per-row
+    (a row stops shrinking µ as soon as its own acceptance test passes).
+    Returns (X_new, mu, changed, n_backtracks), all leading-axis B.
     """
     eps = jnp.asarray(1e-30, jnp.float32)
-    r = y_hat - phi2_mv(x)
-    g = phi1_rmv(r)
+    R = Yhat - op2.mv(X)
+    G = op1.rmv(R)
 
     # Γ: support of x, or (first iteration, x = 0) the top-s of the first gradient.
-    on_init = _sqnorm(x) == 0.0
-    mask_x = jnp.abs(x) > 0
-    mask_g = top_s_mask(g, s)
-    gamma_mask = jnp.where(on_init, mask_g, mask_x)
+    on_init = _rows_sqnorm(X) == 0.0
+    mask_x = jnp.abs(X) > 0
+    mask_g = jax.vmap(lambda g: top_s_mask(g, s))(G)
+    gamma = jnp.where(on_init[:, None], mask_g, mask_x)
 
-    g_gamma = jnp.where(gamma_mask, g, jnp.zeros_like(g))
-    mu0 = _sqnorm(g_gamma) / (_sqnorm(phi1_mv(g_gamma)) + eps)
+    Gg = jnp.where(gamma, G, jnp.zeros_like(G))
+    mu0 = _rows_sqnorm(Gg) / (_rows_sqnorm(op1.mv(Gg)) + eps)
 
     def propose(mu):
-        a = x.astype(g.dtype) + mu * g
-        a = _project(a, real_signal, nonneg).astype(x.dtype)
-        return hard_threshold(a, s)
+        A = X.astype(G.dtype) + mu[:, None] * G
+        A = _project(A, real_signal, nonneg).astype(X.dtype)
+        return hs(A)
 
-    def accept(mu, x_prop):
-        new_mask = jnp.abs(x_prop) > 0
-        same = jnp.all(new_mask == gamma_mask)
-        diff = x_prop - x
-        omega = _sqnorm(diff) / (_sqnorm(phi1_mv(diff)) + eps)
+    def accept(mu, Xp):
+        new_mask = jnp.abs(Xp) > 0
+        same = jnp.all(new_mask == gamma, axis=-1)
+        D = Xp - X
+        omega = _rows_sqnorm(D) / (_rows_sqnorm(op1.mv(D)) + eps)
         return same | (mu <= (1.0 - c) * omega)
 
-    x0 = propose(mu0)
+    X0 = propose(mu0)
+    active0 = ~accept(mu0, X0)
+    nbt0 = jnp.zeros(X.shape[0], jnp.int32)
 
     def cond(carry):
-        mu, x_prop, it = carry
-        return (~accept(mu, x_prop)) & (it < max_backtracks)
+        _, _, nbt, active = carry
+        return jnp.any(active & (nbt < max_backtracks))
 
     def body(carry):
-        mu, _, it = carry
-        mu = mu / (shrink_k * (1.0 - c))
-        return mu, propose(mu), it + 1
+        mu, Xp, nbt, active = carry
+        act = active & (nbt < max_backtracks)
+        mu_new = jnp.where(act, mu / (shrink_k * (1.0 - c)), mu)
+        Xp_new = jnp.where(act[:, None], propose(mu_new), Xp)
+        nbt_new = nbt + act.astype(jnp.int32)
+        still_rejected = act & ~accept(mu_new, Xp_new)
+        return mu_new, Xp_new, nbt_new, still_rejected
 
-    mu, x_new, n_bt = jax.lax.while_loop(cond, body, (mu0, x0, jnp.asarray(0)))
-    changed = ~jnp.all((jnp.abs(x_new) > 0) == gamma_mask)
-    return x_new, mu, changed, n_bt
-
-
-def _dense_ops(mat: jax.Array):
-    mv = lambda v: mat @ v
-    rmv = lambda r: jnp.conj(mat.T) @ r if jnp.iscomplexobj(mat) else mat.T @ r
-    return mv, rmv
+    mu, X_new, n_bt, _ = jax.lax.while_loop(cond, body, (mu0, X0, nbt0, active0))
+    changed = ~jnp.all((jnp.abs(X_new) > 0) == gamma, axis=-1)
+    return X_new, mu, changed, n_bt
 
 
-@partial(
-    jax.jit,
-    static_argnames=(
-        "s", "n_iters", "bits_phi", "bits_y", "requantize", "c", "shrink_k",
-        "max_backtracks", "real_signal", "nonneg",
-    ),
+def niht_iteration(
+    x: jax.Array,
+    y_hat: jax.Array,
+    op1,
+    op2,
+    s: int,
+    c: float,
+    shrink_k: float,
+    max_backtracks: int,
+    real_signal: bool,
+    nonneg: bool,
+    threshold: str = "topk",
+):
+    """One NIHT step on a single problem. ``op1``/``op2`` follow the
+    :mod:`repro.core.operators` protocol (``mv``/``rmv`` accepting a batch
+    axis); see :func:`_niht_iteration_batch` for the paper's pairing.
+    Returns (x_new, mu, changed, n_backtracks)."""
+    X, mu, ch, nbt = _niht_iteration_batch(
+        x[None, :], y_hat[None, :], op1, op2, s, c, shrink_k, max_backtracks,
+        real_signal, nonneg, _make_hs(threshold, s),
+    )
+    return X[0], mu[0], ch[0], nbt[0]
+
+
+def _validate(bits_phi, bits_y, key, requantize, backend, threshold, real_signal):
+    if (bits_phi or bits_y) and key is None:
+        raise ValueError("quantized NIHT needs a PRNG key")
+    if requantize not in ("pair", "fixed"):
+        raise ValueError(f"unknown requantize {requantize!r}")
+    if backend not in ("dense", "packed"):
+        raise ValueError(f"unknown backend {backend!r} (use 'dense' or 'packed')")
+    if backend == "packed":
+        if not bits_phi:
+            raise ValueError("backend='packed' needs bits_phi (it streams packed codes)")
+        if requantize != "fixed":
+            raise ValueError(
+                "backend='packed' is the requantize='fixed' deployment mode; "
+                "re-packing fresh codes per iteration would stream MORE bytes "
+                "than it saves — use backend='dense' for requantize='pair'")
+    if threshold == "hsthresh" and not real_signal:
+        raise ValueError("threshold='hsthresh' is the real-signal streaming H_s")
+
+
+def _qniht_core(
+    phi, Y, s, n_iters, bits_phi, bits_y, key, requantize, backend, threshold,
+    c, shrink_k, max_backtracks, real_signal, nonneg, with_trace,
+):
+    """Shared batched implementation behind qniht / qniht_batch (Y is (B, M))."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ky, kphi = jax.random.split(key)
+
+    # One stochastic draw ŷ per problem, all rows folding the same ky so that
+    # batch row b reproduces the single-problem run with the same key.
+    Yhat = jax.vmap(lambda yy: fake_quantize(yy, bits_y, ky))(Y) if bits_y else Y
+
+    n = phi.shape[1]
+    x_dtype = jnp.float32 if real_signal else (
+        phi.dtype if jnp.iscomplexobj(phi) else jnp.float32
+    )
+    X0 = jnp.zeros((Y.shape[0], n), dtype=x_dtype)
+    phi_true = DenseOperator(phi)
+    hs = _make_hs(threshold, s)
+
+    if backend == "packed":
+        op = PackedStreamingOperator.pack(phi, bits_phi, jax.random.fold_in(kphi, 0))
+        get_ops = lambda i: (op, op)
+    elif bits_phi and requantize == "pair":
+        pair = FakeQuantPairOperator(phi, bits_phi, kphi)
+        get_ops = pair.at_iteration
+    elif bits_phi:
+        op = DenseOperator(fake_quantize(phi, bits_phi, jax.random.fold_in(kphi, 0)))
+        get_ops = lambda i: (op, op)
+    else:
+        get_ops = lambda i: (phi_true, phi_true)
+
+    def step(X, i):
+        op1, op2 = get_ops(i)
+        X_new, mu, changed, n_bt = _niht_iteration_batch(
+            X, Yhat, op1, op2, s, c, shrink_k, max_backtracks,
+            real_signal, nonneg, hs,
+        )
+        if with_trace:
+            rq = jnp.sqrt(_rows_sqnorm(Yhat - op2.mv(X_new)))
+            rt = jnp.sqrt(_rows_sqnorm(Y - phi_true.mv(X_new)))
+        else:
+            # skip the residual matvecs (one of them streams dense f32 Φ —
+            # benchmarks disable the trace so the loop is pure algorithm traffic)
+            rq = rt = jnp.full((X.shape[0],), jnp.nan, jnp.float32)
+        return X_new, (rq, rt, mu, changed, n_bt)
+
+    X_final, (rq, rt, mus, ch, bt) = jax.lax.scan(step, X0, jnp.arange(n_iters))
+    return IHTResult(
+        x=X_final,
+        trace=IHTTrace(resid_q=rq, resid_true=rt, mu=mus, support_changed=ch, backtracks=bt),
+    )
+
+
+_STATIC = (
+    "s", "n_iters", "bits_phi", "bits_y", "requantize", "backend", "threshold",
+    "c", "shrink_k", "max_backtracks", "real_signal", "nonneg", "with_trace",
 )
+
+
+@partial(jax.jit, static_argnames=_STATIC)
 def qniht(
     phi: jax.Array,
     y: jax.Array,
@@ -134,11 +277,14 @@ def qniht(
     bits_y: Optional[int] = None,
     key: Optional[jax.Array] = None,
     requantize: str = "pair",
+    backend: str = "dense",
+    threshold: str = "topk",
     c: float = 0.01,
     shrink_k: float = 2.0,
     max_backtracks: int = 30,
     real_signal: bool = False,
     nonneg: bool = False,
+    with_trace: bool = True,
 ) -> IHTResult:
     """Low-precision NIHT (Algorithm 1). ``bits_phi=bits_y=None`` → plain NIHT.
 
@@ -151,54 +297,65 @@ def qniht(
       requantize: "pair" (fresh Φ̂_{2n-1}, Φ̂_{2n} each iteration — Algorithm 1) or
         "fixed" (quantize once; what a deployed system streaming pre-quantized
         data does).
+      backend: "dense" (fake-quantized f32 compute) or "packed" (stream packed
+        uint8 codes through the Pallas qmm kernels; requires bits_phi and
+        requantize="fixed" — same codes as the dense fixed path, 32/bits× fewer
+        operator bytes per application). See the module docstring.
+      threshold: "topk" (exact H_s) or "hsthresh" (streaming histogram H_s,
+        real-signal path; support ≤ s).
       real_signal / nonneg: optional projections (sky images are real, >= 0).
+      with_trace: compute per-iteration residual norms (costs one extra Φ̂ and
+        one dense Φ matvec per iteration; disable for timing runs).
     """
-    if (bits_phi or bits_y) and key is None:
-        raise ValueError("quantized NIHT needs a PRNG key")
-    key = key if key is not None else jax.random.PRNGKey(0)
-    ky, kphi = jax.random.split(key)
-
-    y_hat = fake_quantize(y, bits_y, ky) if bits_y else y
-    phi_fixed = (
-        fake_quantize(phi, bits_phi, jax.random.fold_in(kphi, 0))
-        if (bits_phi and requantize == "fixed")
-        else phi
+    _validate(bits_phi, bits_y, key, requantize, backend, threshold, real_signal)
+    res = _qniht_core(
+        phi, y[None, :], s, n_iters, bits_phi, bits_y, key, requantize, backend,
+        threshold, c, shrink_k, max_backtracks, real_signal, nonneg, with_trace,
     )
-
-    n = phi.shape[1]
-    x_dtype = jnp.float32 if real_signal else (
-        phi.dtype if jnp.iscomplexobj(phi) else jnp.float32
-    )
-    x0 = jnp.zeros((n,), dtype=x_dtype)
-    phi_mv_true, _ = _dense_ops(phi)
-
-    def step(x, i):
-        if bits_phi and requantize == "pair":
-            k1 = jax.random.fold_in(kphi, 2 * i)
-            k2 = jax.random.fold_in(kphi, 2 * i + 1)
-            phi1 = fake_quantize(phi, bits_phi, k1)
-            phi2 = fake_quantize(phi, bits_phi, k2)
-        else:
-            phi1 = phi2 = phi_fixed
-        p1_mv, p1_rmv = _dense_ops(phi1)
-        p2_mv, _ = _dense_ops(phi2)
-        x_new, mu, changed, n_bt = niht_iteration(
-            x, y_hat, p1_mv, p1_rmv, p2_mv, s, c, shrink_k, max_backtracks,
-            real_signal, nonneg,
-        )
-        tr = (
-            jnp.sqrt(_sqnorm(y_hat - p2_mv(x_new))),
-            jnp.sqrt(_sqnorm(y - phi_mv_true(x_new))),
-            mu,
-            changed,
-            n_bt,
-        )
-        return x_new, tr
-
-    x_final, (rq, rt, mus, ch, bt) = jax.lax.scan(step, x0, jnp.arange(n_iters))
     return IHTResult(
-        x=x_final,
-        trace=IHTTrace(resid_q=rq, resid_true=rt, mu=mus, support_changed=ch, backtracks=bt),
+        x=res.x[0],
+        trace=jax.tree_util.tree_map(lambda t: t[:, 0], res.trace),
+    )
+
+
+@partial(jax.jit, static_argnames=_STATIC)
+def qniht_batch(
+    phi: jax.Array,
+    Y: jax.Array,
+    s: int,
+    n_iters: int = 50,
+    *,
+    bits_phi: Optional[int] = None,
+    bits_y: Optional[int] = None,
+    key: Optional[jax.Array] = None,
+    requantize: str = "pair",
+    backend: str = "dense",
+    threshold: str = "topk",
+    c: float = 0.01,
+    shrink_k: float = 2.0,
+    max_backtracks: int = 30,
+    real_signal: bool = False,
+    nonneg: bool = False,
+    with_trace: bool = True,
+) -> IHTResult:
+    """Recover B observation vectors of the same Φ at once (heavy-traffic mode).
+
+    ``Y`` is (B, M); returns x of shape (B, N) and trace arrays (n_iters, B).
+    One quantized/packed Φ̂ serves the whole batch: each iteration's matvecs are
+    single (B, ·) matmuls / qmm kernel calls, so the Φ̂ bytes stream ONCE per
+    application for all B problems — with ``backend="packed"`` the amortized
+    traffic per problem is ``size(Φ̂_packed)/B``. Per-problem step sizes,
+    acceptance tests, and backtracking are vmapped row logic. Row ``b`` matches
+    ``qniht(phi, Y[b], ..., key=key)`` up to f32 accumulation order (defaults
+    included: both sides default to ``requantize="pair"``; the packed backend
+    requires ``requantize="fixed"`` explicitly, same as ``qniht``).
+    """
+    if Y.ndim != 2:
+        raise ValueError("qniht_batch expects Y of shape (B, M); use qniht for one y")
+    _validate(bits_phi, bits_y, key, requantize, backend, threshold, real_signal)
+    return _qniht_core(
+        phi, Y, s, n_iters, bits_phi, bits_y, key, requantize, backend,
+        threshold, c, shrink_k, max_backtracks, real_signal, nonneg, with_trace,
     )
 
 

@@ -1,0 +1,161 @@
+"""Linear-operator backends for the (Q)NIHT hot loop.
+
+Blumensath & Davies' IHT analysis only ever touches the sensing matrix through
+``Φ̂ x`` / ``Φ̂† r`` products, so the solver needs nothing but a matvec pair —
+that is the seam that lets one NIHT loop run on three physically different
+representations of Φ̂:
+
+* :class:`DenseOperator`        — f32/c64 matrix, XLA dot. Full precision, and
+  also the ``requantize="fixed"`` *fake-quantized* carrier (quantized values
+  stored as dense floats: same math as deployment, same bytes as f32).
+* :class:`FakeQuantPairOperator`— the per-iteration fresh pair
+  (Φ̂_{2n-1}, Φ̂_{2n}) of Algorithm 1's ``requantize="pair"`` mode, each member
+  a fake-quantized :class:`DenseOperator`.
+* :class:`PackedStreamingOperator` — packed uint8 codes streamed through the
+  Pallas ``qmm`` kernels: 4/8/16× fewer operator bytes per application at
+  8/4/2 bits. The paper's systems claim (`T = size(Φ̂)/bandwidth`, suppl. §8.1)
+  lives here.
+
+Protocol: ``mv(x)`` computes Φ̂ x, ``rmv(r)`` computes Φ̂† r, ``nbytes`` is the
+bytes of operator data streamed by ONE application (mv ≈ rmv). All operators
+accept a single vector ``(n,)`` or a batch ``(B, n)``; a batch is served by one
+matmul/kernel invocation, amortizing the Φ̂ stream across B problems (the
+"heavy traffic" scenario exploited by ``qniht_batch``).
+
+Operators are pytrees (config in aux_data) so they close over ``lax.scan``
+bodies; they are built *inside* a jit trace, not passed across jit boundaries.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qmm.ops import (
+    PackedOperator,
+    pack_operator,
+    packed_matvec,
+    packed_rmatvec,
+)
+from repro.quant.quantize import fake_quantize
+
+
+@jax.tree_util.register_pytree_node_class
+class DenseOperator:
+    """Φ̂ as a dense (m, n) array; streams itemsize bytes/entry per application."""
+
+    def __init__(self, mat: jax.Array):
+        self.mat = mat
+
+    @property
+    def shape(self):
+        return self.mat.shape
+
+    @property
+    def nbytes(self) -> int:
+        return self.mat.size * self.mat.dtype.itemsize
+
+    def mv(self, x: jax.Array) -> jax.Array:
+        return x @ self.mat.T
+
+    def rmv(self, r: jax.Array) -> jax.Array:
+        m = self.mat
+        return r @ (jnp.conj(m) if jnp.iscomplexobj(m) else m)
+
+    def tree_flatten(self):
+        return (self.mat,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+class FakeQuantPairOperator:
+    """Algorithm 1's fresh stochastic pair (Φ̂_{2n-1}, Φ̂_{2n}) per iteration.
+
+    ``at_iteration(i)`` fake-quantizes Φ twice with iteration-folded keys and
+    returns the (gradient, residual) operators. Compute and traffic are dense
+    f32 — this backend models the paper's *statistical* algorithm, not the
+    deployed streaming system (that is :class:`PackedStreamingOperator`).
+    """
+
+    def __init__(self, phi: jax.Array, bits: int, key: jax.Array):
+        self.phi = phi
+        self.bits = int(bits)
+        self.key = key
+
+    @property
+    def shape(self):
+        return self.phi.shape
+
+    @property
+    def nbytes(self) -> int:
+        return self.phi.size * self.phi.dtype.itemsize
+
+    def at_iteration(self, i: jax.Array) -> tuple[DenseOperator, DenseOperator]:
+        k1 = jax.random.fold_in(self.key, 2 * i)
+        k2 = jax.random.fold_in(self.key, 2 * i + 1)
+        return (
+            DenseOperator(fake_quantize(self.phi, self.bits, k1)),
+            DenseOperator(fake_quantize(self.phi, self.bits, k2)),
+        )
+
+    def tree_flatten(self):
+        return (self.phi, self.key), (self.bits,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        phi, key = children
+        return cls(phi, aux[0], key)
+
+
+@jax.tree_util.register_pytree_node_class
+class PackedStreamingOperator:
+    """Φ̂ as packed uint8 codes, applied via the Pallas ``qmm`` kernels.
+
+    Both orientations are packed ONCE (shared codes — the same quantized data a
+    fixed-precision system streams), so every NIHT iteration moves
+    ``bits/32`` of the f32 bytes. ``interpret``/``use_pallas`` plumb through to
+    the kernel dispatch (pure-jnp oracle off-TPU).
+    """
+
+    def __init__(self, packed: PackedOperator, use_pallas: Optional[bool] = None,
+                 interpret: bool = False):
+        self.packed = packed
+        self.use_pallas = use_pallas
+        self.interpret = bool(interpret)
+
+    @classmethod
+    def pack(cls, phi: jax.Array, bits: int, key: Optional[jax.Array] = None,
+             **kw) -> "PackedStreamingOperator":
+        """Quantize + pack Φ with shared codes (matches fake_quantize(phi, bits, key))."""
+        return cls(pack_operator(phi, bits, key, shared=True), **kw)
+
+    @property
+    def bits(self) -> int:
+        return self.packed.fwd_re.bits
+
+    @property
+    def nbytes(self) -> int:
+        n = self.packed.fwd_re.nbytes
+        if self.packed.is_complex:
+            n += self.packed.fwd_im.nbytes
+        return n
+
+    def mv(self, x: jax.Array) -> jax.Array:
+        return packed_matvec(self.packed, x, use_pallas=self.use_pallas,
+                             interpret=self.interpret)
+
+    def rmv(self, r: jax.Array) -> jax.Array:
+        return packed_rmatvec(self.packed, r, use_pallas=self.use_pallas,
+                              interpret=self.interpret)
+
+    def tree_flatten(self):
+        return (self.packed,), (self.use_pallas, self.interpret)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)

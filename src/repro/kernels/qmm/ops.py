@@ -3,8 +3,10 @@
 * :func:`pack_weights` — quantize + pack a weight/measurement matrix for qmm.
 * :func:`qmm` — padded dispatch: Pallas kernel on TPU, oracle elsewhere.
 * :func:`qmm_complex` — complex Φ̂ × real/complex vectors via real matmuls.
-* :class:`PackedMatrix` / :func:`pack_operator` — both orientations of a CS
-  measurement matrix (Φ̂ and Φ̂†), the pair QNIHT streams every iteration.
+* :class:`PackedOperator` / :func:`pack_operator` — both orientations of a CS
+  measurement matrix (Φ̂ and Φ̂†), the pair QNIHT streams every iteration;
+  ``shared=True`` packs one quantization in both orientations (the
+  ``requantize="fixed"`` deployment mode behind ``qniht(backend="packed")``).
 """
 from __future__ import annotations
 
@@ -17,7 +19,7 @@ from repro.kernels.qmm.kernel import qmm_pallas
 from repro.kernels.qmm.ref import qmm_ref
 from repro.quant.formats import BY_BITS
 from repro.quant.pack import pack_codes
-from repro.quant.quantize import quantize_codes
+from repro.quant.quantize import quantize, quantize_codes
 
 
 def _round_up(v: int, mult: int) -> int:
@@ -130,12 +132,52 @@ class PackedOperator(NamedTuple):
         return total
 
 
+def _pack_from_codes(codes: jax.Array, scale: jax.Array, bits: int) -> PackedWeights:
+    """Build PackedWeights from pre-quantized (N, K) int codes + scalar scale."""
+    return PackedWeights(
+        packed=pack_codes(codes, bits),
+        scale=jnp.full((1, codes.shape[0]), scale, jnp.float32),
+        bits=bits,
+        k_dim=codes.shape[1],
+    )
+
+
 def pack_operator(
-    phi: jax.Array, bits: int, key: Optional[jax.Array] = None, per_channel: bool = False
+    phi: jax.Array,
+    bits: int,
+    key: Optional[jax.Array] = None,
+    per_channel: bool = False,
+    shared: bool = False,
 ) -> PackedOperator:
     """Quantize a dense (M, N) measurement matrix for streaming IHT.
 
-    Per-tensor scale by default (faithful to the paper's single c_Φ)."""
+    Per-tensor scale by default (faithful to the paper's single c_Φ).
+
+    ``shared=False`` draws an *independent* stochastic quantization for each
+    orientation (Algorithm 1's Φ̂_{2n-1}/Φ̂_{2n} pairing, unbiased in
+    expectation). ``shared=True`` quantizes **once** — the same codes back both
+    Φ̂ and Φ̂†, which is what a deployed ``requantize="fixed"`` system streaming
+    pre-quantized data does, and makes the adjoint identity ⟨Φ̂x, r⟩ = ⟨x, Φ̂†r⟩
+    exact. Shared codes match ``fake_quantize(phi, bits, key)`` bit-for-bit.
+    """
+    if shared:
+        if per_channel:
+            raise ValueError("shared codes use the paper's single per-tensor scale")
+        q = quantize(phi, bits, key)
+        if q.is_complex:
+            cre, cim = q.codes[0], q.codes[1]
+            return PackedOperator(
+                fwd_re=_pack_from_codes(cre, q.scale, bits),
+                fwd_im=_pack_from_codes(cim, q.scale, bits),
+                adj_re=_pack_from_codes(cre.T, q.scale, bits),
+                adj_im=_pack_from_codes(cim.T, q.scale, bits),
+            )
+        return PackedOperator(
+            fwd_re=_pack_from_codes(q.codes, q.scale, bits),
+            fwd_im=None,
+            adj_re=_pack_from_codes(q.codes.T, q.scale, bits),
+            adj_im=None,
+        )
     if jnp.iscomplexobj(phi):
         re, im = jnp.real(phi), jnp.imag(phi)
         keys = jax.random.split(key, 4) if key is not None else [None] * 4
@@ -155,27 +197,48 @@ def pack_operator(
 
 
 def packed_matvec(op: PackedOperator, x: jax.Array, **kw) -> jax.Array:
-    """Φ̂ x for real or complex Φ̂ (x may be real or complex)."""
+    """Φ̂ x for real or complex Φ̂ (x may be real or complex).
+
+    ``x`` is a single vector (N,) or a batch (B, N); a batch is served by ONE
+    kernel invocation per real matmul, amortizing the packed Φ̂ stream over B.
+    """
+    single = x.ndim == 1
+    xb = x[None, :] if single else x
     if not op.is_complex:
-        return qmm(x[None, :].astype(jnp.float32), op.fwd_re, **kw)[0]
-    xr = jnp.real(x).astype(jnp.float32)[None, :]
-    xi = jnp.imag(x).astype(jnp.float32)[None, :]
-    rr = qmm(xr, op.fwd_re, **kw)[0]
-    ri = qmm(xi, op.fwd_re, **kw)[0]
-    ir = qmm(xr, op.fwd_im, **kw)[0]
-    ii = qmm(xi, op.fwd_im, **kw)[0]
-    return jax.lax.complex(rr - ii, ri + ir)
+        out = qmm(xb.astype(jnp.float32), op.fwd_re, **kw)
+        return out[0] if single else out
+    xr = jnp.real(xb).astype(jnp.float32)
+    rr = qmm(xr, op.fwd_re, **kw)
+    ir = qmm(xr, op.fwd_im, **kw)
+    if not jnp.iscomplexobj(x):
+        # real input (e.g. a real sky through complex Φ̂): the imaginary-part
+        # products are identically zero — skip their kernel calls so the packed
+        # matrices stream once, not twice.
+        out = jax.lax.complex(rr, ir)
+        return out[0] if single else out
+    xi = jnp.imag(xb).astype(jnp.float32)
+    ri = qmm(xi, op.fwd_re, **kw)
+    ii = qmm(xi, op.fwd_im, **kw)
+    out = jax.lax.complex(rr - ii, ri + ir)
+    return out[0] if single else out
 
 
 def packed_rmatvec(op: PackedOperator, r: jax.Array, **kw) -> jax.Array:
-    """Φ̂† r (conjugate transpose) for real or complex Φ̂."""
+    """Φ̂† r (conjugate transpose) for real or complex Φ̂; (M,) or batched (B, M)."""
+    single = r.ndim == 1
+    rb = r[None, :] if single else r
     if not op.is_complex:
-        return qmm(r[None, :].astype(jnp.float32), op.adj_re, **kw)[0]
-    rr_ = jnp.real(r).astype(jnp.float32)[None, :]
-    ri_ = jnp.imag(r).astype(jnp.float32)[None, :]
+        out = qmm(rb.astype(jnp.float32), op.adj_re, **kw)
+        return out[0] if single else out
     # Φ† = (Re − j·Im)ᵀ ; (Φ† r) = (Reᵀ r_re + Imᵀ r_im) + j(Reᵀ r_im − Imᵀ r_re)
-    t1 = qmm(rr_, op.adj_re, **kw)[0]
-    t2 = qmm(ri_, op.adj_im, **kw)[0]
-    t3 = qmm(ri_, op.adj_re, **kw)[0]
-    t4 = qmm(rr_, op.adj_im, **kw)[0]
-    return jax.lax.complex(t1 + t2, t3 - t4)
+    rr_ = jnp.real(rb).astype(jnp.float32)
+    t1 = qmm(rr_, op.adj_re, **kw)
+    t4 = qmm(rr_, op.adj_im, **kw)
+    if not jnp.iscomplexobj(r):
+        out = jax.lax.complex(t1, -t4)
+        return out[0] if single else out
+    ri_ = jnp.imag(rb).astype(jnp.float32)
+    t2 = qmm(ri_, op.adj_im, **kw)
+    t3 = qmm(ri_, op.adj_re, **kw)
+    out = jax.lax.complex(t1 + t2, t3 - t4)
+    return out[0] if single else out

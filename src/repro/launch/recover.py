@@ -3,6 +3,22 @@
 ``python -m repro.launch.recover --config lofar --bits-phi 2 --bits-y 8``
 simulates the station, builds Φ, quantizes per Algorithm 1 and recovers the
 sky, reporting the Fig. 1/4 metrics.
+
+Backends (``--backend``):
+
+* ``dense``  — full-precision NIHT: Φ stays f32/c64, the Theorem 2 baseline.
+* ``fake``   — QNIHT with *fake* quantization: Φ̂'s values are quantized
+  (``--requantize pair`` redraws the stochastic pair each iteration —
+  Algorithm 1 verbatim; ``fixed`` quantizes once) but carried as dense floats.
+  Faithful to the paper's math; streams full-precision bytes.
+* ``packed`` — QNIHT streaming *packed* uint8 codes through the Pallas qmm
+  kernels (forces ``requantize=fixed``: the deployed systems stream
+  pre-quantized data). Same iterates as ``fake --requantize fixed`` up to f32
+  accumulation, with 32/bits× fewer operator bytes per matvec — the paper's
+  Fig. 5/6 speed-up mode.
+
+``--batch B`` recovers B observations of the same Φ̂ at once (``qniht_batch``):
+one packed Φ̂ stream serves the whole batch per iteration.
 """
 from __future__ import annotations
 
@@ -14,7 +30,7 @@ import jax.numpy as jnp
 
 from repro.configs.gaussian_toy import CONFIG as GAUSS_CONFIG, SMOKE as GAUSS_SMOKE
 from repro.configs.lofar_cs302 import BENCH as LOFAR_BENCH, CONFIG as LOFAR_CONFIG, SMOKE as LOFAR_SMOKE
-from repro.core import niht, qniht, relative_error, source_recovery, support_recovery
+from repro.core import niht, qniht, qniht_batch, relative_error, source_recovery, support_recovery
 from repro.sensing import (
     Station,
     make_gaussian_problem,
@@ -24,18 +40,44 @@ from repro.sensing import (
 )
 
 
-def recover_lofar(cs, bits_phi, bits_y, key, requantize="pair"):
+def _solver_kwargs(backend, bits_phi, bits_y, key, requantize):
+    if backend == "dense":
+        return dict()
+    return dict(
+        bits_phi=bits_phi,
+        bits_y=bits_y,
+        key=key,
+        requantize="fixed" if backend == "packed" else requantize,
+        backend="packed" if backend == "packed" else "dense",
+    )
+
+
+def recover_lofar(cs, backend, bits_phi, bits_y, key, requantize="pair", batch=0):
     st = Station(n_antennas=cs.n_antennas, seed=cs.seed)
     phi = measurement_matrix(st, cs.resolution, cs.extent)
+    kw = _solver_kwargs(backend, bits_phi, bits_y, key, requantize)
+    if batch:
+        skies = [make_sky(cs.resolution, cs.n_sources, jax.random.fold_in(key, b),
+                          min_sep=cs.min_sep) for b in range(batch)]
+        Y = jnp.stack([visibilities(phi, x, cs.snr_db, jax.random.fold_in(key, b))[0]
+                       for b, x in enumerate(skies)])
+        X_true = jnp.stack(skies)
+        t0 = time.time()
+        res = qniht_batch(phi, Y, cs.n_sources, cs.n_iters,
+                          real_signal=True, nonneg=True, **kw)
+        jax.block_until_ready(res.x)
+        wall = time.time() - t0
+        rel = [float(relative_error(res.x[b], X_true[b])) for b in range(batch)]
+        return {"batch": batch, "rel_error_mean": sum(rel) / batch,
+                "rel_error_max": max(rel), "wall_s": wall}
     x = make_sky(cs.resolution, cs.n_sources, key, min_sep=cs.min_sep)
     y, _ = visibilities(phi, x, cs.snr_db, key)
     t0 = time.time()
-    if bits_phi is None:
+    if backend == "dense":
         res = niht(phi, y, cs.n_sources, cs.n_iters, real_signal=True, nonneg=True)
     else:
-        res = qniht(phi, y, cs.n_sources, cs.n_iters, bits_phi=bits_phi,
-                    bits_y=bits_y, key=key, requantize=requantize,
-                    real_signal=True, nonneg=True)
+        res = qniht(phi, y, cs.n_sources, cs.n_iters, real_signal=True,
+                    nonneg=True, **kw)
     jax.block_until_ready(res.x)
     wall = time.time() - t0
     r = cs.resolution
@@ -49,32 +91,59 @@ def recover_lofar(cs, bits_phi, bits_y, key, requantize="pair"):
     }
 
 
+def recover_gaussian(g, backend, bits_phi, bits_y, key, requantize="pair", batch=0):
+    prob = make_gaussian_problem(g.m, g.n, g.s, 20.0, key)
+    kw = _solver_kwargs(backend, bits_phi, bits_y, key, requantize)
+    if batch:
+        # B problems sharing phi: fresh sparse signals + noise per row.
+        probs = [make_gaussian_problem(g.m, g.n, g.s, 20.0,
+                                       jax.random.fold_in(key, b + 1),
+                                       phi=prob.phi) for b in range(batch)]
+        Y = jnp.stack([p.y for p in probs])
+        X_true = jnp.stack([p.x_true for p in probs])
+        t0 = time.time()
+        res = qniht_batch(prob.phi, Y, g.s, g.n_iters, **kw)
+        jax.block_until_ready(res.x)
+        rel = [float(relative_error(res.x[b], X_true[b])) for b in range(batch)]
+        return {"batch": batch, "rel_error_mean": sum(rel) / batch,
+                "rel_error_max": max(rel), "wall_s": time.time() - t0}
+    res = (niht(prob.phi, prob.y, g.s, g.n_iters) if backend == "dense" else
+           qniht(prob.phi, prob.y, g.s, g.n_iters, **kw))
+    return {"rel_error": float(relative_error(res.x, prob.x_true)),
+            "support_recovery": float(support_recovery(res.x, prob.x_true, g.s))}
+
+
 def main(argv=None):
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--config", default="lofar-bench",
                     choices=["lofar", "lofar-bench", "lofar-smoke", "gaussian", "gaussian-smoke"])
+    ap.add_argument("--backend", default="fake", choices=["dense", "fake", "packed"],
+                    help="dense: f32 NIHT baseline; fake: quantized values, dense "
+                         "compute (Algorithm 1); packed: stream packed codes via "
+                         "the Pallas qmm kernels (forces --requantize fixed)")
     ap.add_argument("--bits-phi", type=int, default=2)
     ap.add_argument("--bits-y", type=int, default=8)
-    ap.add_argument("--full-precision", action="store_true")
+    ap.add_argument("--full-precision", action="store_true",
+                    help="alias for --backend dense")
     ap.add_argument("--requantize", default="pair", choices=["pair", "fixed"])
+    ap.add_argument("--batch", type=int, default=0,
+                    help="recover B observations of one Φ̂ at once (qniht_batch)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    backend = "dense" if args.full_precision else args.backend
     key = jax.random.PRNGKey(args.seed)
-    bits_phi = None if args.full_precision else args.bits_phi
     if args.config.startswith("lofar"):
         cs = {"lofar": LOFAR_CONFIG, "lofar-bench": LOFAR_BENCH,
               "lofar-smoke": LOFAR_SMOKE}[args.config]
-        out = recover_lofar(cs, bits_phi, args.bits_y, key, args.requantize)
+        out = recover_lofar(cs, backend, args.bits_phi, args.bits_y, key,
+                            args.requantize, args.batch)
     else:
         g = GAUSS_CONFIG if args.config == "gaussian" else GAUSS_SMOKE
-        prob = make_gaussian_problem(g.m, g.n, g.s, 20.0, key)
-        res = (niht(prob.phi, prob.y, g.s, g.n_iters) if bits_phi is None else
-               qniht(prob.phi, prob.y, g.s, g.n_iters, bits_phi=bits_phi,
-                     bits_y=args.bits_y, key=key, requantize=args.requantize))
-        out = {"rel_error": float(relative_error(res.x, prob.x_true)),
-               "support_recovery": float(support_recovery(res.x, prob.x_true, g.s))}
-    label = "32bit" if bits_phi is None else f"{bits_phi}&{args.bits_y}bit"
+        out = recover_gaussian(g, backend, args.bits_phi, args.bits_y, key,
+                               args.requantize, args.batch)
+    label = "32bit" if backend == "dense" else f"{args.bits_phi}&{args.bits_y}bit[{backend}]"
     print(f"[recover] {args.config} {label}: " +
           " ".join(f"{k}={v if not isinstance(v, float) else round(v, 4)}"
                    for k, v in out.items()))

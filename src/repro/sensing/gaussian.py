@@ -25,12 +25,20 @@ def make_gaussian_problem(
     snr_db: Optional[float] = 10.0,
     key: Optional[jax.Array] = None,
     x_dist: str = "gaussian",
+    phi: Optional[jax.Array] = None,
 ) -> CSProblem:
     """Random dense-Gaussian CS instance (Φ_{ij} ~ N(0, 1), unit variance as in
-    supplementary §10; NIHT is scale-invariant so no column normalization)."""
+    supplementary §10; NIHT is scale-invariant so no column normalization).
+
+    Pass ``phi`` to reuse one measurement matrix across problems (the batched
+    serving scenario: many observations of the same Φ); only the sparse signal
+    and noise are drawn from ``key`` then."""
     key = key if key is not None else jax.random.PRNGKey(0)
     kphi, kx, kflux, ke = jax.random.split(key, 4)
-    phi = jax.random.normal(kphi, (m, n), jnp.float32)
+    if phi is None:
+        phi = jax.random.normal(kphi, (m, n), jnp.float32)
+    elif phi.shape != (m, n):
+        raise ValueError(f"shared phi shape {phi.shape} != ({m}, {n})")
     idx = jax.random.choice(kx, n, (s,), replace=False)
     if x_dist == "gaussian":
         vals = jax.random.normal(kflux, (s,), jnp.float32)

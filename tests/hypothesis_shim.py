@@ -1,0 +1,48 @@
+"""Optional-``hypothesis`` shim for the property tests.
+
+``hypothesis`` is a test-only extra (``pip install .[test]``) that hermetic CI
+containers may not ship. Importing it at module scope used to error 8 of the 17
+test modules out of collection; importing from this shim instead keeps every
+module collectible: with hypothesis installed the real ``given``/``settings``/
+``st`` are re-exported, without it the ``@given`` tests are replaced by stubs
+carrying a skip marker (plain unit tests in the same module still run).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # A fresh (*a, **k) stub requests no pytest fixtures, so the
+            # strategy kwargs of the wrapped test never reach collection.
+            # No functools.wraps: inspect.signature would follow __wrapped__
+            # back to the original parameters.
+            def stub(*a, **k):
+                pass
+
+            stub.__name__ = getattr(fn, "__name__", "property_test")
+            stub.__doc__ = fn.__doc__
+            return pytest.mark.skip(reason="hypothesis not installed")(stub)
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _StrategyStub:
+        """st.<anything>(...) placeholder; only consumed by the stubbed @given."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

@@ -1,0 +1,249 @@
+"""Operator backends + packed/batched QNIHT: the PR-1 hot-path contracts.
+
+Covers:
+* operator protocol units (dense adjoint identity, packed nbytes law, batched
+  mv == stacked single mvs),
+* packed-backend qniht parity vs the dense ``requantize="fixed"`` path at
+  8/4/2 bits (shared codes → same iterates up to f32 accumulation),
+* ``qniht_batch`` vs a Python loop of single recoveries,
+* the streaming ``hsthresh`` H_s inside the loop (support-size parity).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DenseOperator,
+    FakeQuantPairOperator,
+    PackedStreamingOperator,
+    niht_iteration,
+    qniht,
+    qniht_batch,
+    relative_error,
+)
+from repro.quant import fake_quantize
+from repro.sensing import make_gaussian_problem
+
+BITS = [8, 4, 2]
+
+
+class TestOperatorProtocol:
+    def test_dense_matches_matmul(self):
+        key = jax.random.PRNGKey(0)
+        mat = jax.random.normal(key, (24, 48), jnp.float32)
+        op = DenseOperator(mat)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (48,), jnp.float32)
+        r = jax.random.normal(jax.random.fold_in(key, 2), (24,), jnp.float32)
+        np.testing.assert_allclose(np.asarray(op.mv(x)), np.asarray(mat @ x),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(op.rmv(r)), np.asarray(mat.T @ r),
+                                   rtol=1e-5, atol=1e-6)
+        assert op.nbytes == mat.size * 4
+
+    def test_dense_complex_adjoint_identity(self):
+        key = jax.random.PRNGKey(1)
+        mat = (jax.random.normal(key, (16, 32)) +
+               1j * jax.random.normal(jax.random.fold_in(key, 1), (16, 32))
+               ).astype(jnp.complex64)
+        op = DenseOperator(mat)
+        x = jax.random.normal(jax.random.fold_in(key, 2), (32,), jnp.float32
+                              ).astype(jnp.complex64)
+        r = (jax.random.normal(jax.random.fold_in(key, 3), (16,)) +
+             1j * jax.random.normal(jax.random.fold_in(key, 4), (16,))
+             ).astype(jnp.complex64)
+        lhs = jnp.vdot(op.mv(x), r)
+        rhs = jnp.vdot(x, op.rmv(r))
+        assert float(jnp.abs(lhs - rhs)) / float(jnp.abs(lhs)) < 1e-5
+
+    @pytest.mark.parametrize("bits", BITS)
+    def test_packed_adjoint_identity_shared_codes(self, bits):
+        """Shared codes make ⟨Φ̂x, r⟩ = ⟨x, Φ̂†r⟩ exact (one quantization backs
+        both orientations), even with a stochastic key."""
+        key = jax.random.PRNGKey(2)
+        phi = jax.random.normal(key, (24, 40), jnp.float32)
+        op = PackedStreamingOperator.pack(phi, bits, jax.random.fold_in(key, 1))
+        x = jax.random.normal(jax.random.fold_in(key, 2), (40,), jnp.float32)
+        r = jax.random.normal(jax.random.fold_in(key, 3), (24,), jnp.float32)
+        lhs = float(jnp.vdot(op.mv(x), r))
+        rhs = float(jnp.vdot(x, op.rmv(r)))
+        assert abs(lhs - rhs) / max(abs(lhs), 1e-6) < 1e-5
+
+    @pytest.mark.parametrize("bits", BITS)
+    def test_packed_matches_fake_quantize(self, bits):
+        """Shared-codes packing dequantizes to fake_quantize(phi) bit-for-bit."""
+        key = jax.random.PRNGKey(3)
+        phi = jax.random.normal(key, (16, 24), jnp.float32)
+        kq = jax.random.fold_in(key, 1)
+        op = PackedStreamingOperator.pack(phi, bits, kq)
+        phi_hat = fake_quantize(phi, bits, kq)
+        x = jax.random.normal(jax.random.fold_in(key, 2), (24,), jnp.float32)
+        np.testing.assert_allclose(np.asarray(op.mv(x)), np.asarray(phi_hat @ x),
+                                   rtol=1e-5, atol=1e-5)
+        r = jax.random.normal(jax.random.fold_in(key, 3), (16,), jnp.float32)
+        np.testing.assert_allclose(np.asarray(op.rmv(r)), np.asarray(phi_hat.T @ r),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_packed_batched_mv_matches_singles(self):
+        key = jax.random.PRNGKey(4)
+        phi = jax.random.normal(key, (24, 40), jnp.float32)
+        op = PackedStreamingOperator.pack(phi, 4, jax.random.fold_in(key, 1))
+        X = jax.random.normal(jax.random.fold_in(key, 2), (5, 40), jnp.float32)
+        batched = op.mv(X)
+        assert batched.shape == (5, 24)
+        for b in range(5):
+            np.testing.assert_allclose(np.asarray(batched[b]),
+                                       np.asarray(op.mv(X[b])), rtol=1e-5, atol=1e-5)
+
+    def test_packed_nbytes_law(self):
+        phi = jax.random.normal(jax.random.PRNGKey(5), (64, 128), jnp.float32)
+        dense = DenseOperator(phi)
+        for bits, factor in ((8, 4), (4, 8), (2, 16)):
+            op = PackedStreamingOperator.pack(phi, bits)
+            assert dense.nbytes == factor * op.nbytes
+
+    def test_fake_quant_pair_draws_fresh(self):
+        key = jax.random.PRNGKey(6)
+        phi = jax.random.normal(key, (16, 24), jnp.float32)
+        fam = FakeQuantPairOperator(phi, 2, key)
+        op1a, op2a = fam.at_iteration(jnp.asarray(0))
+        op1b, _ = fam.at_iteration(jnp.asarray(1))
+        assert not np.array_equal(np.asarray(op1a.mat), np.asarray(op2a.mat))
+        assert not np.array_equal(np.asarray(op1a.mat), np.asarray(op1b.mat))
+
+    def test_niht_iteration_operator_api(self):
+        prob = make_gaussian_problem(32, 64, 3, snr_db=None, key=jax.random.PRNGKey(7))
+        op = DenseOperator(prob.phi)
+        x0 = jnp.zeros((64,), jnp.float32)
+        x1, mu, changed, n_bt = niht_iteration(
+            x0, prob.y, op, op, 3, 0.01, 2.0, 30, False, False)
+        assert x1.shape == (64,)
+        assert int(jnp.sum(jnp.abs(x1) > 0)) <= 3
+        assert float(mu) > 0
+
+
+class TestPackedBackendParity:
+    @pytest.mark.parametrize("bits", BITS)
+    def test_matches_dense_fixed(self, bits):
+        """backend='packed' streams the same codes the dense fixed path
+        materializes as f32 → same iterates up to accumulation order."""
+        key = jax.random.PRNGKey(10)
+        prob = make_gaussian_problem(64, 128, 6, snr_db=25.0, key=key)
+        kw = dict(bits_phi=bits, bits_y=8, key=key, requantize="fixed")
+        r_dense = qniht(prob.phi, prob.y, prob.s, 30, **kw)
+        r_packed = qniht(prob.phi, prob.y, prob.s, 30, backend="packed", **kw)
+        ref = float(jnp.linalg.norm(r_dense.x))
+        assert float(jnp.linalg.norm(r_packed.x - r_dense.x)) <= 1e-3 * ref
+        np.testing.assert_allclose(np.asarray(r_packed.trace.resid_q),
+                                   np.asarray(r_dense.trace.resid_q),
+                                   rtol=1e-3, atol=1e-5)
+
+    def test_packed_rejects_pair_mode(self):
+        prob = make_gaussian_problem(32, 64, 3, key=jax.random.PRNGKey(11))
+        with pytest.raises(ValueError):
+            qniht(prob.phi, prob.y, prob.s, 5, bits_phi=4, key=jax.random.PRNGKey(0),
+                  requantize="pair", backend="packed")
+
+    def test_packed_requires_bits(self):
+        prob = make_gaussian_problem(32, 64, 3, key=jax.random.PRNGKey(12))
+        with pytest.raises(ValueError):
+            qniht(prob.phi, prob.y, prob.s, 5, backend="packed")
+
+    def test_complex_packed_matches_dense_fixed(self):
+        key = jax.random.PRNGKey(13)
+        m, n = 48, 96
+        phi = (jax.random.normal(key, (m, n)) +
+               1j * jax.random.normal(jax.random.fold_in(key, 1), (m, n))
+               ).astype(jnp.complex64)
+        x = jnp.zeros((n,), jnp.float32).at[:4].set(jnp.asarray([1.0, 0.8, -0.5, 0.3]))
+        y = phi @ x
+        kw = dict(bits_phi=8, bits_y=8, key=key, requantize="fixed",
+                  real_signal=True, nonneg=False)
+        r_dense = qniht(phi, y, 4, 25, **kw)
+        r_packed = qniht(phi, y, 4, 25, backend="packed", **kw)
+        ref = float(jnp.linalg.norm(r_dense.x)) + 1e-12
+        assert float(jnp.linalg.norm(r_packed.x - r_dense.x)) <= 1e-3 * ref
+
+
+class TestBatchedRecovery:
+    def test_batch_matches_looped_singles(self):
+        key = jax.random.PRNGKey(20)
+        prob = make_gaussian_problem(64, 128, 6, snr_db=25.0, key=key)
+        B = 5
+        # B observations of the same Φ: fresh sparse signals per row
+        probs = [make_gaussian_problem(64, 128, 6, snr_db=25.0,
+                                       key=jax.random.fold_in(key, b + 1),
+                                       phi=prob.phi) for b in range(B)]
+        X_true = [p.x_true for p in probs]
+        Y = jnp.stack([p.y for p in probs])
+        kw = dict(bits_phi=8, bits_y=8, key=key, requantize="fixed",
+                  backend="packed")
+        res_b = qniht_batch(prob.phi, Y, 6, 30, **kw)
+        assert res_b.x.shape == (B, 128)
+        assert res_b.trace.resid_q.shape == (30, B)
+        for b in range(B):
+            res_s = qniht(prob.phi, Y[b], 6, 30, **kw)
+            ref = float(jnp.linalg.norm(res_s.x)) + 1e-12
+            assert float(jnp.linalg.norm(res_b.x[b] - res_s.x)) <= 1e-3 * ref
+            # every row actually recovers its own signal
+            assert float(relative_error(res_b.x[b], X_true[b])) < 0.15
+
+    def test_batch_full_precision_and_support(self):
+        key = jax.random.PRNGKey(21)
+        prob = make_gaussian_problem(48, 96, 4, snr_db=None, key=key)
+        Y = jnp.stack([prob.y, 2.0 * prob.y])
+        res = qniht_batch(prob.phi, Y, 4, 40)
+        # linearity: doubling y doubles the recovered x
+        np.testing.assert_allclose(np.asarray(res.x[1]), 2 * np.asarray(res.x[0]),
+                                   rtol=1e-3, atol=1e-5)
+        counts = jnp.sum(jnp.abs(res.x) > 0, axis=1)
+        assert int(jnp.max(counts)) <= 4
+
+    def test_batch_rejects_vector(self):
+        prob = make_gaussian_problem(32, 64, 3, key=jax.random.PRNGKey(22))
+        with pytest.raises(ValueError):
+            qniht_batch(prob.phi, prob.y, 3, 5)
+
+
+class TestHsthreshInLoop:
+    def test_support_size_parity_with_topk(self):
+        """The streaming H_s keeps the loop's support invariant: |supp| ≤ s,
+        and on this (distinct-magnitude) toy it matches exact top-k."""
+        key = jax.random.PRNGKey(30)
+        prob = make_gaussian_problem(64, 128, 6, snr_db=25.0, key=key)
+        kw = dict(bits_phi=8, bits_y=8, key=key, requantize="fixed",
+                  backend="packed", real_signal=True)
+        r_hs = qniht(prob.phi, prob.y, prob.s, 30, threshold="hsthresh", **kw)
+        r_tk = qniht(prob.phi, prob.y, prob.s, 30, threshold="topk", **kw)
+        n_hs = int(jnp.sum(jnp.abs(r_hs.x) > 0))
+        n_tk = int(jnp.sum(jnp.abs(r_tk.x) > 0))
+        assert n_hs <= prob.s
+        assert n_hs == n_tk
+        assert (float(relative_error(r_hs.x, prob.x_true))
+                <= float(relative_error(r_tk.x, prob.x_true)) + 0.05)
+
+    def test_hsthresh_requires_real_signal(self):
+        prob = make_gaussian_problem(32, 64, 3, key=jax.random.PRNGKey(31))
+        with pytest.raises(ValueError):
+            qniht(prob.phi, prob.y, 3, 5, threshold="hsthresh")
+
+    def test_hsthresh_in_batch(self):
+        key = jax.random.PRNGKey(32)
+        prob = make_gaussian_problem(48, 96, 4, snr_db=20.0, key=key)
+        Y = jnp.stack([prob.y, 0.5 * prob.y, -prob.y])
+        res = qniht_batch(prob.phi, Y, 4, 25, bits_phi=8, bits_y=8, key=key,
+                          requantize="fixed", backend="packed",
+                          threshold="hsthresh", real_signal=True)
+        counts = jnp.sum(jnp.abs(res.x) > 0, axis=1)
+        assert int(jnp.max(counts)) <= 4
+
+
+class TestTraceToggle:
+    def test_with_trace_false_skips_residuals(self):
+        prob = make_gaussian_problem(32, 64, 3, snr_db=20.0, key=jax.random.PRNGKey(40))
+        res = qniht(prob.phi, prob.y, 3, 10, with_trace=False)
+        assert bool(jnp.all(jnp.isnan(res.trace.resid_q)))
+        assert bool(jnp.all(jnp.isnan(res.trace.resid_true)))
+        # the iterates themselves are unaffected
+        ref = qniht(prob.phi, prob.y, 3, 10)
+        np.testing.assert_allclose(np.asarray(res.x), np.asarray(ref.x), rtol=1e-6)
