@@ -1,6 +1,8 @@
-"""Shared benchmark utilities: timing + CSV rows (`name,us_per_call,derived`)."""
+"""Shared benchmark utilities: timing + CSV rows (`name,us_per_call,derived`)
++ the per-suite JSON trajectory files (`BENCH_*.json`, one run per PR)."""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -21,3 +23,18 @@ def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
 
 def row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def measure(fn):
+    """(µs, result): the result call doubles as the compile warmup."""
+    res = jax.block_until_ready(fn())
+    return time_fn(fn, warmup=0, iters=3), res
+
+
+def write_json(records: list, path: str) -> None:
+    """Timestamp + write one suite's record dicts to its BENCH_*.json file."""
+    stamp = time.strftime("%Y-%m-%dT%H:%M:%S")
+    for r in records:
+        r["timestamp"] = stamp
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1)

@@ -16,14 +16,12 @@ so the trajectory lives in its git history without unbounded growth.
 """
 from __future__ import annotations
 
-import json
 import os
-import time
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import measure, row, write_json
 from repro.configs.gaussian_toy import CONFIG, SMOKE
 from repro.core import qniht, qniht_batch, relative_error
 from repro.sensing import make_gaussian_problem
@@ -63,11 +61,6 @@ def run(fast: bool = True):
             "m": g.m, "n": g.n, "s": g.s, "n_iters": g.n_iters, "extra": extra,
         })
 
-    def measure(fn):
-        """(µs, result): the result call doubles as the compile warmup."""
-        res = jax.block_until_ready(fn())
-        return time_fn(fn, warmup=0, iters=3), res
-
     # dense f32 baseline
     us_dense, res = measure(
         lambda: qniht(prob.phi, prob.y, g.s, g.n_iters, with_trace=False))
@@ -105,13 +98,5 @@ def run(fast: bool = True):
         add(f"fig5b/recover_packed_int{bits}_batch{BATCH}", us, bits, rel,
             f"batch={BATCH} vs_{BATCH}_singles={amort:.2f}x", bits_phi=bits)
 
-    _write_json(records)
+    write_json(records, JSON_PATH)
     return rows
-
-
-def _write_json(records) -> None:
-    stamp = time.strftime("%Y-%m-%dT%H:%M:%S")
-    for r in records:
-        r["timestamp"] = stamp
-    with open(JSON_PATH, "w") as f:
-        json.dump(records, f, indent=1)

@@ -1,0 +1,104 @@
+"""MRI (paper §5): recovery quality + wall time vs observation precision b_y.
+
+The MRI workload quantizes the *acquired k-space samples* (Φ itself is the
+implicit unit-modulus Fourier operator — there is nothing to quantize on the
+operator side, and nothing dense to stream: ``SubsampledFourierOperator``
+stores only the sampling pattern). The sweep recovers the s-sparse brain
+phantom at b_y ∈ {32, 8, 4, 2} and reports PSNR / relative error / wall time
+per precision, plus a batched run (B phantoms sharing one mask) showing the
+serving-mode amortization on the matrix-free path.
+
+The ``phi_nbytes`` column is the point of the matrix-free seam: the dense
+partial-Fourier Φ this replaces would be ``16 · fraction · N²`` bytes
+(complex64) — reported as ``dense_phi_bytes`` for contrast.
+
+Rows double as the perf trajectory: every run rewrites ``BENCH_mri.json``
+(override the path with the ``BENCH_MRI_JSON`` env var); the committed file
+tracks one run per PR, so the trajectory lives in its git history.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import measure, row, write_json
+from repro.configs.mri_brain import BENCH, SMOKE
+from repro.core import psnr, qniht, qniht_batch, relative_error
+from repro.sensing import (
+    brain_phantom,
+    make_mri_problem,
+    mri_observations,
+    sparsify_image,
+)
+
+JSON_PATH = os.environ.get("BENCH_MRI_JSON", "BENCH_mri.json")
+BATCH = 4
+
+
+def run(fast: bool = True):
+    cfg = SMOKE if fast else BENCH
+    r = cfg.resolution
+    key = jax.random.PRNGKey(cfg.seed)
+    prob = make_mri_problem(r, cfg.n_sparse, cfg.fraction, key,
+                            density=cfg.density,
+                            center_fraction=cfg.center_fraction,
+                            snr_db=cfg.snr_db, phantom=cfg.phantom)
+    dense_phi_bytes = prob.op.shape[0] * prob.op.shape[1] * 8  # complex64 Φ it replaces
+    rows, records = [], []
+
+    def add(name, us, bits_y, res_x, extra=""):
+        ps = float(psnr(res_x.reshape(r, r), prob.x_true.reshape(r, r)))
+        rel = float(relative_error(res_x, prob.x_true))
+        derived = (f"psnr_db={ps:.2f} rel_error={rel:.4f} "
+                   f"phi_nbytes={prob.op.nbytes} vs_dense={dense_phi_bytes}"
+                   + (f" {extra}" if extra else ""))
+        rows.append(row(name, us, derived))
+        records.append({
+            "name": name, "us_per_call": round(us, 1), "bits_y": bits_y,
+            "psnr_db": round(ps, 2), "rel_error": round(rel, 5),
+            "resolution": r, "m": prob.op.shape[0], "s": cfg.n_sparse,
+            "n_iters": cfg.n_iters, "phi_nbytes": prob.op.nbytes,
+            "dense_phi_bytes": dense_phi_bytes, "extra": extra,
+        })
+
+    def solve(bits_y):
+        kw = dict(real_signal=True, nonneg=True, with_trace=False)
+        if bits_y:
+            kw.update(bits_y=bits_y, key=key)
+        return qniht(prob.op, prob.y, cfg.n_sparse, cfg.n_iters, **kw)
+
+    us, res = measure(lambda: solve(None))
+    add("mri/recover_y_f32", us, None, res.x, "speedup=1.00x")
+    us32 = us
+    for bits in (8, 4, 2):
+        us, res = measure(lambda b=bits: solve(b))
+        add(f"mri/recover_y_int{bits}", us, bits, res.x,
+            f"vs_f32={us32 / us:.2f}x")
+
+    # batched serving: B randomized phantoms share one sampling mask
+    X_true = jnp.stack(
+        [sparsify_image(brain_phantom(r, jax.random.fold_in(key, b)),
+                        cfg.n_sparse) for b in range(BATCH)])
+    Y, _ = mri_observations(prob.op, X_true, cfg.snr_db,
+                            jax.random.fold_in(key, BATCH))
+    us, res_b = measure(
+        lambda: qniht_batch(prob.op, Y, cfg.n_sparse, cfg.n_iters, bits_y=8,
+                            key=key, real_signal=True, nonneg=True,
+                            with_trace=False))
+    ps = [float(psnr(res_b.x[b].reshape(r, r), X_true[b].reshape(r, r)))
+          for b in range(BATCH)]
+    rows.append(row(f"mri/recover_y_int8_batch{BATCH}", us,
+                    f"psnr_db_min={min(ps):.2f} psnr_db_mean={sum(ps)/BATCH:.2f} "
+                    f"batch={BATCH}"))
+    records.append({
+        "name": f"mri/recover_y_int8_batch{BATCH}", "us_per_call": round(us, 1),
+        "bits_y": 8, "psnr_db": round(min(ps), 2), "rel_error": None,
+        "resolution": r, "m": prob.op.shape[0], "s": cfg.n_sparse,
+        "n_iters": cfg.n_iters, "phi_nbytes": prob.op.nbytes,
+        "dense_phi_bytes": dense_phi_bytes, "extra": f"batch={BATCH}",
+    })
+
+    write_json(records, JSON_PATH)
+    return rows

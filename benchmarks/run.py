@@ -39,6 +39,7 @@ def main(argv=None) -> None:
         fig7_rip_bits,
         fig9_clean,
         fig11_gaussian,
+        fig_mri,
         kernels_micro,
         roofline,
     )
@@ -53,6 +54,7 @@ def main(argv=None) -> None:
         "fig7": fig7_rip_bits,
         "fig9": fig9_clean,
         "fig11": fig11_gaussian,
+        "mri": fig_mri,
         "kernels": kernels_micro,
         "roofline": roofline,
     }

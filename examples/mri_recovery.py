@@ -1,0 +1,73 @@
+"""End-to-end driver: MRI brain recovery from quantized k-space (paper §5).
+
+Builds an s-sparse Shepp–Logan (or randomized brain) phantom, undersamples its
+2D Fourier transform with a variable-density Cartesian mask, quantizes the
+acquired samples to ``--bits-y`` bits, and recovers the image with matrix-free
+QNIHT — the sensing operator is an implicit FFT + mask, so no dense Φ is ever
+materialized (at 256×256 it would be ~2 GB).
+
+    PYTHONPATH=src python examples/mri_recovery.py [--resolution 96] [--fraction 0.35]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import psnr, qniht, relative_error
+from repro.sensing import ascii_render, make_mri_problem, quantize_observations
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--resolution", type=int, default=96)
+    ap.add_argument("--sparsity", type=int, default=300)
+    ap.add_argument("--fraction", type=float, default=0.35)
+    ap.add_argument("--density", default="variable", choices=["uniform", "variable"])
+    ap.add_argument("--phantom", default="shepp-logan", choices=["shepp-logan", "brain"])
+    ap.add_argument("--iters", type=int, default=40)
+    ap.add_argument("--seed", type=int, default=5)
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(args.seed)
+    r = args.resolution
+    prob = make_mri_problem(r, args.sparsity, args.fraction, key,
+                            density=args.density, phantom=args.phantom)
+    m, n = prob.op.shape
+    print(f"k-space: {m}/{n} samples ({100 * m / n:.0f}%, {args.density} density)")
+    print(f"Φ = P_Ω F (matrix-free): {prob.op.nbytes / 1e3:.1f} KB sampling pattern "
+          f"vs {m * n * 8 / 1e6:.0f} MB dense complex64")
+
+    img_true = prob.x_true.reshape(r, r)
+    print(f"\ns-sparse phantom (s = {args.sparsity}):")
+    print(ascii_render(img_true, width=min(r, 64)))
+
+    # zero-filled inverse FFT: the non-CS baseline every scanner can do
+    zf = jnp.real(prob.op.rmv(prob.y)).reshape(r, r)
+    print("\nzero-filled adjoint (no CS):")
+    print(ascii_render(zf, width=min(r, 64)))
+    print(f"  psnr={float(psnr(zf, img_true)):.1f} dB")
+
+    for name, by in (("32-bit y", None), ("8-bit y", 8), ("4-bit y", 4)):
+        kw = dict(real_signal=True, nonneg=True)
+        if by:
+            kw.update(bits_y=by, key=key)
+            yq = quantize_observations(prob.y, by, key)
+            q_noise = float(jnp.linalg.norm(yq - prob.y) / jnp.linalg.norm(prob.y))
+            print(f"\nquantizing k-space to {by} bits "
+                  f"(relative quantization noise {q_noise:.1%})")
+        t0 = time.time()
+        res = qniht(prob.op, prob.y, args.sparsity, args.iters, **kw)
+        jax.block_until_ready(res.x)
+        img = jnp.real(res.x).reshape(r, r)
+        print(f"\n{name} matrix-free QNIHT "
+              f"({time.time() - t0:.1f}s, {args.iters} iterations):")
+        print(ascii_render(img, width=min(r, 64)))
+        print(f"  psnr={float(psnr(img, img_true)):.1f} dB  "
+              f"rel_error={float(relative_error(res.x, prob.x_true)):.4f}  "
+              f"support_size={int(np.sum(np.abs(np.asarray(res.x)) > 0))}")
+
+
+if __name__ == "__main__":
+    main()

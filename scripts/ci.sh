@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 test entry point with a quick pre-commit tier.
+#
+#   scripts/ci.sh        # fast: skip @slow (subprocess dry-run / multidevice) tests
+#   scripts/ci.sh fast   # same
+#   scripts/ci.sh full   # everything — the driver's tier-1 command
+#
+# Extra args go straight to pytest: scripts/ci.sh fast -k mri
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+mode="${1:-fast}"
+[ $# -gt 0 ] && shift
+case "$mode" in
+  fast) exec python -m pytest -x -q -m "not slow" "$@" ;;
+  full) exec python -m pytest -x -q "$@" ;;
+  *) echo "usage: scripts/ci.sh [fast|full] [pytest args...]" >&2; exit 2 ;;
+esac

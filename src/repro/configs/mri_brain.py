@@ -1,0 +1,46 @@
+"""The paper's MRI problem (§5): brain-image recovery from quantized
+subsampled-Fourier (k-space) samples.
+
+Full experiment: 256×256 image (N = 65536 — a dense partial-Fourier Φ would be
+~2 GB complex64, so this config only runs on the matrix-free
+``SubsampledFourierOperator`` path), 35 % variable-density Cartesian sampling,
+b_y ∈ {2,4,8,32}. ``BENCH`` is the CI-sized 128×128 version (N = 16384, still
+far beyond what the dense solver path could hold as fake-quantized f32 pairs),
+``SMOKE`` a 64×64 sanity size.
+"""
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class MRIConfig:
+    name: str
+    resolution: int       # image is resolution × resolution (N = resolution²)
+    n_sparse: int         # s: pixels kept in the s-sparse phantom
+    fraction: float       # sampled fraction of k-space (M = fraction · N)
+    density: str          # "uniform" | "variable" Cartesian sampling
+    center_fraction: float
+    snr_db: Optional[float]
+    bits_y: int
+    n_iters: int
+    phantom: str = "shepp-logan"
+    seed: int = 5
+
+
+CONFIG = MRIConfig(
+    name="mri-brain",
+    resolution=256,
+    n_sparse=2000,
+    fraction=0.35,
+    density="variable",
+    center_fraction=0.04,
+    snr_db=None,          # quantization is the noise under study (paper §5)
+    bits_y=8,
+    n_iters=60,
+)
+
+# CI-sized (same physics, smaller grid)
+BENCH = dataclasses.replace(CONFIG, name="mri-brain-bench", resolution=128,
+                            n_sparse=500, n_iters=40)
+SMOKE = dataclasses.replace(CONFIG, name="mri-brain-smoke", resolution=64,
+                            n_sparse=120, n_iters=25)

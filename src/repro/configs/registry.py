@@ -35,6 +35,7 @@ ALIASES = {
     # the paper's own problems
     "lofar-cs302": "lofar_cs302",
     "gaussian-toy": "gaussian_toy",
+    "mri-brain": "mri_brain",
 }
 
 

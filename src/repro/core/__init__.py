@@ -14,6 +14,10 @@ from repro.core.operators import (
     DenseOperator,
     FakeQuantPairOperator,
     PackedStreamingOperator,
+    SubsampledFourierOperator,
+    as_operator,
+    is_linear_operator,
+    make_iteration_operators,
 )
 from repro.core.recovery import (
     psnr,
@@ -47,6 +51,8 @@ __all__ = [
     "IHTResult", "IHTTrace", "niht", "niht_iteration", "qniht", "qniht_batch",
     "stopping_iterations",
     "DenseOperator", "FakeQuantPairOperator", "PackedStreamingOperator",
+    "SubsampledFourierOperator", "as_operator", "is_linear_operator",
+    "make_iteration_operators",
     "psnr", "relative_error", "snr_db", "source_recovery", "support_recovery",
     "corollary1_coeffs", "eps_q", "eps_s", "gamma_from_rics", "gamma_full",
     "gamma_hat_bound", "min_bits_lemma1", "rics_sampled", "singular_values",

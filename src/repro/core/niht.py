@@ -23,6 +23,11 @@ the :mod:`repro.core.operators` backends:
   to uint8; every iteration streams the packed codes through the Pallas ``qmm``
   kernels — 4/8/16× fewer operator bytes at 8/4/2 bits, the paper's headline
   systems result (Fig. 5/6, suppl. §8.1).
+* **matrix-free** — pass an *operator* (anything with ``mv``/``rmv``/``shape``/
+  ``dtype``, e.g. ``SubsampledFourierOperator``) instead of the dense array;
+  the loop never materializes Φ. This is how the MRI workload (§5) runs at
+  sizes where a dense partial-Fourier Φ would be gigabytes. ``bits_y`` still
+  quantizes the observations; ``bits_phi``/``backend`` stay at their defaults.
 
 ``qniht_batch`` recovers B observation vectors of the SAME Φ̂ at once: every
 matvec lifts to one (B, ·) matmul / kernel call, amortizing the Φ̂ stream
@@ -44,11 +49,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.operators import (
-    DenseOperator,
-    FakeQuantPairOperator,
-    PackedStreamingOperator,
-)
+from repro.core.operators import is_linear_operator, make_iteration_operators
 from repro.core.threshold import hard_threshold, top_s_mask
 from repro.kernels.hsthresh.ops import hsthresh
 from repro.quant.quantize import fake_quantize
@@ -187,13 +188,22 @@ def niht_iteration(
     return X[0], mu[0], ch[0], nbt[0]
 
 
-def _validate(bits_phi, bits_y, key, requantize, backend, threshold, real_signal):
+def _validate(phi, bits_phi, bits_y, key, requantize, backend, threshold, real_signal):
     if (bits_phi or bits_y) and key is None:
         raise ValueError("quantized NIHT needs a PRNG key")
     if requantize not in ("pair", "fixed"):
         raise ValueError(f"unknown requantize {requantize!r}")
     if backend not in ("dense", "packed"):
         raise ValueError(f"unknown backend {backend!r} (use 'dense' or 'packed')")
+    if is_linear_operator(phi):
+        if bits_phi:
+            raise ValueError(
+                "bits_phi only applies to dense Φ arrays; a matrix-free operator "
+                "owns its representation (quantize inside the operator instead)")
+        if backend != "dense":
+            raise ValueError(
+                "backend='packed' packs a dense Φ array; matrix-free operators "
+                "are already their own streaming representation")
     if backend == "packed":
         if not bits_phi:
             raise ValueError("backend='packed' needs bits_phi (it streams packed codes)")
@@ -220,23 +230,12 @@ def _qniht_core(
 
     n = phi.shape[1]
     x_dtype = jnp.float32 if real_signal else (
-        phi.dtype if jnp.iscomplexobj(phi) else jnp.float32
+        phi.dtype if jnp.issubdtype(jnp.dtype(phi.dtype), jnp.complexfloating)
+        else jnp.float32
     )
     X0 = jnp.zeros((Y.shape[0], n), dtype=x_dtype)
-    phi_true = DenseOperator(phi)
     hs = _make_hs(threshold, s)
-
-    if backend == "packed":
-        op = PackedStreamingOperator.pack(phi, bits_phi, jax.random.fold_in(kphi, 0))
-        get_ops = lambda i: (op, op)
-    elif bits_phi and requantize == "pair":
-        pair = FakeQuantPairOperator(phi, bits_phi, kphi)
-        get_ops = pair.at_iteration
-    elif bits_phi:
-        op = DenseOperator(fake_quantize(phi, bits_phi, jax.random.fold_in(kphi, 0)))
-        get_ops = lambda i: (op, op)
-    else:
-        get_ops = lambda i: (phi_true, phi_true)
+    phi_true, get_ops = make_iteration_operators(phi, bits_phi, requantize, backend, kphi)
 
     def step(X, i):
         op1, op2 = get_ops(i)
@@ -289,7 +288,13 @@ def qniht(
     """Low-precision NIHT (Algorithm 1). ``bits_phi=bits_y=None`` → plain NIHT.
 
     Args:
-      phi: (M, N) measurement matrix (real or complex).
+      phi: (M, N) measurement matrix (real or complex), or any matrix-free
+        operator following the :mod:`repro.core.operators` protocol
+        (``mv``/``rmv``/``shape``/``dtype``) — e.g.
+        :class:`~repro.core.operators.SubsampledFourierOperator` for MRI, where
+        a dense Φ would be gigabytes. Operator inputs require the default
+        ``bits_phi=None``/``backend="dense"`` (the operator owns its own data
+        representation); ``bits_y`` still quantizes the observations.
       y: (M,) observations.
       s: sparsity level.
       bits_phi / bits_y: data precision (2/4/8) or None for full precision.
@@ -307,7 +312,11 @@ def qniht(
       with_trace: compute per-iteration residual norms (costs one extra Φ̂ and
         one dense Φ matvec per iteration; disable for timing runs).
     """
-    _validate(bits_phi, bits_y, key, requantize, backend, threshold, real_signal)
+    if y.ndim != 1:
+        raise ValueError(
+            f"qniht expects y of shape (M,), got ndim={y.ndim}; "
+            "use qniht_batch for a (B, M) stack of observations")
+    _validate(phi, bits_phi, bits_y, key, requantize, backend, threshold, real_signal)
     res = _qniht_core(
         phi, y[None, :], s, n_iters, bits_phi, bits_y, key, requantize, backend,
         threshold, c, shrink_k, max_backtracks, real_signal, nonneg, with_trace,
@@ -341,6 +350,8 @@ def qniht_batch(
     """Recover B observation vectors of the same Φ at once (heavy-traffic mode).
 
     ``Y`` is (B, M); returns x of shape (B, N) and trace arrays (n_iters, B).
+    ``phi`` may be a dense (M, N) array or a matrix-free operator, exactly as
+    in :func:`qniht` (operator ``mv``/``rmv`` batch over the leading axis).
     One quantized/packed Φ̂ serves the whole batch: each iteration's matvecs are
     single (B, ·) matmuls / qmm kernel calls, so the Φ̂ bytes stream ONCE per
     application for all B problems — with ``backend="packed"`` the amortized
@@ -352,7 +363,7 @@ def qniht_batch(
     """
     if Y.ndim != 2:
         raise ValueError("qniht_batch expects Y of shape (B, M); use qniht for one y")
-    _validate(bits_phi, bits_y, key, requantize, backend, threshold, real_signal)
+    _validate(phi, bits_phi, bits_y, key, requantize, backend, threshold, real_signal)
     return _qniht_core(
         phi, Y, s, n_iters, bits_phi, bits_y, key, requantize, backend,
         threshold, c, shrink_k, max_backtracks, real_signal, nonneg, with_trace,

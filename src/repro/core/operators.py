@@ -15,22 +15,35 @@ representations of Φ̂:
   Pallas ``qmm`` kernels: 4/8/16× fewer operator bytes per application at
   8/4/2 bits. The paper's systems claim (`T = size(Φ̂)/bandwidth`, suppl. §8.1)
   lives here.
+* :class:`SubsampledFourierOperator` — *matrix-free* Φ: an implicit 2D FFT
+  followed by a k-space sampling mask (the MRI workload, paper §5's brain
+  images). No (M, N) array ever exists — at 256×256 the dense partial-Fourier
+  matrix would be ~2 GB; the implicit form stores only the sample indices.
 
 Protocol: ``mv(x)`` computes Φ̂ x, ``rmv(r)`` computes Φ̂† r, ``nbytes`` is the
-bytes of operator data streamed by ONE application (mv ≈ rmv). All operators
-accept a single vector ``(n,)`` or a batch ``(B, n)``; a batch is served by one
-matmul/kernel invocation, amortizing the Φ̂ stream across B problems (the
-"heavy traffic" scenario exploited by ``qniht_batch``).
+bytes of operator data streamed by ONE application (mv ≈ rmv), ``shape`` is
+(M, N) and ``dtype`` the measurement dtype. All operators accept a single
+vector ``(n,)`` or a batch ``(B, n)``; a batch is served by one matmul/kernel
+invocation, amortizing the Φ̂ stream across B problems (the "heavy traffic"
+scenario exploited by ``qniht_batch``).
 
-Operators are pytrees (config in aux_data) so they close over ``lax.scan``
-bodies; they are built *inside* a jit trace, not passed across jit boundaries.
+Operators are registered pytrees (config in aux_data) so they both close over
+``lax.scan`` bodies and cross jit boundaries as arguments —
+``qniht(phi_op, y, ...)`` takes any of them directly.
+
+:func:`make_iteration_operators` is the solver's factory seam: it turns
+whatever the caller handed in (dense array or operator) plus the
+``bits_phi``/``requantize``/``backend`` knobs into the per-iteration
+(gradient, residual) operator pair Algorithm 1 consumes.
 """
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.qmm.ops import (
     PackedOperator,
@@ -51,6 +64,10 @@ class DenseOperator:
     @property
     def shape(self):
         return self.mat.shape
+
+    @property
+    def dtype(self):
+        return self.mat.dtype
 
     @property
     def nbytes(self) -> int:
@@ -90,6 +107,10 @@ class FakeQuantPairOperator:
     @property
     def shape(self):
         return self.phi.shape
+
+    @property
+    def dtype(self):
+        return self.phi.dtype
 
     @property
     def nbytes(self) -> int:
@@ -139,6 +160,14 @@ class PackedStreamingOperator:
         return self.packed.fwd_re.bits
 
     @property
+    def shape(self):
+        return (self.packed.fwd_re.packed.shape[0], self.packed.adj_re.packed.shape[0])
+
+    @property
+    def dtype(self):
+        return jnp.complex64 if self.packed.is_complex else jnp.float32
+
+    @property
     def nbytes(self) -> int:
         n = self.packed.fwd_re.nbytes
         if self.packed.is_complex:
@@ -159,3 +188,110 @@ class PackedStreamingOperator:
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(children[0], *aux)
+
+
+@jax.tree_util.register_pytree_node_class
+class SubsampledFourierOperator:
+    """Matrix-free Φ = P_Ω F: orthonormal 2D DFT of an r×r image, subsampled at
+    the k-space positions Ω (the MRI acquisition model, paper §5).
+
+    ``mv`` is ``fft2(norm="ortho")`` + gather at the flat sample indices;
+    ``rmv`` is the exact adjoint: zero-fill scatter + ``ifft2(norm="ortho")``
+    (F is unitary, so (P_Ω F)† = F† P_Ωᵀ). Nothing of size M×N is ever built —
+    ``nbytes`` counts only the stored sampling pattern (int32 indices + the
+    1-bit/pixel mask an acquisition system would keep), which is why a 256×256
+    problem (dense Φ ≈ 2 GB complex64) costs ~100 KB here.
+
+    Build from a boolean k-space mask with :meth:`from_mask` (concrete, outside
+    jit — the sample count M becomes the static output shape).
+    """
+
+    def __init__(self, indices: jax.Array, resolution: int):
+        self.indices = indices          # (M,) int32, flat positions in the r×r grid
+        self.resolution = int(resolution)
+
+    @classmethod
+    def from_mask(cls, mask) -> "SubsampledFourierOperator":
+        m = np.asarray(mask, bool)
+        if m.ndim != 2 or m.shape[0] != m.shape[1]:
+            raise ValueError(f"mask must be a square (r, r) boolean array, got {m.shape}")
+        if not m.any():
+            raise ValueError("empty sampling mask: no k-space positions selected")
+        return cls(jnp.asarray(np.flatnonzero(m.ravel()), jnp.int32), m.shape[0])
+
+    @property
+    def shape(self):
+        return (self.indices.shape[0], self.resolution * self.resolution)
+
+    @property
+    def dtype(self):
+        return jnp.dtype(jnp.complex64)
+
+    @property
+    def nbytes(self) -> int:
+        # sampling pattern only: int32 sample indices + the packed boolean mask
+        return self.indices.shape[0] * 4 + math.ceil(self.resolution**2 / 8)
+
+    def mask(self) -> jax.Array:
+        """(r, r) boolean k-space sampling mask (recomputed from the indices)."""
+        r = self.resolution
+        return jnp.zeros((r * r,), bool).at[self.indices].set(True).reshape(r, r)
+
+    def mv(self, x: jax.Array) -> jax.Array:
+        r = self.resolution
+        img = x.reshape(*x.shape[:-1], r, r)
+        k = jnp.fft.fft2(img, norm="ortho").astype(jnp.complex64)
+        return jnp.take(k.reshape(*x.shape[:-1], r * r), self.indices, axis=-1)
+
+    def rmv(self, v: jax.Array) -> jax.Array:
+        r = self.resolution
+        full = jnp.zeros((*v.shape[:-1], r * r), jnp.complex64)
+        full = full.at[..., self.indices].set(v.astype(jnp.complex64))
+        img = jnp.fft.ifft2(full.reshape(*v.shape[:-1], r, r), norm="ortho")
+        return img.reshape(*v.shape[:-1], r * r).astype(jnp.complex64)
+
+    def tree_flatten(self):
+        return (self.indices,), (self.resolution,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0])
+
+
+def is_linear_operator(phi) -> bool:
+    """True when ``phi`` follows the operator protocol rather than being a
+    dense array (ndarray-likes expose ``mv``/``rmv`` never, operators always)."""
+    return hasattr(phi, "mv") and hasattr(phi, "rmv")
+
+
+def as_operator(phi):
+    """Dense (M, N) array → :class:`DenseOperator`; operators pass through."""
+    return phi if is_linear_operator(phi) else DenseOperator(phi)
+
+
+def make_iteration_operators(phi, bits_phi, requantize, backend, key):
+    """The solver's backend/requantize factory seam.
+
+    Maps the caller's Φ — dense array or operator — plus the quantization knobs
+    onto ``(phi_true, get_ops)`` where ``phi_true`` applies full-precision Φ
+    (for true-residual traces) and ``get_ops(i)`` yields the (gradient,
+    residual) operator pair Algorithm 1 uses at iteration ``i``.
+
+    Dense arrays reproduce the historical dispatch (and its key folding)
+    bit-for-bit. Operator inputs are matrix-free: they are used as-is for every
+    iteration — any quantization of the operator's data is the operator's own
+    representation choice, so ``bits_phi``/``backend`` must be left at their
+    defaults (enforced in the solver's validation).
+    """
+    if is_linear_operator(phi):
+        return phi, lambda i: (phi, phi)
+    phi_true = DenseOperator(phi)
+    if backend == "packed":
+        op = PackedStreamingOperator.pack(phi, bits_phi, jax.random.fold_in(key, 0))
+        return phi_true, lambda i: (op, op)
+    if bits_phi and requantize == "pair":
+        return phi_true, FakeQuantPairOperator(phi, bits_phi, key).at_iteration
+    if bits_phi:
+        op = DenseOperator(fake_quantize(phi, bits_phi, jax.random.fold_in(key, 0)))
+        return phi_true, lambda i: (op, op)
+    return phi_true, lambda i: (phi_true, phi_true)

@@ -1,5 +1,16 @@
-"""Radio-astronomy application substrate (paper §3.3 and supplementary §7)."""
+"""Application substrates: radio astronomy (paper §3.3, suppl. §7) and MRI
+(paper §5, quantized subsampled-Fourier brain imaging)."""
 from repro.sensing.gaussian import CSProblem, make_gaussian_problem
+from repro.sensing.mri import (
+    MRIProblem,
+    brain_phantom,
+    cartesian_mask,
+    make_mri_problem,
+    mri_observations,
+    quantize_observations,
+    shepp_logan,
+    sparsify_image,
+)
 from repro.sensing.sky import ascii_render, make_sky, to_image
 from repro.sensing.telescope import (
     Station,
@@ -14,6 +25,14 @@ from repro.sensing.telescope import (
 __all__ = [
     "CSProblem",
     "make_gaussian_problem",
+    "MRIProblem",
+    "brain_phantom",
+    "cartesian_mask",
+    "make_mri_problem",
+    "mri_observations",
+    "quantize_observations",
+    "shepp_logan",
+    "sparsify_image",
     "ascii_render",
     "make_sky",
     "to_image",

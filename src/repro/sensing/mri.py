@@ -1,0 +1,238 @@
+"""MRI application substrate: the paper's second workload (§5, "samples of
+brain images") — recovery from aggressively quantized subsampled-Fourier
+measurements.
+
+An MRI scanner acquires k-space (2D Fourier) coefficients of the image;
+compressed sensing undersamples k-space to cut scan time, and the paper's
+low-precision angle quantizes the acquired samples (``bits_y``) before
+recovery. The sensing model is Φ = P_Ω F (orthonormal 2D DFT + sampling mask),
+implemented matrix-free by
+:class:`~repro.core.operators.SubsampledFourierOperator` — at 256×256 the
+dense partial-Fourier matrix would be ~2 GB, so only the implicit form makes
+this workload reachable.
+
+This module provides the non-operator half of the pipeline:
+
+* phantoms — :func:`shepp_logan` (the standard modified Shepp–Logan head
+  phantom) and :func:`brain_phantom` (randomized brain-like piecewise-constant
+  images: skull ring + random elliptical "tissue" regions),
+* :func:`sparsify_image` — the s-sparse phantom the pixel-basis solver
+  recovers exactly (wavelet/TV sparsity bases are ROADMAP follow-ups),
+* sampling masks — :func:`cartesian_mask` with ``density="uniform"`` or
+  ``"variable"`` (polynomial density concentrating samples at low frequencies,
+  the standard CS-MRI pattern) and an always-sampled center block,
+* :func:`mri_observations` / :func:`quantize_observations` — noisy k-space
+  samples and the b_y-bit stochastic quantization applied to them,
+* :func:`make_mri_problem` — one call bundling all of the above.
+
+Masks are generated in *centered* coordinates (DC in the middle, how k-space
+is drawn in the MRI literature) and ifft-shifted to the DC-at-[0,0] convention
+``SubsampledFourierOperator``'s ``fft2`` uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.operators import SubsampledFourierOperator
+from repro.quant.quantize import fake_quantize
+
+# Modified Shepp–Logan (Toft): (intensity, a, b, x0, y0, angle_deg) per ellipse.
+_SHEPP_LOGAN = (
+    (1.00, 0.6900, 0.9200, 0.00, 0.0000, 0.0),
+    (-0.80, 0.6624, 0.8740, 0.00, -0.0184, 0.0),
+    (-0.20, 0.1100, 0.3100, 0.22, 0.0000, -18.0),
+    (-0.20, 0.1600, 0.4100, -0.22, 0.0000, 18.0),
+    (0.10, 0.2100, 0.2500, 0.00, 0.3500, 0.0),
+    (0.10, 0.0460, 0.0460, 0.00, 0.1000, 0.0),
+    (0.10, 0.0460, 0.0460, 0.00, -0.1000, 0.0),
+    (0.10, 0.0460, 0.0230, -0.08, -0.6050, 0.0),
+    (0.10, 0.0230, 0.0230, 0.00, -0.6060, 0.0),
+    (0.10, 0.0230, 0.0460, 0.06, -0.6050, 0.0),
+)
+
+
+def _render_ellipses(resolution: int, ellipses) -> np.ndarray:
+    """Sum of constant-intensity ellipses on the [-1, 1]² grid → (r, r) f32."""
+    lin = np.linspace(-1.0, 1.0, resolution)
+    xx, yy = np.meshgrid(lin, lin, indexing="xy")
+    img = np.zeros((resolution, resolution), np.float32)
+    for inten, a, b, x0, y0, ang in ellipses:
+        th = np.deg2rad(ang)
+        xr = (xx - x0) * np.cos(th) + (yy - y0) * np.sin(th)
+        yr = -(xx - x0) * np.sin(th) + (yy - y0) * np.cos(th)
+        img += np.float32(inten) * ((xr / a) ** 2 + (yr / b) ** 2 <= 1.0)
+    return np.clip(img, 0.0, None)
+
+
+def shepp_logan(resolution: int) -> jax.Array:
+    """The modified Shepp–Logan head phantom, (r, r) float32 in [0, 1]."""
+    return jnp.asarray(_render_ellipses(resolution, _SHEPP_LOGAN))
+
+
+def brain_phantom(
+    resolution: int,
+    key: jax.Array,
+    n_regions: int = 8,
+) -> jax.Array:
+    """A randomized brain-like piecewise-constant image, (r, r) float32.
+
+    Skull: a bright outer ellipse ring (like Shepp–Logan's). Interior:
+    ``n_regions`` random ellipses of random constant intensity — the
+    piecewise-constant structure of anatomical images, with randomized
+    geometry so experiments average over phantoms instead of overfitting the
+    one canonical image.
+    """
+    seed = int(jax.random.randint(key, (), 0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    ellipses = [(1.0, 0.72, 0.92, 0.0, 0.0, 0.0),
+                (-0.75, 0.67, 0.86, 0.0, 0.0, 0.0)]
+    for _ in range(n_regions):
+        a = rng.uniform(0.05, 0.35)
+        b = rng.uniform(0.05, 0.35)
+        # keep the region inside the skull interior
+        x0 = rng.uniform(-0.45, 0.45)
+        y0 = rng.uniform(-0.55, 0.55)
+        ellipses.append((rng.uniform(-0.2, 0.4), a, b, x0, y0, rng.uniform(0, 180)))
+    return jnp.asarray(np.clip(_render_ellipses(resolution, ellipses), 0.0, 1.0))
+
+
+def sparsify_image(img: jax.Array, s: int) -> jax.Array:
+    """Keep the s largest-magnitude pixels: the s-sparse phantom, as an (r²,)
+    vector (the exact-sparsity signal model of the recovery guarantees)."""
+    flat = img.ravel()
+    vals, idx = jax.lax.top_k(jnp.abs(flat), s)
+    del vals
+    return jnp.zeros_like(flat).at[idx].set(flat[idx])
+
+
+def cartesian_mask(
+    resolution: int,
+    fraction: float,
+    key: jax.Array,
+    density: str = "variable",
+    center_fraction: float = 0.04,
+    power: float = 3.0,
+) -> np.ndarray:
+    """A Cartesian k-space sampling mask, (r, r) boolean, DC at [0, 0].
+
+    ``fraction`` of the r² grid points are sampled: a fully-sampled center
+    block covering ``center_fraction`` of k-space (low frequencies hold most
+    image energy — every practical CS-MRI pattern keeps them), plus random
+    points drawn ``density="uniform"``-ly or with ``"variable"`` density
+    ∝ (1 − d/d_max)^power (more samples near the center, the standard
+    variable-density scheme). Returned in the unshifted convention
+    :class:`~repro.core.operators.SubsampledFourierOperator` expects.
+    """
+    if not 0.0 < fraction <= 1.0:
+        raise ValueError(f"fraction must be in (0, 1], got {fraction}")
+    if density not in ("uniform", "variable"):
+        raise ValueError(f"unknown density {density!r} (use 'uniform' or 'variable')")
+    r = resolution
+    n_total = max(1, int(round(fraction * r * r)))
+
+    # centered coordinates: distance of each grid point from DC
+    lin = np.arange(r) - r // 2
+    xx, yy = np.meshgrid(lin, lin, indexing="ij")
+    dist = np.sqrt(xx**2 + yy**2) / np.sqrt(2.0) / (r // 2)
+
+    mask = np.zeros((r, r), bool)
+    half_c = max(1, int(round(np.sqrt(center_fraction) * r / 2)))
+    c = r // 2
+    mask[c - half_c:c + half_c, c - half_c:c + half_c] = True
+    if int(mask.sum()) > n_total:
+        raise ValueError(
+            f"center block ({int(mask.sum())} samples) exceeds the requested "
+            f"fraction ({n_total} samples); lower center_fraction below {fraction}")
+
+    n_rand = n_total - int(mask.sum())
+    if n_rand > 0:
+        free = np.flatnonzero(~mask.ravel())
+        if density == "uniform":
+            p = np.ones(free.size)
+        else:
+            p = np.maximum(1.0 - np.clip(dist.ravel()[free], 0.0, 1.0), 1e-3) ** power
+        p = p / p.sum()
+        seed = int(jax.random.randint(key, (), 0, 2**31 - 1))
+        rng = np.random.default_rng(seed)
+        pick = rng.choice(free, size=min(n_rand, free.size), replace=False, p=p)
+        mask.ravel()[pick] = True
+    return np.fft.ifftshift(mask)
+
+
+def quantize_observations(y: jax.Array, bits_y: int, key: jax.Array) -> jax.Array:
+    """The paper's b_y-bit stochastic quantization of acquired k-space samples
+    (complex: real/imag quantized component-wise on a shared scale)."""
+    return fake_quantize(y, bits_y, key)
+
+
+def mri_observations(
+    op: SubsampledFourierOperator,
+    x: jax.Array,
+    snr_db: Optional[float],
+    key: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """y = Φx + e with circularly-symmetric complex Gaussian acquisition noise
+    at the given per-problem SNR (None → noiseless). Returns (y, e).
+
+    ``x`` may be a single (N,) image or a (B, N) batch — the batch is served by
+    one batched FFT and gets independent per-row noise at the same SNR."""
+    clean = op.mv(x)
+    if snr_db is None:
+        return clean, jnp.zeros_like(clean)
+    m = clean.shape[-1]
+    sig_pow = jnp.real(jnp.sum(clean * jnp.conj(clean), axis=-1, keepdims=True))
+    sigma = jnp.sqrt(sig_pow / (10.0 ** (snr_db / 10.0)) / m / 2.0)
+    kr, ki = jax.random.split(key)
+    e = (sigma * (jax.random.normal(kr, clean.shape, jnp.float32)
+                  + 1j * jax.random.normal(ki, clean.shape, jnp.float32))
+         ).astype(jnp.complex64)
+    return clean + e, e
+
+
+@dataclasses.dataclass
+class MRIProblem:
+    """One subsampled-Fourier recovery instance (matrix-free Φ throughout)."""
+
+    op: SubsampledFourierOperator
+    y: jax.Array          # (M,) complex64 k-space samples (noisy, unquantized)
+    e: jax.Array          # (M,) acquisition noise actually added
+    x_true: jax.Array     # (r²,) the s-sparse phantom
+    resolution: int
+    s: int
+
+
+def make_mri_problem(
+    resolution: int,
+    s: int,
+    fraction: float,
+    key: jax.Array,
+    density: str = "variable",
+    center_fraction: float = 0.04,
+    snr_db: Optional[float] = None,
+    phantom: str = "shepp-logan",
+) -> MRIProblem:
+    """Phantom → s-sparse truth → mask → operator → noisy observations.
+
+    ``phantom="shepp-logan"`` uses the canonical head phantom;
+    ``"brain"`` draws a randomized piecewise-constant brain-like image from
+    ``key``. Quantization of ``y`` is left to the solver's ``bits_y`` (one
+    stochastic draw inside ``qniht``, Algorithm-1-faithful); use
+    :func:`quantize_observations` to materialize ŷ standalone.
+    """
+    kimg, kmask, knoise = jax.random.split(key, 3)
+    if phantom == "shepp-logan":
+        img = shepp_logan(resolution)
+    elif phantom == "brain":
+        img = brain_phantom(resolution, kimg)
+    else:
+        raise ValueError(f"unknown phantom {phantom!r} (use 'shepp-logan' or 'brain')")
+    x_true = sparsify_image(img, s)
+    mask = cartesian_mask(resolution, fraction, kmask, density, center_fraction)
+    op = SubsampledFourierOperator.from_mask(mask)
+    y, e = mri_observations(op, x_true, snr_db, knoise)
+    return MRIProblem(op=op, y=y, e=e, x_true=x_true, resolution=resolution, s=s)

@@ -1,10 +1,33 @@
 """Multi-device collective tests — run in a subprocess with 8 host devices so
-the main pytest process keeps its single-device view (per the dry-run rules)."""
+the main pytest process keeps its single-device view (per the dry-run rules).
+
+``test_qgrad_allreduce_host_mesh`` is the fast in-process regression for the
+shard_map entry point (JAX 0.4.x has it under ``jax.experimental.shard_map``,
+not ``jax.shard_map``) so an import/dispatch break surfaces in the quick tier,
+not only in the slow subprocess test."""
 import os
 import subprocess
 import sys
 
+import numpy as np
 import pytest
+
+
+def test_qgrad_allreduce_host_mesh():
+    import jax
+    from jax.sharding import Mesh
+    from repro.parallel.collectives import make_qgrad_allreduce
+
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1,), ("pod",))
+    key = jax.random.PRNGKey(0)
+    tree = {"w": jax.random.normal(key, (1, 16)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (1, 4))}
+    out = make_qgrad_allreduce(mesh, "pod", 8)(tree, jax.random.fold_in(key, 2))
+    for k in tree:
+        exp = np.asarray(tree[k]).mean(0)
+        got = np.asarray(out[k])[0]
+        scale = np.abs(np.asarray(tree[k])).max()
+        assert np.abs(got - exp).max() <= scale / 64, k
 
 _SCRIPT = r"""
 import os

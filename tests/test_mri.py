@@ -1,0 +1,268 @@
+"""Matrix-free MRI workload: SubsampledFourierOperator + sensing/mri contracts.
+
+Covers:
+* adjointness ⟨Φx, r⟩ == ⟨x, Φ†r⟩ for real and complex inputs (F unitary ⇒ the
+  zero-fill/IFFT adjoint is exact, not approximate),
+* parity of the matrix-free operator vs an explicitly materialized partial-DFT
+  Φ on small grids (mv, rmv, and full qniht iterates),
+* phantom/mask/observation substrate properties,
+* the ISSUE-2 acceptance run: 128×128 (N = 16384) recovery at b_y = 8 reaching
+  PSNR ≥ 30 dB without a dense Φ,
+* operator-input validation (bits_phi/backend rejected, 2-D y rejected).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    DenseOperator,
+    SubsampledFourierOperator,
+    niht,
+    psnr,
+    qniht,
+    qniht_batch,
+    relative_error,
+)
+from repro.sensing import (
+    brain_phantom,
+    cartesian_mask,
+    make_mri_problem,
+    mri_observations,
+    quantize_observations,
+    shepp_logan,
+    sparsify_image,
+)
+
+
+def _small_op(r=16, frac=0.4, seed=0):
+    mask = cartesian_mask(r, frac, jax.random.PRNGKey(seed))
+    return SubsampledFourierOperator.from_mask(mask), mask
+
+
+def _materialize(op):
+    """Explicit (M, N) partial-DFT matrix: Φ e_j for every basis vector."""
+    n = op.shape[1]
+    eye = jnp.eye(n, dtype=jnp.float32)
+    return op.mv(eye).T  # column j = Φ e_j
+
+
+class TestSubsampledFourierOperator:
+    def test_adjoint_identity_real_input(self):
+        op, _ = _small_op()
+        key = jax.random.PRNGKey(1)
+        x = jax.random.normal(key, (op.shape[1],), jnp.float32)
+        r = (jax.random.normal(jax.random.fold_in(key, 1), (op.shape[0],))
+             + 1j * jax.random.normal(jax.random.fold_in(key, 2), (op.shape[0],))
+             ).astype(jnp.complex64)
+        lhs = jnp.vdot(op.mv(x), r)
+        rhs = jnp.vdot(x.astype(jnp.complex64), op.rmv(r))
+        assert float(jnp.abs(lhs - rhs)) / float(jnp.abs(lhs)) < 1e-5
+
+    def test_adjoint_identity_complex_input(self):
+        op, _ = _small_op(r=12, frac=0.5, seed=3)
+        key = jax.random.PRNGKey(2)
+        x = (jax.random.normal(key, (op.shape[1],))
+             + 1j * jax.random.normal(jax.random.fold_in(key, 1), (op.shape[1],))
+             ).astype(jnp.complex64)
+        r = (jax.random.normal(jax.random.fold_in(key, 2), (op.shape[0],))
+             + 1j * jax.random.normal(jax.random.fold_in(key, 3), (op.shape[0],))
+             ).astype(jnp.complex64)
+        lhs = jnp.vdot(op.mv(x), r)
+        rhs = jnp.vdot(x, op.rmv(r))
+        assert float(jnp.abs(lhs - rhs)) / float(jnp.abs(lhs)) < 1e-5
+
+    def test_parity_with_materialized_phi(self):
+        op, _ = _small_op(r=8, frac=0.6, seed=4)
+        phi = _materialize(op)
+        key = jax.random.PRNGKey(3)
+        x = jax.random.normal(key, (op.shape[1],), jnp.float32)
+        v = (jax.random.normal(jax.random.fold_in(key, 1), (op.shape[0],))
+             + 1j * jax.random.normal(jax.random.fold_in(key, 2), (op.shape[0],))
+             ).astype(jnp.complex64)
+        np.testing.assert_allclose(np.asarray(op.mv(x)), np.asarray(phi @ x),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(op.rmv(v)),
+                                   np.asarray(jnp.conj(phi.T) @ v),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_qniht_parity_matrix_free_vs_dense(self):
+        """The solver produces the same iterates whether Φ is implicit or an
+        explicitly materialized dense array (full-precision path)."""
+        op, _ = _small_op(r=12, frac=0.6, seed=5)
+        phi = _materialize(op)
+        key = jax.random.PRNGKey(4)
+        n = op.shape[1]
+        x = jnp.zeros((n,)).at[jax.random.choice(key, n, (6,), replace=False)].set(
+            jax.random.uniform(key, (6,), minval=0.5, maxval=1.0))
+        y = op.mv(x)
+        kw = dict(real_signal=True, nonneg=True)
+        r_free = qniht(op, y, 6, 25, **kw)
+        r_dense = qniht(phi, y, 6, 25, **kw)
+        ref = float(jnp.linalg.norm(r_dense.x)) + 1e-12
+        assert float(jnp.linalg.norm(r_free.x - r_dense.x)) <= 1e-4 * ref
+        np.testing.assert_allclose(np.asarray(r_free.trace.resid_q),
+                                   np.asarray(r_dense.trace.resid_q),
+                                   rtol=1e-3, atol=1e-5)
+
+    def test_batched_mv_matches_singles(self):
+        op, _ = _small_op()
+        X = jax.random.normal(jax.random.PRNGKey(5), (4, op.shape[1]), jnp.float32)
+        batched = op.mv(X)
+        assert batched.shape == (4, op.shape[0])
+        for b in range(4):
+            np.testing.assert_allclose(np.asarray(batched[b]),
+                                       np.asarray(op.mv(X[b])), rtol=1e-5, atol=1e-6)
+
+    def test_nbytes_counts_pattern_only(self):
+        op, mask = _small_op(r=16)
+        m = int(np.asarray(mask).sum())
+        assert op.nbytes == m * 4 + (16 * 16 + 7) // 8
+        # the point: orders of magnitude below the dense complex64 Φ
+        assert op.nbytes < m * 16 * 16 * 8 / 100
+
+    def test_from_mask_rejects_bad_masks(self):
+        with pytest.raises(ValueError):
+            SubsampledFourierOperator.from_mask(np.zeros((8, 8), bool))
+        with pytest.raises(ValueError):
+            SubsampledFourierOperator.from_mask(np.ones((8, 4), bool))
+
+    def test_mask_round_trip(self):
+        op, mask = _small_op(r=16, seed=7)
+        np.testing.assert_array_equal(np.asarray(op.mask()), np.asarray(mask))
+
+
+class TestMRISubstrate:
+    def test_shepp_logan_range_and_structure(self):
+        img = np.asarray(shepp_logan(64))
+        assert img.shape == (64, 64)
+        assert img.min() >= 0.0 and img.max() == pytest.approx(1.0)
+        assert (img == 0).any()  # background stays empty
+
+    def test_brain_phantom_deterministic_in_key(self):
+        a = brain_phantom(48, jax.random.PRNGKey(0))
+        b = brain_phantom(48, jax.random.PRNGKey(0))
+        c = brain_phantom(48, jax.random.PRNGKey(1))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert not np.array_equal(np.asarray(a), np.asarray(c))
+        # piecewise constant: few distinct intensity levels
+        assert len(np.unique(np.round(np.asarray(a), 5))) < 40
+
+    def test_sparsify_keeps_top_s(self):
+        img = shepp_logan(32)
+        s = 50
+        x = sparsify_image(img, s)
+        assert int(jnp.sum(jnp.abs(x) > 0)) == s
+        kept = np.sort(np.abs(np.asarray(x)[np.abs(np.asarray(x)) > 0]))
+        dropped = np.sort(np.abs(np.asarray(img.ravel() - x)))
+        assert kept.min() >= dropped.max() - 1e-6
+
+    @pytest.mark.parametrize("density", ["uniform", "variable"])
+    def test_cartesian_mask_fraction_and_center(self, density):
+        r, frac = 32, 0.3
+        mask = cartesian_mask(r, frac, jax.random.PRNGKey(0), density=density)
+        assert mask.shape == (r, r) and mask.dtype == bool
+        assert abs(int(mask.sum()) - int(round(frac * r * r))) <= 1
+        assert mask[0, 0]  # DC always sampled (center block, unshifted convention)
+
+    def test_variable_density_concentrates_low_freq(self):
+        r = 64
+        key = jax.random.PRNGKey(1)
+        mu = np.fft.fftshift(cartesian_mask(r, 0.3, key, density="uniform"))
+        mv = np.fft.fftshift(cartesian_mask(r, 0.3, key, density="variable"))
+        lin = np.arange(r) - r // 2
+        xx, yy = np.meshgrid(lin, lin, indexing="ij")
+        d = np.sqrt(xx**2 + yy**2)
+        assert d[mv].mean() < d[mu].mean() - 1.0
+
+    def test_mask_validation(self):
+        with pytest.raises(ValueError):
+            cartesian_mask(16, 0.0, jax.random.PRNGKey(0))
+        with pytest.raises(ValueError):
+            cartesian_mask(16, 0.3, jax.random.PRNGKey(0), density="radial")
+        with pytest.raises(ValueError, match="center block"):
+            # center block alone would exceed the requested 2% budget
+            cartesian_mask(256, 0.02, jax.random.PRNGKey(0), center_fraction=0.04)
+
+    def test_batched_observations_noise_per_row(self):
+        op, _ = _small_op(r=32, frac=0.5)
+        X = jnp.stack([sparsify_image(shepp_logan(32), 60),
+                       sparsify_image(brain_phantom(32, jax.random.PRNGKey(0)), 60)])
+        Y, E = mri_observations(op, X, 20.0, jax.random.PRNGKey(1))
+        assert Y.shape == (2, op.shape[0]) and E.shape == Y.shape
+        for b in range(2):
+            snr = 10 * np.log10(
+                float(jnp.real(jnp.vdot(Y[b] - E[b], Y[b] - E[b])))
+                / float(jnp.real(jnp.vdot(E[b], E[b]))))
+            assert abs(snr - 20.0) < 2.5
+
+    def test_observation_noise_calibration(self):
+        op, _ = _small_op(r=32, frac=0.5)
+        x = sparsify_image(shepp_logan(32), 60)
+        y, e = mri_observations(op, x, 20.0, jax.random.PRNGKey(2))
+        snr = 10 * np.log10(float(jnp.real(jnp.vdot(y - e, y - e)))
+                            / float(jnp.real(jnp.vdot(e, e))))
+        assert abs(snr - 20.0) < 2.0
+        y0, e0 = mri_observations(op, x, None, jax.random.PRNGKey(2))
+        assert float(jnp.max(jnp.abs(e0))) == 0.0
+
+    def test_quantize_observations_unbiased_scale(self):
+        op, _ = _small_op(r=16, frac=0.5)
+        x = sparsify_image(shepp_logan(16), 30)
+        y, _ = mri_observations(op, x, None, jax.random.PRNGKey(3))
+        yq = quantize_observations(y, 8, jax.random.PRNGKey(4))
+        assert yq.dtype == y.dtype
+        rel = float(jnp.linalg.norm(yq - y) / jnp.linalg.norm(y))
+        assert 0.0 < rel < 0.05
+
+
+class TestEndToEndMRI:
+    def test_acceptance_128_psnr30_at_8bit(self):
+        """ISSUE 2 acceptance: 128×128 (N = 16384) matrix-free recovery at
+        b_y = 8 reaches PSNR ≥ 30 dB — a size whose dense Φ (~750 MB) the
+        old array-only qniht could not represent sensibly."""
+        r, s = 128, 500
+        key = jax.random.PRNGKey(5)
+        prob = make_mri_problem(r, s, 0.35, key)
+        res = qniht(prob.op, prob.y, s, 40, bits_y=8, key=key,
+                    real_signal=True, nonneg=True)
+        ps = float(psnr(res.x.reshape(r, r), prob.x_true.reshape(r, r)))
+        assert ps >= 30.0
+        assert float(relative_error(res.x, prob.x_true)) < 0.15
+
+    def test_batch_matches_single(self):
+        r, s = 32, 40
+        key = jax.random.PRNGKey(6)
+        prob = make_mri_problem(r, s, 0.45, key)
+        Y = jnp.stack([prob.y, 0.5 * prob.y])
+        kw = dict(bits_y=8, key=key, real_signal=True, nonneg=True)
+        res_b = qniht_batch(prob.op, Y, s, 20, **kw)
+        res_s = qniht(prob.op, prob.y, s, 20, **kw)
+        ref = float(jnp.linalg.norm(res_s.x)) + 1e-12
+        assert float(jnp.linalg.norm(res_b.x[0] - res_s.x)) <= 1e-4 * ref
+
+    def test_operator_input_validation(self):
+        prob = make_mri_problem(16, 10, 0.5, jax.random.PRNGKey(7))
+        key = jax.random.PRNGKey(0)
+        with pytest.raises(ValueError):  # operators own their representation
+            qniht(prob.op, prob.y, 10, 5, bits_phi=8, key=key)
+        with pytest.raises(ValueError):  # nothing dense to pack
+            qniht(prob.op, prob.y, 10, 5, backend="packed", bits_phi=8,
+                  key=key, requantize="fixed")
+
+    def test_qniht_rejects_2d_y(self):
+        prob = make_mri_problem(16, 10, 0.5, jax.random.PRNGKey(8))
+        with pytest.raises(ValueError, match="qniht_batch"):
+            qniht(prob.op, jnp.stack([prob.y, prob.y]), 10, 5)
+
+    def test_dense_operator_input_matches_array_input(self):
+        """as_operator seam: passing DenseOperator(phi) is the same
+        computation as passing phi itself."""
+        key = jax.random.PRNGKey(9)
+        phi = jax.random.normal(key, (32, 64), jnp.float32)
+        x = jnp.zeros((64,)).at[:3].set(jnp.asarray([1.0, -0.7, 0.4]))
+        y = phi @ x
+        r_arr = niht(phi, y, 3, 15)
+        r_op = qniht(DenseOperator(phi), y, 3, 15)
+        np.testing.assert_allclose(np.asarray(r_op.x), np.asarray(r_arr.x),
+                                   rtol=1e-6, atol=1e-7)
