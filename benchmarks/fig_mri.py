@@ -5,8 +5,12 @@ implicit unit-modulus Fourier operator — there is nothing to quantize on the
 operator side, and nothing dense to stream: ``SubsampledFourierOperator``
 stores only the sampling pattern). The sweep recovers the s-sparse brain
 phantom at b_y ∈ {32, 8, 4, 2} and reports PSNR / relative error / wall time
-per precision, plus a batched run (B phantoms sharing one mask) showing the
-serving-mode amortization on the matrix-free path.
+per precision — each quantized width twice: with the paper's single per-tensor
+scale c_y, and with per-band radial k-space scaling (one f32 scale per
+concentric band, the group-scaled quantizer that keeps b_y < 8 usable against
+k-space's dynamic range; overhead = ``4·n_bands`` bytes, reported as
+``y_scale_bytes``). A batched run (B phantoms sharing one mask) shows the
+serving-mode amortization with *per-item* PSNR / rel_error.
 
 The ``phi_nbytes`` column is the point of the matrix-free seam: the dense
 partial-Fourier Φ this replaces would be ``16 · fraction · N²`` bytes
@@ -15,6 +19,8 @@ partial-Fourier Φ this replaces would be ``16 · fraction · N²`` bytes
 Rows double as the perf trajectory: every run rewrites ``BENCH_mri.json``
 (override the path with the ``BENCH_MRI_JSON`` env var); the committed file
 tracks one run per PR, so the trajectory lives in its git history.
+``run_groupscale`` is the same sweep restricted to the group-scaled rows
+(``benchmarks/run.py --suite mri-groupscale``).
 """
 from __future__ import annotations
 
@@ -30,14 +36,16 @@ from repro.sensing import (
     brain_phantom,
     make_mri_problem,
     mri_observations,
+    quantize_observations,
     sparsify_image,
 )
 
 JSON_PATH = os.environ.get("BENCH_MRI_JSON", "BENCH_mri.json")
 BATCH = 4
+N_BANDS = 16
 
 
-def run(fast: bool = True):
+def _sweep(fast: bool, per_tensor: bool, per_band: bool):
     cfg = SMOKE if fast else BENCH
     r = cfg.resolution
     key = jax.random.PRNGKey(cfg.seed)
@@ -48,7 +56,7 @@ def run(fast: bool = True):
     dense_phi_bytes = prob.op.shape[0] * prob.op.shape[1] * 8  # complex64 Φ it replaces
     rows, records = [], []
 
-    def add(name, us, bits_y, res_x, extra=""):
+    def add(name, us, bits_y, res_x, extra="", **fields):
         ps = float(psnr(res_x.reshape(r, r), prob.x_true.reshape(r, r)))
         rel = float(relative_error(res_x, prob.x_true))
         derived = (f"psnr_db={ps:.2f} rel_error={rel:.4f} "
@@ -60,45 +68,81 @@ def run(fast: bool = True):
             "psnr_db": round(ps, 2), "rel_error": round(rel, 5),
             "resolution": r, "m": prob.op.shape[0], "s": cfg.n_sparse,
             "n_iters": cfg.n_iters, "phi_nbytes": prob.op.nbytes,
-            "dense_phi_bytes": dense_phi_bytes, "extra": extra,
+            "dense_phi_bytes": dense_phi_bytes, "extra": extra, **fields,
         })
 
-    def solve(bits_y):
+    def solve(bits_y, granularity="per_tensor"):
         kw = dict(real_signal=True, nonneg=True, with_trace=False)
-        if bits_y:
+        y = prob.y
+        if bits_y and granularity == "per_band":
+            # group-scaled observations are materialized up front (the bytes a
+            # scanner would actually transmit); the solver sees ŷ directly
+            y = quantize_observations(prob.y, bits_y, key, granularity="per_band",
+                                      op=prob.op, n_bands=N_BANDS)
+        elif bits_y:
             kw.update(bits_y=bits_y, key=key)
-        return qniht(prob.op, prob.y, cfg.n_sparse, cfg.n_iters, **kw)
+        return qniht(prob.op, y, cfg.n_sparse, cfg.n_iters, **kw)
 
-    us, res = measure(lambda: solve(None))
-    add("mri/recover_y_f32", us, None, res.x, "speedup=1.00x")
-    us32 = us
-    for bits in (8, 4, 2):
-        us, res = measure(lambda b=bits: solve(b))
-        add(f"mri/recover_y_int{bits}", us, bits, res.x,
-            f"vs_f32={us32 / us:.2f}x")
+    us32, res = measure(lambda: solve(None))
+    if per_tensor:
+        add("mri/recover_y_f32", us32, None, res.x, "speedup=1.00x")
+        for bits in (8, 4, 2):
+            us, res = measure(lambda b=bits: solve(b))
+            add(f"mri/recover_y_int{bits}", us, bits, res.x,
+                f"vs_f32={us32 / us:.2f}x granularity=per_tensor")
+    if per_band:
+        for bits in (8, 4, 2):
+            us, res = measure(lambda b=bits: solve(b, "per_band"))
+            add(f"mri/recover_y_int{bits}_band{N_BANDS}", us, bits, res.x,
+                f"vs_f32={us32 / us:.2f}x granularity=per_band:{N_BANDS}",
+                y_scale_bytes=4 * N_BANDS)
 
-    # batched serving: B randomized phantoms share one sampling mask
-    X_true = jnp.stack(
-        [sparsify_image(brain_phantom(r, jax.random.fold_in(key, b)),
-                        cfg.n_sparse) for b in range(BATCH)])
-    Y, _ = mri_observations(prob.op, X_true, cfg.snr_db,
-                            jax.random.fold_in(key, BATCH))
-    us, res_b = measure(
-        lambda: qniht_batch(prob.op, Y, cfg.n_sparse, cfg.n_iters, bits_y=8,
-                            key=key, real_signal=True, nonneg=True,
-                            with_trace=False))
-    ps = [float(psnr(res_b.x[b].reshape(r, r), X_true[b].reshape(r, r)))
-          for b in range(BATCH)]
-    rows.append(row(f"mri/recover_y_int8_batch{BATCH}", us,
-                    f"psnr_db_min={min(ps):.2f} psnr_db_mean={sum(ps)/BATCH:.2f} "
-                    f"batch={BATCH}"))
-    records.append({
-        "name": f"mri/recover_y_int8_batch{BATCH}", "us_per_call": round(us, 1),
-        "bits_y": 8, "psnr_db": round(min(ps), 2), "rel_error": None,
-        "resolution": r, "m": prob.op.shape[0], "s": cfg.n_sparse,
-        "n_iters": cfg.n_iters, "phi_nbytes": prob.op.nbytes,
-        "dense_phi_bytes": dense_phi_bytes, "extra": f"batch={BATCH}",
-    })
+    if per_tensor:
+        # batched serving: B randomized phantoms share one sampling mask.
+        # The phantoms' skull rings saturate at exactly 1.0 over more than
+        # n_sparse pixels, so a bare top-k would tie-break every row to the
+        # SAME support (degenerate batch — all rows one problem); per-row
+        # jitter far below the intensity quantum keeps the rows distinct.
+        def sparse_truth(b):
+            img = brain_phantom(r, jax.random.fold_in(key, b))
+            jitter = 1e-3 * jax.random.uniform(jax.random.fold_in(key, 100 + b),
+                                               img.shape)
+            return sparsify_image(img + jitter, cfg.n_sparse)
 
+        X_true = jnp.stack([sparse_truth(b) for b in range(BATCH)])
+        Y, _ = mri_observations(prob.op, X_true, cfg.snr_db,
+                                jax.random.fold_in(key, BATCH))
+        us, res_b = measure(
+            lambda: qniht_batch(prob.op, Y, cfg.n_sparse, cfg.n_iters, bits_y=8,
+                                key=key, real_signal=True, nonneg=True,
+                                with_trace=False))
+        ps = [float(psnr(res_b.x[b].reshape(r, r), X_true[b].reshape(r, r)))
+              for b in range(BATCH)]
+        rel = [float(relative_error(res_b.x[b], X_true[b])) for b in range(BATCH)]
+        rows.append(row(f"mri/recover_y_int8_batch{BATCH}", us,
+                        f"psnr_db_min={min(ps):.2f} psnr_db_mean={sum(ps)/BATCH:.2f} "
+                        f"rel_error_max={max(rel):.4f} batch={BATCH}"))
+        records.append({
+            "name": f"mri/recover_y_int8_batch{BATCH}", "us_per_call": round(us, 1),
+            "bits_y": 8, "psnr_db": round(min(ps), 2),
+            "rel_error": round(max(rel), 5),
+            "psnr_db_per_item": [round(p, 2) for p in ps],
+            "rel_error_per_item": [round(e, 5) for e in rel],
+            "resolution": r, "m": prob.op.shape[0], "s": cfg.n_sparse,
+            "n_iters": cfg.n_iters, "phi_nbytes": prob.op.nbytes,
+            "dense_phi_bytes": dense_phi_bytes, "extra": f"batch={BATCH}",
+        })
+    return rows, records
+
+
+def run(fast: bool = True):
+    rows, records = _sweep(fast, per_tensor=True, per_band=True)
     write_json(records, JSON_PATH)
+    return rows
+
+
+def run_groupscale(fast: bool = True):
+    """The group-scaled rows only (``--suite mri-groupscale``); does NOT touch
+    BENCH_mri.json so the committed trajectory stays one-run-per-PR."""
+    rows, _ = _sweep(fast, per_tensor=False, per_band=True)
     return rows

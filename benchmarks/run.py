@@ -25,6 +25,9 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset, e.g. --only fig1 fig11 roofline")
+    ap.add_argument("--suite", action="append", default=None, metavar="NAME",
+                    help="run one named suite (repeatable), e.g. "
+                         "--suite mri-groupscale; combines with --only")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write all rows as JSON to PATH")
     args = ap.parse_args(argv)
@@ -44,6 +47,12 @@ def main(argv=None) -> None:
         roofline,
     )
 
+    class _FnSuite:
+        """Adapter: expose a bare sweep function under the module protocol."""
+
+        def __init__(self, fn):
+            self.run = fn
+
     suites = {
         "fig1": fig1_sky,
         "fig3": fig3_error_coeffs,
@@ -55,11 +64,19 @@ def main(argv=None) -> None:
         "fig9": fig9_clean,
         "fig11": fig11_gaussian,
         "mri": fig_mri,
+        "mri-groupscale": _FnSuite(fig_mri.run_groupscale),
         "kernels": kernels_micro,
         "roofline": roofline,
     }
-    if args.only:
-        suites = {k: v for k, v in suites.items() if k in args.only}
+    selected = list(args.only or []) + list(args.suite or [])
+    if selected:
+        unknown = [s for s in selected if s not in suites]
+        if unknown:
+            ap.error(f"unknown suite(s) {unknown}; choose from {sorted(suites)}")
+        suites = {k: v for k, v in suites.items() if k in selected}
+    else:
+        # opt-in only: the full default run already covers these rows via "mri"
+        suites.pop("mri-groupscale")
 
     print("name,us_per_call,derived")
     failures = 0

@@ -2,9 +2,14 @@
 
 Builds an s-sparse Shepp–Logan (or randomized brain) phantom, undersamples its
 2D Fourier transform with a variable-density Cartesian mask, quantizes the
-acquired samples to ``--bits-y`` bits, and recovers the image with matrix-free
-QNIHT — the sensing operator is an implicit FFT + mask, so no dense Φ is ever
-materialized (at 256×256 it would be ~2 GB).
+acquired samples, and recovers the image with matrix-free QNIHT — the sensing
+operator is an implicit FFT + mask, so no dense Φ is ever materialized (at
+256×256 it would be ~2 GB).
+
+Each bit-width runs twice: with the paper's single per-tensor scale c_y, and
+with per-band radial k-space scaling (``--n-bands`` scales, 4 bytes each) —
+the group-scaling mechanism that keeps 4- and 2-bit observations recoverable
+against k-space's dynamic range.
 
     PYTHONPATH=src python examples/mri_recovery.py [--resolution 96] [--fraction 0.35]
 """
@@ -27,6 +32,8 @@ def main():
     ap.add_argument("--density", default="variable", choices=["uniform", "variable"])
     ap.add_argument("--phantom", default="shepp-logan", choices=["shepp-logan", "brain"])
     ap.add_argument("--iters", type=int, default=40)
+    ap.add_argument("--n-bands", type=int, default=16,
+                    help="radial k-space bands for the per-band quantizer rows")
     ap.add_argument("--seed", type=int, default=5)
     args = ap.parse_args()
 
@@ -49,16 +56,22 @@ def main():
     print(ascii_render(zf, width=min(r, 64)))
     print(f"  psnr={float(psnr(zf, img_true)):.1f} dB")
 
-    for name, by in (("32-bit y", None), ("8-bit y", 8), ("4-bit y", 4)):
+    runs = [("32-bit y", None, "per_tensor")]
+    for by in (8, 4, 2):
+        runs.append((f"{by}-bit y (per-tensor c_y)", by, "per_tensor"))
+        runs.append((f"{by}-bit y ({args.n_bands}-band)", by, "per_band"))
+    for name, by, gran in runs:
         kw = dict(real_signal=True, nonneg=True)
+        y = prob.y
         if by:
-            kw.update(bits_y=by, key=key)
-            yq = quantize_observations(prob.y, by, key)
+            yq = quantize_observations(prob.y, by, key, granularity=gran,
+                                       op=prob.op, n_bands=args.n_bands)
             q_noise = float(jnp.linalg.norm(yq - prob.y) / jnp.linalg.norm(prob.y))
-            print(f"\nquantizing k-space to {by} bits "
+            print(f"\nquantizing k-space to {by} bits, {gran} scale "
                   f"(relative quantization noise {q_noise:.1%})")
+            y = yq
         t0 = time.time()
-        res = qniht(prob.op, prob.y, args.sparsity, args.iters, **kw)
+        res = qniht(prob.op, y, args.sparsity, args.iters, **kw)
         jax.block_until_ready(res.x)
         img = jnp.real(res.x).reshape(r, r)
         print(f"\n{name} matrix-free QNIHT "

@@ -4,6 +4,7 @@
 #   scripts/ci.sh        # fast: skip @slow (subprocess dry-run / multidevice) tests
 #   scripts/ci.sh fast   # same
 #   scripts/ci.sh full   # everything — the driver's tier-1 command
+#   scripts/ci.sh lint   # byte-compile src/tests/benchmarks (+ ruff if installed)
 #
 # Extra args go straight to pytest: scripts/ci.sh fast -k mri
 set -euo pipefail
@@ -15,5 +16,13 @@ mode="${1:-fast}"
 case "$mode" in
   fast) exec python -m pytest -x -q -m "not slow" "$@" ;;
   full) exec python -m pytest -x -q "$@" ;;
-  *) echo "usage: scripts/ci.sh [fast|full] [pytest args...]" >&2; exit 2 ;;
+  lint)
+    python -m compileall -q src tests benchmarks
+    if command -v ruff >/dev/null 2>&1; then
+      ruff check src tests benchmarks "$@"
+    else
+      echo "[lint] ruff not installed; compileall only"
+    fi
+    ;;
+  *) echo "usage: scripts/ci.sh [fast|full|lint] [pytest args...]" >&2; exit 2 ;;
 esac

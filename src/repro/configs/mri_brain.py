@@ -7,6 +7,12 @@ Full experiment: 256×256 image (N = 65536 — a dense partial-Fourier Φ would 
 b_y ∈ {2,4,8,32}. ``BENCH`` is the CI-sized 128×128 version (N = 16384, still
 far beyond what the dense solver path could hold as fake-quantized f32 pairs),
 ``SMOKE`` a 64×64 sanity size.
+
+``scale_granularity``/``n_bands`` select the observation quantizer scale:
+``"per_tensor"`` is the paper's single c_y; ``"per_band"`` carries one scale
+per concentric radial k-space band (see ``repro.sensing.quantize_observations``)
+— the 4-byte-per-band overhead that keeps b_y < 8 usable against k-space's
+dynamic range.
 """
 import dataclasses
 from typing import Optional
@@ -25,6 +31,8 @@ class MRIConfig:
     n_iters: int
     phantom: str = "shepp-logan"
     seed: int = 5
+    scale_granularity: str = "per_tensor"   # "per_tensor" | "per_band"
+    n_bands: int = 16                        # radial bands when per_band
 
 
 CONFIG = MRIConfig(

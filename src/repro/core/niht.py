@@ -52,6 +52,7 @@ import jax.numpy as jnp
 from repro.core.operators import is_linear_operator, make_iteration_operators
 from repro.core.threshold import hard_threshold, top_s_mask
 from repro.kernels.hsthresh.ops import hsthresh
+from repro.quant.formats import as_granularity
 from repro.quant.quantize import fake_quantize
 
 
@@ -188,13 +189,20 @@ def niht_iteration(
     return X[0], mu[0], ch[0], nbt[0]
 
 
-def _validate(phi, bits_phi, bits_y, key, requantize, backend, threshold, real_signal):
+def _validate(phi, bits_phi, bits_y, key, requantize, backend, threshold, real_signal,
+              scale_granularity="per_tensor", group_size=None):
     if (bits_phi or bits_y) and key is None:
         raise ValueError("quantized NIHT needs a PRNG key")
     if requantize not in ("pair", "fixed"):
         raise ValueError(f"unknown requantize {requantize!r}")
     if backend not in ("dense", "packed"):
         raise ValueError(f"unknown backend {backend!r} (use 'dense' or 'packed')")
+    gran = as_granularity(scale_granularity, group_size)  # validates the spelling
+    if not gran.is_per_tensor and backend != "packed":
+        raise ValueError(
+            "scale_granularity selects the Φ̂ scale layout of the packed "
+            "streaming backend; use backend='packed' (for per-band observation "
+            "scaling quantize y up front — see repro.sensing.quantize_observations)")
     if is_linear_operator(phi):
         if bits_phi:
             raise ValueError(
@@ -219,6 +227,7 @@ def _validate(phi, bits_phi, bits_y, key, requantize, backend, threshold, real_s
 def _qniht_core(
     phi, Y, s, n_iters, bits_phi, bits_y, key, requantize, backend, threshold,
     c, shrink_k, max_backtracks, real_signal, nonneg, with_trace,
+    scale_granularity="per_tensor", group_size=None,
 ):
     """Shared batched implementation behind qniht / qniht_batch (Y is (B, M))."""
     key = key if key is not None else jax.random.PRNGKey(0)
@@ -235,7 +244,9 @@ def _qniht_core(
     )
     X0 = jnp.zeros((Y.shape[0], n), dtype=x_dtype)
     hs = _make_hs(threshold, s)
-    phi_true, get_ops = make_iteration_operators(phi, bits_phi, requantize, backend, kphi)
+    phi_true, get_ops = make_iteration_operators(
+        phi, bits_phi, requantize, backend, kphi,
+        granularity=as_granularity(scale_granularity, group_size))
 
     def step(X, i):
         op1, op2 = get_ops(i)
@@ -262,6 +273,7 @@ def _qniht_core(
 _STATIC = (
     "s", "n_iters", "bits_phi", "bits_y", "requantize", "backend", "threshold",
     "c", "shrink_k", "max_backtracks", "real_signal", "nonneg", "with_trace",
+    "scale_granularity", "group_size",
 )
 
 
@@ -284,6 +296,8 @@ def qniht(
     real_signal: bool = False,
     nonneg: bool = False,
     with_trace: bool = True,
+    scale_granularity: str = "per_tensor",
+    group_size: Optional[int] = None,
 ) -> IHTResult:
     """Low-precision NIHT (Algorithm 1). ``bits_phi=bits_y=None`` → plain NIHT.
 
@@ -311,15 +325,22 @@ def qniht(
       real_signal / nonneg: optional projections (sky images are real, >= 0).
       with_trace: compute per-iteration residual norms (costs one extra Φ̂ and
         one dense Φ matvec per iteration; disable for timing runs).
+      scale_granularity / group_size: scale layout of the packed Φ̂ stream
+        ("per_tensor" — the paper's single c_Φ, bit-identical to the historical
+        behaviour; "per_channel"; "per_block" with ``group_size``). Group
+        granularities quantize each orientation separately (packed backend
+        only); see :mod:`repro.quant.formats` for layout and overhead.
     """
     if y.ndim != 1:
         raise ValueError(
             f"qniht expects y of shape (M,), got ndim={y.ndim}; "
             "use qniht_batch for a (B, M) stack of observations")
-    _validate(phi, bits_phi, bits_y, key, requantize, backend, threshold, real_signal)
+    _validate(phi, bits_phi, bits_y, key, requantize, backend, threshold, real_signal,
+              scale_granularity, group_size)
     res = _qniht_core(
         phi, y[None, :], s, n_iters, bits_phi, bits_y, key, requantize, backend,
         threshold, c, shrink_k, max_backtracks, real_signal, nonneg, with_trace,
+        scale_granularity, group_size,
     )
     return IHTResult(
         x=res.x[0],
@@ -346,6 +367,8 @@ def qniht_batch(
     real_signal: bool = False,
     nonneg: bool = False,
     with_trace: bool = True,
+    scale_granularity: str = "per_tensor",
+    group_size: Optional[int] = None,
 ) -> IHTResult:
     """Recover B observation vectors of the same Φ at once (heavy-traffic mode).
 
@@ -363,10 +386,12 @@ def qniht_batch(
     """
     if Y.ndim != 2:
         raise ValueError("qniht_batch expects Y of shape (B, M); use qniht for one y")
-    _validate(phi, bits_phi, bits_y, key, requantize, backend, threshold, real_signal)
+    _validate(phi, bits_phi, bits_y, key, requantize, backend, threshold, real_signal,
+              scale_granularity, group_size)
     return _qniht_core(
         phi, Y, s, n_iters, bits_phi, bits_y, key, requantize, backend,
         threshold, c, shrink_k, max_backtracks, real_signal, nonneg, with_trace,
+        scale_granularity, group_size,
     )
 
 

@@ -51,6 +51,7 @@ from repro.kernels.qmm.ops import (
     packed_matvec,
     packed_rmatvec,
 )
+from repro.quant.formats import Granularity, as_granularity
 from repro.quant.quantize import fake_quantize
 
 
@@ -137,10 +138,16 @@ class FakeQuantPairOperator:
 class PackedStreamingOperator:
     """Φ̂ as packed uint8 codes, applied via the Pallas ``qmm`` kernels.
 
-    Both orientations are packed ONCE (shared codes — the same quantized data a
-    fixed-precision system streams), so every NIHT iteration moves
-    ``bits/32`` of the f32 bytes. ``interpret``/``use_pallas`` plumb through to
-    the kernel dispatch (pure-jnp oracle off-TPU).
+    With the default ``per_tensor`` granularity both orientations are packed
+    ONCE (shared codes — the same quantized data a fixed-precision system
+    streams), so every NIHT iteration moves ``bits/32`` of the f32 bytes.
+    ``per_channel``/``per_block`` granularities scale each orientation along
+    its own axes, so each is quantized separately (shared codes cannot carry
+    orientation-local scales — see :func:`repro.kernels.qmm.ops.pack_operator`);
+    the adjoint identity then holds to within quantization error and the f32
+    scale vectors add ``scale_nbytes`` of (documented) stream overhead.
+    ``interpret``/``use_pallas`` plumb through to the kernel dispatch (pure-jnp
+    oracle off-TPU).
     """
 
     def __init__(self, packed: PackedOperator, use_pallas: Optional[bool] = None,
@@ -151,13 +158,30 @@ class PackedStreamingOperator:
 
     @classmethod
     def pack(cls, phi: jax.Array, bits: int, key: Optional[jax.Array] = None,
-             **kw) -> "PackedStreamingOperator":
-        """Quantize + pack Φ with shared codes (matches fake_quantize(phi, bits, key))."""
-        return cls(pack_operator(phi, bits, key, shared=True), **kw)
+             granularity=None, **kw) -> "PackedStreamingOperator":
+        """Quantize + pack Φ. Per-tensor granularity (default) shares one set
+        of codes across both orientations (matches ``fake_quantize(phi, bits,
+        key)`` bit-for-bit); group granularities quantize per orientation."""
+        gran = as_granularity(granularity)
+        if gran.is_per_tensor:
+            return cls(pack_operator(phi, bits, key, shared=True), **kw)
+        return cls(pack_operator(phi, bits, key, shared=False, granularity=gran), **kw)
 
     @property
     def bits(self) -> int:
         return self.packed.fwd_re.bits
+
+    @property
+    def granularity(self) -> Granularity:
+        return self.packed.fwd_re.granularity
+
+    @property
+    def scale_nbytes(self) -> int:
+        """f32 scale bytes streamed per application (fwd orientation)."""
+        n = self.packed.fwd_re.scale_nbytes
+        if self.packed.is_complex:
+            n += self.packed.fwd_im.scale_nbytes
+        return n
 
     @property
     def shape(self):
@@ -269,7 +293,8 @@ def as_operator(phi):
     return phi if is_linear_operator(phi) else DenseOperator(phi)
 
 
-def make_iteration_operators(phi, bits_phi, requantize, backend, key):
+def make_iteration_operators(phi, bits_phi, requantize, backend, key,
+                             granularity=None):
     """The solver's backend/requantize factory seam.
 
     Maps the caller's Φ — dense array or operator — plus the quantization knobs
@@ -278,16 +303,19 @@ def make_iteration_operators(phi, bits_phi, requantize, backend, key):
     residual) operator pair Algorithm 1 uses at iteration ``i``.
 
     Dense arrays reproduce the historical dispatch (and its key folding)
-    bit-for-bit. Operator inputs are matrix-free: they are used as-is for every
-    iteration — any quantization of the operator's data is the operator's own
-    representation choice, so ``bits_phi``/``backend`` must be left at their
-    defaults (enforced in the solver's validation).
+    bit-for-bit — ``granularity`` (per_tensor default) only reaches the packed
+    backend, where non-per-tensor scales switch the pack to per-orientation
+    group-scaled codes. Operator inputs are matrix-free: they are used as-is
+    for every iteration — any quantization of the operator's data is the
+    operator's own representation choice, so ``bits_phi``/``backend`` must be
+    left at their defaults (enforced in the solver's validation).
     """
     if is_linear_operator(phi):
         return phi, lambda i: (phi, phi)
     phi_true = DenseOperator(phi)
     if backend == "packed":
-        op = PackedStreamingOperator.pack(phi, bits_phi, jax.random.fold_in(key, 0))
+        op = PackedStreamingOperator.pack(phi, bits_phi, jax.random.fold_in(key, 0),
+                                          granularity=granularity)
         return phi_true, lambda i: (op, op)
     if bits_phi and requantize == "pair":
         return phi_true, FakeQuantPairOperator(phi, bits_phi, key).at_iteration

@@ -14,6 +14,17 @@ Grid: ``(M/bm, N/bn, K/bk)``; K is the fastest-varying (sequential on TPU), and
 the output block (bm, bn) is revisited across the K steps and accumulated in
 place (initialized at k==0). Block shapes default to MXU-aligned
 ``bm=128, bn=128, bk=512`` (packed K-block = bk/vpb bytes per row).
+
+Two scale layouts, two kernels:
+
+* :func:`qmm_pallas`       — one scale per output channel, shape (1, N): the
+  dot runs on unit-scale codes and the scale multiplies the *accumulated*
+  (bm, bn) block (cheapest; per_tensor is the broadcast special case).
+* :func:`qmm_group_pallas` — blockwise scales along the contraction axis,
+  shape (N, K/g): each K-tile loads its (bn, bk/g) scale slab alongside the
+  packed codes and applies it to the codes *before* the dot (the scale varies
+  within the contraction, so it cannot be factored out of the accumulator).
+  ``g`` must divide ``block_k`` so scale slabs tile cleanly.
 """
 from __future__ import annotations
 
@@ -56,6 +67,78 @@ def _qmm_kernel(x_ref, w_ref, scale_ref, o_ref, *, bits: int, n_k_steps: int):
         x_blk, codes, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )
     o_ref[...] += acc * (scale_ref[...] / BY_BITS[bits].half_steps)  # (1, bn) bcast
+
+
+def _qmm_group_kernel(x_ref, w_ref, scale_ref, o_ref, *, bits: int, group_size: int):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x_blk = x_ref[...].astype(jnp.float32)              # (bm, bk)
+    codes = _unpack_block(w_ref[...], bits)             # (bn, bk) unit-scale codes
+    scales = scale_ref[...]                             # (bn, bk/g)
+    bn, bkg = scales.shape
+    # dequantize in-register: code (n, j) scales with scales[n, j // g]
+    w_blk = (codes.reshape(bn, bkg, group_size) * scales[:, :, None]
+             ).reshape(bn, bkg * group_size) * (1.0 / BY_BITS[bits].half_steps)
+    acc = jax.lax.dot_general(
+        x_blk, w_blk, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[...] += acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "k_dim", "group_size", "block_m", "block_n", "block_k",
+                     "interpret"),
+)
+def qmm_group_pallas(
+    x: jax.Array,
+    w_packed: jax.Array,
+    scale: jax.Array,
+    *,
+    bits: int,
+    k_dim: int,
+    group_size: int,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Group-scaled packed matmul. Shapes must be pre-padded to block multiples:
+    x (M, K), w_packed (N, K/vpb) uint8, scale (N, K/g) f32. Returns (M, N) f32."""
+    fmt = BY_BITS[bits]
+    vpb = fmt.values_per_byte
+    m, k = x.shape
+    n = w_packed.shape[0]
+    if k != k_dim:
+        raise ValueError(f"x K dim {k} != k_dim {k_dim}")
+    if k % block_k or m % block_m or n % block_n:
+        raise ValueError(f"shapes ({m},{k}),({n}) must be multiples of blocks "
+                         f"({block_m},{block_n},{block_k}); pad in ops.py")
+    if block_k % group_size:
+        raise ValueError(f"group_size {group_size} must divide block_k {block_k}")
+    if w_packed.shape[1] * vpb != k:
+        raise ValueError("w_packed minor dim inconsistent with k_dim/bits")
+    if scale.shape != (n, k // group_size):
+        raise ValueError(f"scale shape {scale.shape} != (N, K/g) = ({n}, {k // group_size})")
+    bk_packed = block_k // vpb
+    bk_groups = block_k // group_size
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        functools.partial(_qmm_group_kernel, bits=bits, group_size=group_size),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_n, bk_packed), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((block_n, bk_groups), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w_packed, scale)
 
 
 @functools.partial(

@@ -10,15 +10,22 @@
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+import math
+from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.qmm.kernel import qmm_pallas
-from repro.kernels.qmm.ref import qmm_ref
-from repro.quant.formats import BY_BITS
-from repro.quant.pack import pack_codes
+from repro.kernels.qmm.kernel import qmm_group_pallas, qmm_pallas
+from repro.kernels.qmm.ref import qmm_group_ref, qmm_ref
+from repro.quant.formats import (
+    BY_BITS,
+    PER_CHANNEL,
+    PER_TENSOR,
+    Granularity,
+    as_granularity,
+)
+from repro.quant.pack import pack_codes, validate_group_packing
 from repro.quant.quantize import quantize, quantize_codes
 
 
@@ -27,16 +34,39 @@ def _round_up(v: int, mult: int) -> int:
 
 
 class PackedWeights(NamedTuple):
-    """(N, K) weight matrix quantized & packed along K."""
+    """(N, K) weight matrix quantized & packed along K.
+
+    ``scale`` layout follows ``granularity``: (1, N) per-output-channel f32 for
+    ``per_tensor``/``per_channel`` (per-tensor broadcasts one value), or
+    (N, ⌈K/group_size⌉) blockwise-along-K for ``per_block`` (consumed by the
+    group-scaled kernel, which dequantizes inside the contraction).
+    """
 
     packed: jax.Array      # (N, packed_len(K)) uint8
-    scale: jax.Array       # (1, N) f32 per-channel
+    scale: jax.Array       # see granularity note above
     bits: int
     k_dim: int
+    granularity: Granularity = PER_TENSOR
 
     @property
     def nbytes(self) -> int:
+        """Packed code bytes only (the precision-proportional stream the paper's
+        bandwidth law counts); the f32 scale overhead is ``scale_nbytes``."""
         return self.packed.size  # uint8
+
+    @property
+    def scale_nbytes(self) -> int:
+        """Bytes of actual scale information at this granularity (per_tensor is
+        ONE f32 even though the stored array broadcasts it to (1, N))."""
+        return self.granularity.scale_nbytes((self.packed.shape[0], self.k_dim))
+
+
+def _resolve_granularity(granularity, per_channel: bool) -> Granularity:
+    """Map the legacy ``per_channel`` bool and the new ``granularity`` arg onto
+    one :class:`Granularity` (an explicit granularity wins)."""
+    if granularity is not None:
+        return as_granularity(granularity)
+    return PER_CHANNEL if per_channel else PER_TENSOR
 
 
 def pack_weights(
@@ -44,18 +74,39 @@ def pack_weights(
     bits: int,
     key: Optional[jax.Array] = None,
     per_channel: bool = True,
+    granularity: Union[Granularity, str, None] = None,
 ) -> PackedWeights:
-    """Quantize (stochastic if key given) and pack an (N, K) real matrix."""
+    """Quantize (stochastic if key given) and pack an (N, K) real matrix.
+
+    ``granularity`` (overrides the legacy ``per_channel`` bool when given):
+    ``per_tensor`` — one scale; ``per_channel`` — one scale per output row N;
+    ``per_block(g)`` — one scale per g contiguous K elements (g a multiple of
+    the packing word, see :func:`repro.quant.pack.validate_group_packing`).
+    """
     if w.ndim != 2:
         raise ValueError("pack_weights expects (N, K)")
-    codes, scale = quantize_codes(w, bits, key, channel_axis=0 if per_channel else None)
-    if not per_channel:
+    gran = _resolve_granularity(granularity, per_channel)
+    if gran.kind == "per_block":
+        validate_group_packing(gran.group_size, bits)
+        codes, scale = quantize_codes(w, bits, key, granularity=gran)
+        return PackedWeights(
+            packed=pack_codes(codes, bits),
+            scale=scale.astype(jnp.float32),            # (N, ⌈K/g⌉)
+            bits=bits,
+            k_dim=w.shape[1],
+            granularity=gran,
+        )
+    if gran.kind == "per_channel":
+        codes, scale = quantize_codes(w, bits, key, channel_axis=0)
+    else:
+        codes, scale = quantize_codes(w, bits, key)
         scale = jnp.full((w.shape[0], 1), scale)
     return PackedWeights(
         packed=pack_codes(codes, bits),
         scale=scale.reshape(1, -1).astype(jnp.float32),
         bits=bits,
         k_dim=w.shape[1],
+        granularity=gran,
     )
 
 
@@ -73,11 +124,15 @@ def qmm(
 
     ``use_pallas=None`` auto-dispatches: the Mosaic kernel on TPU, the pure-jnp
     oracle otherwise (interpret=True forces the kernel body on CPU for tests).
+    Group-scaled weights (``granularity=per_block``) route to the group kernel,
+    whose K blocks are additionally aligned to the scale group size.
     """
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu" or interpret
     m, k = x.shape
     n = w.packed.shape[0]
+    if w.granularity.kind == "per_block":
+        return _qmm_group(x, w, use_pallas, interpret, block_m, block_n, block_k)
     if not use_pallas:
         return qmm_ref(x, w.packed, w.scale, w.bits, w.k_dim)
 
@@ -94,6 +149,32 @@ def qmm(
     s_p = jnp.pad(w.scale, ((0, 0), (0, np_ - n)))
     y = qmm_pallas(x_p, w_p, s_p, bits=w.bits, k_dim=kp,
                    block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
+    return y[:m, :n]
+
+
+def _qmm_group(x, w: PackedWeights, use_pallas, interpret, block_m, block_n, block_k):
+    """Group-scaled qmm dispatch: pad to blocks whose K size the scale groups
+    tile exactly (padded codes are biased-zero, padded scale groups are 1.0 —
+    both contribute nothing to the sliced-out output)."""
+    g = w.granularity.group_size
+    if not use_pallas:
+        return qmm_group_ref(x, w.packed, w.scale, w.bits, w.k_dim, g)
+    m, k = x.shape
+    n = w.packed.shape[0]
+    vpb = BY_BITS[w.bits].values_per_byte
+    bm = min(block_m, _round_up(m, 8))
+    bn = min(block_n, _round_up(n, 128))
+    # K blocks must tile BOTH the 128-lane packed layout and the scale groups
+    unit = math.lcm(g, 128 * vpb)
+    bk = min(_round_up(block_k, unit), _round_up(w.k_dim, unit))
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(w.k_dim, bk)
+    x_p = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    w_p = jnp.pad(w.packed, ((0, np_ - n), (0, kp // vpb - w.packed.shape[1])),
+                  constant_values=_zero_byte(w.bits))
+    s_p = jnp.pad(w.scale, ((0, np_ - n), (0, kp // g - w.scale.shape[1])),
+                  constant_values=1.0)
+    y = qmm_group_pallas(x_p, w_p, s_p, bits=w.bits, k_dim=kp, group_size=g,
+                         block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
     return y[:m, :n]
 
 
@@ -131,6 +212,15 @@ class PackedOperator(NamedTuple):
             total += self.fwd_im.nbytes + self.adj_im.nbytes
         return total
 
+    @property
+    def scale_nbytes(self) -> int:
+        """f32 scale bytes riding alongside the packed codes (the documented
+        per-block overhead; per-tensor/per-channel carry (1, N) as before)."""
+        total = self.fwd_re.scale_nbytes + self.adj_re.scale_nbytes
+        if self.is_complex:
+            total += self.fwd_im.scale_nbytes + self.adj_im.scale_nbytes
+        return total
+
 
 def _pack_from_codes(codes: jax.Array, scale: jax.Array, bits: int) -> PackedWeights:
     """Build PackedWeights from pre-quantized (N, K) int codes + scalar scale."""
@@ -148,21 +238,36 @@ def pack_operator(
     key: Optional[jax.Array] = None,
     per_channel: bool = False,
     shared: bool = False,
+    granularity: Union[Granularity, str, None] = None,
 ) -> PackedOperator:
     """Quantize a dense (M, N) measurement matrix for streaming IHT.
 
-    Per-tensor scale by default (faithful to the paper's single c_Φ).
+    Per-tensor scale by default (faithful to the paper's single c_Φ);
+    ``granularity`` selects per_channel / per_block(g) scaling instead
+    (overriding the legacy ``per_channel`` bool).
 
-    ``shared=False`` draws an *independent* stochastic quantization for each
-    orientation (Algorithm 1's Φ̂_{2n-1}/Φ̂_{2n} pairing, unbiased in
-    expectation). ``shared=True`` quantizes **once** — the same codes back both
-    Φ̂ and Φ̂†, which is what a deployed ``requantize="fixed"`` system streaming
+    ``shared=False`` draws an *independent* quantization for each orientation
+    (Algorithm 1's Φ̂_{2n-1}/Φ̂_{2n} pairing, unbiased in expectation with a
+    key). ``shared=True`` quantizes **once** — the same codes back both Φ̂ and
+    Φ̂†, which is what a deployed ``requantize="fixed"`` system streaming
     pre-quantized data does, and makes the adjoint identity ⟨Φ̂x, r⟩ = ⟨x, Φ̂†r⟩
     exact. Shared codes match ``fake_quantize(phi, bits, key)`` bit-for-bit.
+
+    Sharing is only possible with ONE scale per tensor: a per-channel or
+    per-block scale is tied to an orientation's own row/contraction axis, so
+    the transposed orientation cannot reuse the codes (its scale groups run
+    across the other axis). Per-orientation scales therefore require
+    ``shared=False``.
     """
+    gran = _resolve_granularity(granularity, per_channel)
+    if shared and not gran.is_per_tensor:
+        raise ValueError(
+            f"pack_operator(shared=True) streams ONE per-tensor quantization "
+            f"through both orientations; a {gran} scale is tied to each "
+            f"orientation's own axes, so shared codes cannot carry it. Pass "
+            f"shared=False (per-orientation quantization, adjoint identity "
+            f"approximate) or granularity='per_tensor' (exact shared codes).")
     if shared:
-        if per_channel:
-            raise ValueError("shared codes use the paper's single per-tensor scale")
         q = quantize(phi, bits, key)
         if q.is_complex:
             cre, cim = q.codes[0], q.codes[1]
@@ -182,16 +287,16 @@ def pack_operator(
         re, im = jnp.real(phi), jnp.imag(phi)
         keys = jax.random.split(key, 4) if key is not None else [None] * 4
         return PackedOperator(
-            fwd_re=pack_weights(re, bits, keys[0], per_channel),
-            fwd_im=pack_weights(im, bits, keys[1], per_channel),
-            adj_re=pack_weights(re.T, bits, keys[2], per_channel),
-            adj_im=pack_weights(im.T, bits, keys[3], per_channel),
+            fwd_re=pack_weights(re, bits, keys[0], granularity=gran),
+            fwd_im=pack_weights(im, bits, keys[1], granularity=gran),
+            adj_re=pack_weights(re.T, bits, keys[2], granularity=gran),
+            adj_im=pack_weights(im.T, bits, keys[3], granularity=gran),
         )
     keys = jax.random.split(key, 2) if key is not None else [None, None]
     return PackedOperator(
-        fwd_re=pack_weights(phi, bits, keys[0], per_channel),
+        fwd_re=pack_weights(phi, bits, keys[0], granularity=gran),
         fwd_im=None,
-        adj_re=pack_weights(phi.T, bits, keys[1], per_channel),
+        adj_re=pack_weights(phi.T, bits, keys[1], granularity=gran),
         adj_im=None,
     )
 

@@ -8,11 +8,13 @@ Contract (shared with the Pallas kernel):
 * ``w_packed`` — (N, packed_len(K, bits)) uint8, codes packed along K
                  (the contraction axis — minor-most, so packed words stream
                  contiguously HBM→VMEM on TPU),
-* ``scale``    — (1, N) per-output-channel scale (per-tensor = broadcast),
+* ``scale``    — (1, N) per-output-channel scale (per-tensor = broadcast), or
+                 for the group-scaled variant (N, ⌈K/g⌉) blockwise scales along
+                 the contraction axis,
 * ``bits``     — 2 / 4 / 8.
 
-Dequantized value of code k is ``scale * k / K_steps`` (see repro.quant.formats).
-Accumulation is float32.
+Dequantized value of code k is ``scale * k / K_steps`` (see repro.quant.formats);
+group-scaled code (n, j) uses ``scale[n, j // g]``. Accumulation is float32.
 """
 from __future__ import annotations
 
@@ -20,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.quant.formats import BY_BITS
 from repro.quant.pack import unpack_codes
+from repro.quant.quantize import expand_block_scale
 
 
 def qmm_ref(x: jnp.ndarray, w_packed: jnp.ndarray, scale: jnp.ndarray, bits: int, k_dim: int) -> jnp.ndarray:
@@ -29,3 +32,19 @@ def qmm_ref(x: jnp.ndarray, w_packed: jnp.ndarray, scale: jnp.ndarray, bits: int
     w = codes.astype(jnp.float32) / fmt.half_steps           # (N, K), unit scale
     y = jnp.dot(x.astype(jnp.float32), w.T, preferred_element_type=jnp.float32)
     return y * scale.reshape(1, -1)
+
+
+def qmm_group_ref(
+    x: jnp.ndarray,
+    w_packed: jnp.ndarray,
+    scale: jnp.ndarray,
+    bits: int,
+    k_dim: int,
+    group_size: int,
+) -> jnp.ndarray:
+    """Reference group-scaled packed matmul: scale (N, ⌈K/g⌉). Returns (M, N) f32."""
+    fmt = BY_BITS[bits]
+    codes = unpack_codes(w_packed, bits, k_dim)              # (N, K) int8
+    w = (codes.astype(jnp.float32)
+         * expand_block_scale(scale, group_size, k_dim) / fmt.half_steps)
+    return jnp.dot(x.astype(jnp.float32), w.T, preferred_element_type=jnp.float32)

@@ -20,6 +20,14 @@ Backends (``--backend``):
 ``--batch B`` recovers B observations of the same Φ̂ at once (``qniht_batch``):
 one packed Φ̂ stream serves the whole batch per iteration.
 
+``--scale-granularity`` picks the quantizer scale layout (default
+``per_tensor``, the paper's single c): with ``--backend packed`` it selects the
+packed Φ̂ scale granularity (``per_channel``, or ``per_block`` with
+``--group-size G``); on the MRI configs it selects the *observation* quantizer
+(``per_band`` radial k-space scaling, ``--group-size`` = number of bands) —
+the mechanism that keeps ``--bits-y 4`` and below usable against k-space's
+dynamic range.
+
 ``--config mri`` (also ``mri-bench``/``mri-smoke``) runs the paper's §5 MRI
 workload: an s-sparse brain phantom recovered from quantized
 variable-density-subsampled k-space. Φ is the *matrix-free*
@@ -50,27 +58,38 @@ from repro.sensing import (
     make_sky,
     measurement_matrix,
     mri_observations,
+    quantize_observations,
     sparsify_image,
     visibilities,
 )
 
 
-def _solver_kwargs(backend, bits_phi, bits_y, key, requantize):
+def _solver_kwargs(backend, bits_phi, bits_y, key, requantize,
+                   granularity="per_tensor", group_size=None):
+    if granularity != "per_tensor" and backend != "packed":
+        raise ValueError(
+            f"--scale-granularity {granularity} scales the packed Φ̂ stream; "
+            f"combine it with --backend packed (got --backend {backend})")
     if backend == "dense":
         return dict()
-    return dict(
+    kw = dict(
         bits_phi=bits_phi,
         bits_y=bits_y,
         key=key,
         requantize="fixed" if backend == "packed" else requantize,
         backend="packed" if backend == "packed" else "dense",
     )
+    if granularity != "per_tensor":
+        kw.update(scale_granularity=granularity, group_size=group_size)
+    return kw
 
 
-def recover_lofar(cs, backend, bits_phi, bits_y, key, requantize="pair", batch=0):
+def recover_lofar(cs, backend, bits_phi, bits_y, key, requantize="pair", batch=0,
+                  granularity="per_tensor", group_size=None):
     st = Station(n_antennas=cs.n_antennas, seed=cs.seed)
     phi = measurement_matrix(st, cs.resolution, cs.extent)
-    kw = _solver_kwargs(backend, bits_phi, bits_y, key, requantize)
+    kw = _solver_kwargs(backend, bits_phi, bits_y, key, requantize,
+                        granularity, group_size)
     if batch:
         skies = [make_sky(cs.resolution, cs.n_sources, jax.random.fold_in(key, b),
                           min_sep=cs.min_sep) for b in range(batch)]
@@ -106,9 +125,11 @@ def recover_lofar(cs, backend, bits_phi, bits_y, key, requantize="pair", batch=0
     }
 
 
-def recover_gaussian(g, backend, bits_phi, bits_y, key, requantize="pair", batch=0):
+def recover_gaussian(g, backend, bits_phi, bits_y, key, requantize="pair", batch=0,
+                     granularity="per_tensor", group_size=None):
     prob = make_gaussian_problem(g.m, g.n, g.s, 20.0, key)
-    kw = _solver_kwargs(backend, bits_phi, bits_y, key, requantize)
+    kw = _solver_kwargs(backend, bits_phi, bits_y, key, requantize,
+                        granularity, group_size)
     if batch:
         # B problems sharing phi: fresh sparse signals + noise per row.
         probs = [make_gaussian_problem(g.m, g.n, g.s, 20.0,
@@ -128,43 +149,69 @@ def recover_gaussian(g, backend, bits_phi, bits_y, key, requantize="pair", batch
             "support_recovery": float(support_recovery(res.x, prob.x_true, g.s))}
 
 
-def recover_mri(cfg, bits_y, key, batch=0):
+def recover_mri(cfg, bits_y, key, batch=0, granularity="per_tensor", n_bands=None):
     """Matrix-free §5 workload: PSNR/relative error of the recovered sparse
     phantom. ``bits_y=None`` → full-precision observations (the 32-bit
     baseline); ``batch`` recovers B randomized brain phantoms sharing one
-    sampling mask in a single batched call."""
+    sampling mask in a single batched call. ``granularity="per_band"``
+    quantizes the observations with one scale per radial k-space band
+    (``n_bands`` of them) instead of the paper's single c_y."""
     prob = make_mri_problem(cfg.resolution, cfg.n_sparse, cfg.fraction, key,
                             density=cfg.density, center_fraction=cfg.center_fraction,
                             snr_db=cfg.snr_db, phantom=cfg.phantom)
     r = cfg.resolution
+    n_bands = n_bands if n_bands is not None else cfg.n_bands
     kw = dict(real_signal=True, nonneg=True)
-    if bits_y:
+
+    def prep(y):
+        """Quantize observations per granularity; per-band happens up front
+        (qniht's own bits_y path is the per-tensor draw)."""
+        if not bits_y:
+            return y
+        if granularity == "per_band":
+            return quantize_observations(y, bits_y, key, granularity="per_band",
+                                         op=prob.op, n_bands=n_bands)
         kw.update(bits_y=bits_y, key=key)
+        return y
+
     if batch:
-        X_true = jnp.stack(
-            [sparsify_image(brain_phantom(r, jax.random.fold_in(key, b)),
-                            cfg.n_sparse) for b in range(batch)])
+        # per-row jitter breaks the phantom skull ring's exact-1.0 top-k ties
+        # so the B rows are genuinely distinct problems (see benchmarks/fig_mri)
+        def sparse_truth(b):
+            img = brain_phantom(r, jax.random.fold_in(key, b))
+            jitter = 1e-3 * jax.random.uniform(jax.random.fold_in(key, 100 + b),
+                                               img.shape)
+            return sparsify_image(img + jitter, cfg.n_sparse)
+
+        X_true = jnp.stack([sparse_truth(b) for b in range(batch)])
         Y, _ = mri_observations(prob.op, X_true, cfg.snr_db,
                                 jax.random.fold_in(key, batch))
+        Y = prep(Y)
         t0 = time.time()
         res = qniht_batch(prob.op, Y, cfg.n_sparse, cfg.n_iters, **kw)
         jax.block_until_ready(res.x)
         wall = time.time() - t0
         ps = [float(psnr(res.x[b].reshape(r, r), X_true[b].reshape(r, r)))
               for b in range(batch)]
+        rel = [float(relative_error(res.x[b], X_true[b])) for b in range(batch)]
         return {"batch": batch, "m": prob.op.shape[0], "psnr_mean": sum(ps) / batch,
-                "psnr_min": min(ps), "wall_s": wall}
+                "psnr_min": min(ps), "rel_error_mean": sum(rel) / batch,
+                "rel_error_max": max(rel), "wall_s": wall}
+    y = prep(prob.y)
     t0 = time.time()
-    res = qniht(prob.op, prob.y, cfg.n_sparse, cfg.n_iters, **kw)
+    res = qniht(prob.op, y, cfg.n_sparse, cfg.n_iters, **kw)
     jax.block_until_ready(res.x)
     wall = time.time() - t0
-    return {
+    out = {
         "m": prob.op.shape[0],
         "psnr": float(psnr(res.x.reshape(r, r), prob.x_true.reshape(r, r))),
         "rel_error": float(relative_error(res.x, prob.x_true)),
         "wall_s": wall,
         "phi_nbytes": prob.op.nbytes,
     }
+    if bits_y and granularity == "per_band":
+        out["y_scale_bytes"] = 4 * n_bands
+    return out
 
 
 def main(argv=None):
@@ -185,28 +232,47 @@ def main(argv=None):
     ap.add_argument("--requantize", default="pair", choices=["pair", "fixed"])
     ap.add_argument("--batch", type=int, default=0,
                     help="recover B observations of one Φ̂ at once (qniht_batch)")
+    ap.add_argument("--scale-granularity", default="per_tensor",
+                    choices=["per_tensor", "per_channel", "per_block", "per_band"],
+                    help="quantizer scale layout: per_channel/per_block apply to "
+                         "the packed Φ̂ stream (--backend packed), per_band to "
+                         "the MRI observation quantizer")
+    ap.add_argument("--group-size", type=int, default=None,
+                    help="per_block group size along the contraction axis, or "
+                         "the number of radial k-space bands for per_band "
+                         "(default: the MRI config's n_bands)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     backend = "dense" if args.full_precision else args.backend
     key = jax.random.PRNGKey(args.seed)
+    gran = args.scale_granularity
     if args.config.startswith("lofar"):
+        if gran == "per_band":
+            ap.error("per_band is the MRI observation granularity; use an mri config")
         cs = {"lofar": LOFAR_CONFIG, "lofar-bench": LOFAR_BENCH,
               "lofar-smoke": LOFAR_SMOKE}[args.config]
         out = recover_lofar(cs, backend, args.bits_phi, args.bits_y, key,
-                            args.requantize, args.batch)
+                            args.requantize, args.batch, gran, args.group_size)
         label = ("32bit" if backend == "dense"
                  else f"{args.bits_phi}&{args.bits_y}bit[{backend}]")
     elif args.config.startswith("mri"):
+        if gran in ("per_channel", "per_block"):
+            ap.error("the MRI Φ is matrix-free (nothing packed to scale); "
+                     "use --scale-granularity per_band for the observations")
         cs = {"mri": MRI_CONFIG, "mri-bench": MRI_BENCH,
               "mri-smoke": MRI_SMOKE}[args.config]
         bits_y = None if backend == "dense" else args.bits_y
-        out = recover_mri(cs, bits_y, key, args.batch)
-        label = "32bit[matrix-free]" if bits_y is None else f"y@{bits_y}bit[matrix-free]"
+        gran = cs.scale_granularity if gran == "per_tensor" else gran
+        out = recover_mri(cs, bits_y, key, args.batch, gran, args.group_size)
+        label = ("32bit[matrix-free]" if bits_y is None
+                 else f"y@{bits_y}bit[{gran},matrix-free]")
     else:
+        if gran == "per_band":
+            ap.error("per_band is the MRI observation granularity; use an mri config")
         g = GAUSS_CONFIG if args.config == "gaussian" else GAUSS_SMOKE
         out = recover_gaussian(g, backend, args.bits_phi, args.bits_y, key,
-                               args.requantize, args.batch)
+                               args.requantize, args.batch, gran, args.group_size)
         label = ("32bit" if backend == "dense"
                  else f"{args.bits_phi}&{args.bits_y}bit[{backend}]")
     print(f"[recover] {args.config} {label}: " +

@@ -8,12 +8,28 @@ HBM->VMEM; the Pallas `qmm` kernel unpacks in-register.
 Packing is along the **last axis** (the contraction axis of the matmuls), which
 keeps unpacked values contiguous along the TPU minor (lane) dimension.
 Codes are stored biased by +K so they are non-negative in ``b`` bits.
+
+Group-scaled (``per_block``) data packs identically — the scale vector is NOT
+interleaved with the codes but carried as a separate f32 array (see
+:mod:`repro.quant.formats` for the layout and overhead accounting). The only
+packing-level constraint is :func:`validate_group_packing`: the group size must
+be a multiple of ``8//bits`` so no packed byte straddles two scale groups.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from repro.quant.formats import BY_BITS
+
+
+def validate_group_packing(group_size: int, bits: int) -> None:
+    """Group-scaled packed storage needs every byte inside one scale group."""
+    vpb = 8 // bits
+    if group_size % vpb:
+        raise ValueError(
+            f"per_block group_size {group_size} must be a multiple of the "
+            f"packing word ({vpb} values/byte at {bits} bits) so packed bytes "
+            f"do not straddle scale groups")
 
 
 def packed_len(n: int, bits: int) -> int:

@@ -12,11 +12,18 @@ get the low-precision data representation:
   (stochastic rounding keeps it unbiased, per the paper's Q).
 * ``stochastic``    — stochastic (unbiased) vs nearest rounding for weights.
 * ``phi_bits`` / ``y_bits`` — the CS solver's own b_Φ and b_y.
+* ``scale_granularity`` / ``group_size`` — how many scales the quantized data
+  carries (see :mod:`repro.quant.formats`): ``"per_tensor"`` is the paper's
+  single c_v; ``"per_channel"``/``"per_row"`` and ``"per_block"`` (with
+  ``group_size``) match quantizer resolution to local statistics, which is
+  what keeps sub-8-bit widths usable on high-dynamic-range data.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional
+
+from repro.quant.formats import Granularity, as_granularity
 
 VALID_BITS = (None, 2, 4, 8)
 
@@ -30,12 +37,21 @@ class QuantPolicy:
     # CS solver data precision (paper notation b_Phi & b_y)
     phi_bits: Optional[int] = None
     y_bits: Optional[int] = None
+    # scaling granularity for the quantized data (string spelling so the
+    # frozen dataclass stays trivially hashable/serializable)
+    scale_granularity: str = "per_tensor"
+    group_size: Optional[int] = None
 
     def __post_init__(self):
         for name in ("weight_bits", "kv_bits", "grad_bits", "phi_bits", "y_bits"):
             v = getattr(self, name)
             if v not in VALID_BITS:
                 raise ValueError(f"{name} must be in {VALID_BITS}, got {v}")
+        self.granularity  # validates the spelling eagerly
+
+    @property
+    def granularity(self) -> Granularity:
+        return as_granularity(self.scale_granularity, self.group_size)
 
     @property
     def quantizes_weights(self) -> bool:

@@ -5,8 +5,15 @@ grid described in :mod:`repro.quant.formats`.  With ``key`` given it performs
 *stochastic rounding* (unbiased: ``E[Q_b(v)] = v``); without a key it rounds to
 nearest (biased but deterministic — used where reproducibility beats unbiasedness).
 
+The scale may be carried at any :class:`~repro.quant.formats.Granularity`:
+``per_tensor`` (the paper's single c_v — the default, bit-identical to the
+historical behaviour), ``per_channel`` (one scale per leading index), or
+``per_block(g)`` (one scale per ``g`` contiguous elements of the last axis; see
+the storage-layout notes in :mod:`repro.quant.formats`).
+
 Complex tensors are quantized component-wise (real & imaginary parts share one
-scale), matching how the paper treats the complex measurement matrix entries.
+scale per group), matching how the paper treats the complex measurement matrix
+entries.
 
 The returned :class:`QTensor` stores integer codes in ``int8`` (unpacked). Packed
 2-/4-bit storage lives in :mod:`repro.quant.pack`; the Pallas kernels consume the
@@ -14,27 +21,37 @@ packed form.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.quant.formats import BY_BITS, QuantFormat
+from repro.quant.formats import (
+    BY_BITS,
+    PER_TENSOR,
+    Granularity,
+    QuantFormat,
+    as_granularity,
+)
 
 
 @jax.tree_util.register_pytree_node_class
 class QTensor:
-    """A quantized tensor: integer codes + scale + bit-width.
+    """A quantized tensor: integer codes + scale(s) + bit-width + granularity.
 
-    ``dequantize()`` returns ``codes * (scale / K)`` in the original dtype.
+    ``dequantize()`` returns ``codes * (scale / K)`` in the original dtype,
+    expanding blockwise scales along the last axis as needed.
     For complex tensors, codes have a leading axis of size 2 (real, imag).
     """
 
-    def __init__(self, codes: jax.Array, scale: jax.Array, bits: int, is_complex: bool = False):
+    def __init__(self, codes: jax.Array, scale: jax.Array, bits: int,
+                 is_complex: bool = False,
+                 granularity: Granularity = PER_TENSOR):
         self.codes = codes
         self.scale = scale
         self.bits = int(bits)
         self.is_complex = bool(is_complex)
+        self.granularity = as_granularity(granularity)
 
     @property
     def fmt(self) -> QuantFormat:
@@ -44,9 +61,16 @@ class QTensor:
     def shape(self):
         return self.codes.shape[1:] if self.is_complex else self.codes.shape
 
+    def elementwise_scale(self) -> jax.Array:
+        """The scale each code dequantizes with, broadcastable to ``shape``."""
+        if self.granularity.kind == "per_block":
+            return expand_block_scale(self.scale, self.granularity.group_size,
+                                      self.shape[-1])
+        return self.scale
+
     def dequantize(self, dtype=None) -> jax.Array:
         k = self.fmt.half_steps
-        step = self.scale / k
+        step = self.elementwise_scale() / k
         vals = self.codes.astype(jnp.float32) * step
         if self.is_complex:
             out = jax.lax.complex(vals[0], vals[1])
@@ -54,19 +78,46 @@ class QTensor:
         return vals.astype(dtype) if dtype is not None else vals
 
     def tree_flatten(self):
-        return (self.codes, self.scale), (self.bits, self.is_complex)
+        return (self.codes, self.scale), (self.bits, self.is_complex, self.granularity)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         codes, scale = children
-        bits, is_complex = aux
-        return cls(codes, scale, bits, is_complex)
+        bits, is_complex, granularity = aux
+        return cls(codes, scale, bits, is_complex, granularity)
+
+
+def _guard_zero(m: jax.Array) -> jax.Array:
+    # Guard against all-zero groups: scale 0 would produce NaNs on dequant paths.
+    return jnp.where(m > 0, m, jnp.ones_like(m))
 
 
 def _max_abs(v: jax.Array, axis=None) -> jax.Array:
-    m = jnp.max(jnp.abs(v), axis=axis, keepdims=axis is not None)
-    # Guard against all-zero tensors: scale 0 would produce NaNs on dequant paths.
-    return jnp.where(m > 0, m, jnp.ones_like(m))
+    return _guard_zero(jnp.max(jnp.abs(v), axis=axis, keepdims=axis is not None))
+
+
+def block_scale(v: jax.Array, group_size: int) -> jax.Array:
+    """Per-block max-abs along the last axis: (..., n) → (..., ⌈n/g⌉)."""
+    n = v.shape[-1]
+    nb = (n + group_size - 1) // group_size
+    pad = nb * group_size - n
+    if pad:
+        v = jnp.pad(v, [(0, 0)] * (v.ndim - 1) + [(0, pad)])
+    blocks = jnp.abs(v).reshape(*v.shape[:-1], nb, group_size)
+    return _guard_zero(jnp.max(blocks, axis=-1))
+
+
+def expand_block_scale(scale: jax.Array, group_size: int, n: int) -> jax.Array:
+    """Inverse broadcast of :func:`block_scale`: (..., ⌈n/g⌉) → (..., n)."""
+    return jnp.repeat(scale, group_size, axis=-1)[..., :n]
+
+
+def _granular_scale(v: jax.Array, granularity: Granularity) -> jax.Array:
+    if granularity.kind == "per_tensor":
+        return _max_abs(v)
+    if granularity.kind == "per_channel":
+        return _max_abs(v, axis=v.ndim - 1)
+    return block_scale(v, granularity.group_size)
 
 
 def quantize_codes(
@@ -75,23 +126,35 @@ def quantize_codes(
     key: Optional[jax.Array] = None,
     scale: Optional[jax.Array] = None,
     channel_axis: Optional[int] = None,
+    granularity: Union[Granularity, str, None] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Quantize a *real* tensor to integer codes in [-K, K]. Returns (codes, scale).
 
     scale: per-tensor max-abs by default; per-channel when ``channel_axis`` given
-    (the scale then has keepdims shape). Values are clipped to [-scale, scale]
-    before rounding (the paper assumes values confined to [-1, 1] a priori; the
-    scale implements that normalization).
+    (the scale then has keepdims shape); blockwise per ``granularity`` (the
+    returned scale then has the compact per-group shape — ``(..., ⌈n/g⌉)`` for
+    ``per_block(g)``). An explicit ``scale`` is used as-is: any shape
+    broadcastable to ``v`` (per_tensor/per_channel/per-element), or the compact
+    per-group shape when ``granularity`` is per_block. Values are clipped to
+    [-scale, scale] before rounding (the paper assumes values confined to
+    [-1, 1] a priori; the scale implements that normalization).
     """
     fmt = BY_BITS[bits]
     k = fmt.half_steps
-    if scale is None:
-        if channel_axis is None:
-            scale = _max_abs(v)
-        else:
+    gran = as_granularity(granularity)
+    if channel_axis is not None:
+        if not gran.is_per_tensor:
+            raise ValueError("pass either channel_axis or granularity, not both")
+        if scale is None:
             axes = tuple(a for a in range(v.ndim) if a != channel_axis)
             scale = _max_abs(v, axis=axes)
-    scaled = jnp.clip(v / scale, -1.0, 1.0) * k
+        scale_elem = scale
+    else:
+        if scale is None:
+            scale = _granular_scale(v, gran)
+        scale_elem = (expand_block_scale(scale, gran.group_size, v.shape[-1])
+                      if gran.kind == "per_block" else scale)
+    scaled = jnp.clip(v / scale_elem, -1.0, 1.0) * k
     if key is None:
         codes = jnp.round(scaled)
     else:
@@ -109,26 +172,35 @@ def quantize(
     key: Optional[jax.Array] = None,
     scale: Optional[jax.Array] = None,
     channel_axis: Optional[int] = None,
+    granularity: Union[Granularity, str, None] = None,
 ) -> QTensor:
     """Quantize a real or complex tensor into a :class:`QTensor`."""
+    gran = as_granularity(granularity)
     if jnp.iscomplexobj(v):
         re, im = jnp.real(v), jnp.imag(v)
         if scale is None:
             if channel_axis is not None:
                 raise NotImplementedError("per-channel complex quantization unused")
-            scale = jnp.maximum(_max_abs(re), _max_abs(im))
+            # real & imaginary parts share one scale per group
+            scale = jnp.maximum(_granular_scale(re, gran), _granular_scale(im, gran))
         if key is not None:
             kre, kim = jax.random.split(key)
         else:
             kre = kim = None
-        cre, _ = quantize_codes(re, bits, kre, scale)
-        cim, _ = quantize_codes(im, bits, kim, scale)
-        return QTensor(jnp.stack([cre, cim]), scale, bits, is_complex=True)
-    codes, scale = quantize_codes(v, bits, key, scale, channel_axis)
-    return QTensor(codes, scale, bits, is_complex=False)
+        cre, _ = quantize_codes(re, bits, kre, scale, granularity=gran)
+        cim, _ = quantize_codes(im, bits, kim, scale, granularity=gran)
+        return QTensor(jnp.stack([cre, cim]), scale, bits, is_complex=True,
+                       granularity=gran)
+    codes, scale = quantize_codes(v, bits, key, scale, channel_axis, gran)
+    return QTensor(codes, scale, bits, is_complex=False, granularity=gran)
 
 
-def dequantize_codes(codes: jax.Array, scale: jax.Array, bits: int, dtype=jnp.float32) -> jax.Array:
+def dequantize_codes(codes: jax.Array, scale: jax.Array, bits: int,
+                     dtype=jnp.float32,
+                     granularity: Union[Granularity, str, None] = None) -> jax.Array:
+    gran = as_granularity(granularity)
+    if gran.kind == "per_block":
+        scale = expand_block_scale(scale, gran.group_size, codes.shape[-1])
     fmt = BY_BITS[bits]
     return (codes.astype(jnp.float32) * (scale / fmt.half_steps)).astype(dtype)
 
@@ -139,8 +211,9 @@ def fake_quantize(
     key: Optional[jax.Array] = None,
     scale: Optional[jax.Array] = None,
     channel_axis: Optional[int] = None,
+    granularity: Union[Granularity, str, None] = None,
 ) -> jax.Array:
     """Quantize-dequantize round trip (the reference 'Q(v)' of the paper's math)."""
-    return quantize(v, bits, key, scale, channel_axis).dequantize(
+    return quantize(v, bits, key, scale, channel_axis, granularity).dequantize(
         v.dtype if not jnp.iscomplexobj(v) else None
     )

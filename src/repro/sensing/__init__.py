@@ -5,6 +5,8 @@ from repro.sensing.mri import (
     MRIProblem,
     brain_phantom,
     cartesian_mask,
+    kspace_band_scales,
+    kspace_radial_bands,
     make_mri_problem,
     mri_observations,
     quantize_observations,
@@ -28,6 +30,8 @@ __all__ = [
     "MRIProblem",
     "brain_phantom",
     "cartesian_mask",
+    "kspace_band_scales",
+    "kspace_radial_bands",
     "make_mri_problem",
     "mri_observations",
     "quantize_observations",

@@ -22,7 +22,14 @@ This module provides the non-operator half of the pipeline:
   ``"variable"`` (polynomial density concentrating samples at low frequencies,
   the standard CS-MRI pattern) and an always-sampled center block,
 * :func:`mri_observations` / :func:`quantize_observations` — noisy k-space
-  samples and the b_y-bit stochastic quantization applied to them,
+  samples and the b_y-bit stochastic quantization applied to them. The
+  quantizer scale is per-tensor (the paper's single c_y) by default, or
+  **per-band**: concentric radial bands of k-space each carry their own scale
+  (:func:`kspace_radial_bands` / :func:`kspace_band_scales`), matching
+  quantizer resolution to the steeply decaying spectral energy of images —
+  the single shared scale is what collapses b_y < 8 (huge DC coefficients
+  force tiny high-frequency samples under the rounding step; see
+  BENCH_mri.json int4/int2 rows),
 * :func:`make_mri_problem` — one call bundling all of the above.
 
 Masks are generated in *centered* coordinates (DC in the middle, how k-space
@@ -39,7 +46,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.operators import SubsampledFourierOperator
-from repro.quant.quantize import fake_quantize
+from repro.quant.formats import BY_BITS
+from repro.quant.quantize import fake_quantize, quantize_codes
 
 # Modified Shepp–Logan (Toft): (intensity, a, b, x0, y0, angle_deg) per ellipse.
 _SHEPP_LOGAN = (
@@ -164,10 +172,100 @@ def cartesian_mask(
     return np.fft.ifftshift(mask)
 
 
-def quantize_observations(y: jax.Array, bits_y: int, key: jax.Array) -> jax.Array:
+def kspace_radial_bands(
+    op_or_indices,
+    resolution: Optional[int] = None,
+    n_bands: int = 8,
+) -> jax.Array:
+    """Radial band index (0 = DC … n_bands-1 = corners) per k-space sample.
+
+    Accepts a :class:`~repro.core.operators.SubsampledFourierOperator` or a
+    flat index array (with ``resolution``). Indices follow the unshifted
+    DC-at-[0,0] convention the operator's ``fft2`` uses; bands are concentric
+    annuli of equal radial width on the centered grid.
+    """
+    if isinstance(op_or_indices, SubsampledFourierOperator):
+        idx, r = op_or_indices.indices, op_or_indices.resolution
+    else:
+        if resolution is None:
+            raise ValueError("resolution required when passing raw indices")
+        idx, r = jnp.asarray(op_or_indices, jnp.int32), int(resolution)
+    if n_bands < 1:
+        raise ValueError(f"n_bands must be >= 1, got {n_bands}")
+    row, col = idx // r, idx % r
+    # unshifted index -> signed frequency in [-r/2, r/2)
+    fr = ((row + r // 2) % r) - r // 2
+    fc = ((col + r // 2) % r) - r // 2
+    dist = jnp.sqrt((fr.astype(jnp.float32)) ** 2 + (fc.astype(jnp.float32)) ** 2)
+    d_max = jnp.sqrt(2.0) * (r / 2.0)
+    band = jnp.floor(dist / d_max * n_bands).astype(jnp.int32)
+    return jnp.clip(band, 0, n_bands - 1)
+
+
+def kspace_band_scales(y: jax.Array, bands: jax.Array, n_bands: int) -> jax.Array:
+    """Per-band quantizer scale: max component magnitude within each radial
+    band (real & imaginary share one scale, like the per-tensor quantizer).
+    ``y`` is (M,) or batched (..., M); returns (..., n_bands) f32, with empty
+    or all-zero bands guarded to scale 1."""
+    mag = jnp.maximum(jnp.abs(jnp.real(y)), jnp.abs(jnp.imag(y)))
+
+    def one(m):
+        s = jax.ops.segment_max(m, bands, num_segments=n_bands)
+        return jnp.where(s > 0, s, jnp.ones_like(s))  # also clears -inf empties
+
+    flat = mag.reshape(-1, mag.shape[-1])
+    return jax.vmap(one)(flat).reshape(*mag.shape[:-1], n_bands)
+
+
+def quantize_observations(
+    y: jax.Array,
+    bits_y: int,
+    key: jax.Array,
+    granularity: str = "per_tensor",
+    op: Optional[SubsampledFourierOperator] = None,
+    n_bands: int = 8,
+) -> jax.Array:
     """The paper's b_y-bit stochastic quantization of acquired k-space samples
-    (complex: real/imag quantized component-wise on a shared scale)."""
-    return fake_quantize(y, bits_y, key)
+    (complex: real/imag quantized component-wise on a shared scale).
+
+    ``granularity="per_tensor"`` (default) is the paper's single c_y — one
+    scale for all of k-space, identical to ``fake_quantize``.
+    ``granularity="per_band"`` carries one scale per concentric radial band
+    (``n_bands`` of them, geometry from ``op``): each sample rounds with the
+    step of its *local* dynamic range, so the huge low-frequency coefficients
+    no longer force the quantization step of the tiny high frequencies. Stream
+    overhead is ``4 * n_bands`` bytes of f32 scales (band indices are derivable
+    from the sampling mask the acquisition already stores).
+    """
+    if granularity == "per_tensor":
+        return fake_quantize(y, bits_y, key)
+    if granularity != "per_band":
+        raise ValueError(
+            f"unknown observation granularity {granularity!r} "
+            "(use 'per_tensor' or 'per_band')")
+    if op is None:
+        raise ValueError("per_band quantization needs the sensing operator "
+                         "(op=...) for the k-space band geometry")
+    bands = kspace_radial_bands(op, n_bands=n_bands)
+    scales = kspace_band_scales(y, bands, n_bands)          # (..., n_bands)
+    kre, kim = jax.random.split(key)
+
+    def one(y_row, scale_row):
+        """One acquisition; every batch row folds the same key so that row b
+        of a batched call reproduces the single-row call bit-for-bit (the
+        qniht batching contract)."""
+        s = scale_row[bands]
+        cre, _ = quantize_codes(jnp.real(y_row), bits_y, kre, scale=s)
+        cim, _ = quantize_codes(jnp.imag(y_row), bits_y, kim, scale=s)
+        step = s / BY_BITS[bits_y].half_steps
+        return jax.lax.complex(cre.astype(jnp.float32) * step,
+                               cim.astype(jnp.float32) * step)
+
+    if y.ndim == 1:
+        return one(y, scales).astype(y.dtype)
+    flat_y = y.reshape(-1, y.shape[-1])
+    flat_s = scales.reshape(-1, n_bands)
+    return jax.vmap(one)(flat_y, flat_s).reshape(y.shape).astype(y.dtype)
 
 
 def mri_observations(
