@@ -12,6 +12,13 @@ k-space's dynamic range; overhead = ``4·n_bands`` bytes, reported as
 ``y_scale_bytes``). A batched run (B phantoms sharing one mask) shows the
 serving-mode amortization with *per-item* PSNR / rel_error.
 
+The ``mri/full_*`` rows are the paper's actual §5 scenario: the **full,
+unsparsified** phantom, recovered once in the pixel basis (Φ = P_Ω F — the
+anatomy is not pixel-sparse, so this is the floor) and once in the Haar
+wavelet basis (the composed Φ = P_Ω F W†), at b_y ∈ {32, 8, 4, 2} ×
+{per-tensor, per-band}. PSNR is always measured in image space against the
+full phantom.
+
 The ``phi_nbytes`` column is the point of the matrix-free seam: the dense
 partial-Fourier Φ this replaces would be ``16 · fraction · N²`` bytes
 (complex64) — reported as ``dense_phi_bytes`` for contrast.
@@ -30,7 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import measure, row, write_json
-from repro.configs.mri_brain import BENCH, SMOKE
+from repro.configs.mri_brain import BENCH, SMOKE, WAVELET_BENCH, WAVELET_SMOKE
 from repro.core import psnr, qniht, qniht_batch, relative_error
 from repro.sensing import (
     brain_phantom,
@@ -135,9 +142,70 @@ def _sweep(fast: bool, per_tensor: bool, per_band: bool):
     return rows, records
 
 
+def _full_image_sweep(fast: bool):
+    """The unsparsified phantom: pixel basis (Φ = P_Ω F, the mismatch floor)
+    vs Haar wavelet basis (Φ = P_Ω F W†), sharing one mask, one set of
+    observations, and one image-space ground truth."""
+    cfg = WAVELET_SMOKE if fast else WAVELET_BENCH
+    r = cfg.resolution
+    key = jax.random.PRNGKey(cfg.seed)
+    prob = make_mri_problem(r, cfg.n_sparse, cfg.fraction, key,
+                            density=cfg.density,
+                            center_fraction=cfg.center_fraction,
+                            snr_db=cfg.snr_db, phantom=cfg.phantom,
+                            sparsity_basis=cfg.sparsity_basis)
+    img_true = prob.image_true.reshape(r, r)
+    wavelet = cfg.sparsity_basis  # "haar"/"db4" per the config
+    ops = {wavelet: prob.op, "pixel": prob.op.kspace_op}
+    rows, records = [], []
+
+    def solve(basis, bits_y, granularity):
+        y = prob.y
+        if bits_y:
+            y = quantize_observations(prob.y, bits_y, key, granularity=granularity,
+                                      op=prob.op, n_bands=N_BANDS)
+        return qniht(ops[basis], y, cfg.n_sparse, cfg.n_iters,
+                     real_signal=True, nonneg=basis == "pixel", with_trace=False)
+
+    for basis in ("pixel", wavelet):
+        runs = [("f32", None, "per_tensor")]
+        for bits in (8, 4, 2):
+            runs.append((f"int{bits}", bits, "per_tensor"))
+            runs.append((f"int{bits}_band{N_BANDS}", bits, "per_band"))
+        for tag, bits, gran in runs:
+            us, res = measure(lambda b=bits, g=gran, ba=basis: solve(ba, b, g))
+            img = (prob.to_image(res.x) if basis != "pixel"
+                   else jnp.real(res.x)).reshape(r, r)
+            ps = float(psnr(img, img_true))
+            rel = float(relative_error(img.ravel(), prob.image_true))
+            name = f"mri/full_{basis}_y_{tag}"
+            extra = (f"psnr_db={ps:.2f} rel_error={rel:.4f} basis={basis} "
+                     f"granularity={gran} phi_nbytes={ops[basis].nbytes}")
+            rows.append(row(name, us, extra))
+            rec = {"name": name, "us_per_call": round(us, 1), "bits_y": bits,
+                   "psnr_db": round(ps, 2), "rel_error": round(rel, 5),
+                   "basis": basis, "resolution": r, "m": prob.op.shape[0],
+                   "s": cfg.n_sparse, "n_iters": cfg.n_iters,
+                   "phi_nbytes": ops[basis].nbytes,
+                   "extra": f"granularity={gran} full_image=True"}
+            if gran == "per_band":
+                rec["y_scale_bytes"] = 4 * N_BANDS
+            records.append(rec)
+    return rows, records
+
+
 def run(fast: bool = True):
     rows, records = _sweep(fast, per_tensor=True, per_band=True)
-    write_json(records, JSON_PATH)
+    rows_f, records_f = _full_image_sweep(fast)
+    write_json(records + records_f, JSON_PATH)
+    return rows + rows_f
+
+
+def run_fullimage(fast: bool = True):
+    """The full-image (unsparsified phantom) rows only
+    (``benchmarks/run.py --suite mri-fullimage``); does NOT touch
+    BENCH_mri.json so the committed trajectory stays one-run-per-PR."""
+    rows, _ = _full_image_sweep(fast)
     return rows
 
 

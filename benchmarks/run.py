@@ -65,6 +65,7 @@ def main(argv=None) -> None:
         "fig11": fig11_gaussian,
         "mri": fig_mri,
         "mri-groupscale": _FnSuite(fig_mri.run_groupscale),
+        "mri-fullimage": _FnSuite(fig_mri.run_fullimage),
         "kernels": kernels_micro,
         "roofline": roofline,
     }
@@ -77,6 +78,7 @@ def main(argv=None) -> None:
     else:
         # opt-in only: the full default run already covers these rows via "mri"
         suites.pop("mri-groupscale")
+        suites.pop("mri-fullimage")
 
     print("name,us_per_call,derived")
     failures = 0

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Tier-1 test entry point with a quick pre-commit tier.
 #
-#   scripts/ci.sh        # fast: skip @slow (subprocess dry-run / multidevice) tests
+#   scripts/ci.sh        # fast: skip @slow tests (model-arch compiles, subprocess
+#                        # dry-run / multidevice, large-grid MRI acceptance) — <2 min
 #   scripts/ci.sh fast   # same
 #   scripts/ci.sh full   # everything — the driver's tier-1 command
 #   scripts/ci.sh lint   # byte-compile src/tests/benchmarks (+ ruff if installed)

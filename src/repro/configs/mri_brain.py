@@ -13,6 +13,13 @@ far beyond what the dense solver path could hold as fake-quantized f32 pairs),
 per concentric radial k-space band (see ``repro.sensing.quantize_observations``)
 — the 4-byte-per-band overhead that keeps b_y < 8 usable against k-space's
 dynamic range.
+
+``sparsity_basis`` picks the recovery model: ``"pixel"`` thresholds the
+phantom to its ``n_sparse`` largest pixels (the exact-sparsity toy);
+``"haar"``/``"db4"`` keeps the **full** anatomy and recovers its wavelet
+coefficients through the composed Φ = P_Ω F W† — the paper's actual brain
+scenario. The ``WAVELET*`` configs are that mode with ``n_sparse`` sized for
+approximate wavelet sparsity (~12% of N) and per-band observation scaling.
 """
 import dataclasses
 from typing import Optional
@@ -22,7 +29,7 @@ from typing import Optional
 class MRIConfig:
     name: str
     resolution: int       # image is resolution × resolution (N = resolution²)
-    n_sparse: int         # s: pixels kept in the s-sparse phantom
+    n_sparse: int         # s: kept pixels (pixel basis) / wavelet coefficients
     fraction: float       # sampled fraction of k-space (M = fraction · N)
     density: str          # "uniform" | "variable" Cartesian sampling
     center_fraction: float
@@ -33,6 +40,8 @@ class MRIConfig:
     seed: int = 5
     scale_granularity: str = "per_tensor"   # "per_tensor" | "per_band"
     n_bands: int = 16                        # radial bands when per_band
+    sparsity_basis: str = "pixel"            # "pixel" | "haar" | "db4"
+    wavelet_levels: Optional[int] = None     # None → deepest valid pyramid
 
 
 CONFIG = MRIConfig(
@@ -52,3 +61,13 @@ BENCH = dataclasses.replace(CONFIG, name="mri-brain-bench", resolution=128,
                             n_sparse=500, n_iters=40)
 SMOKE = dataclasses.replace(CONFIG, name="mri-brain-smoke", resolution=64,
                             n_sparse=120, n_iters=25)
+
+# Full-image wavelet recovery (Φ = P_Ω F W†): the unsparsified phantom,
+# s ≈ 12% of N wavelet coefficients, per-band k-space scaling by default.
+WAVELET = dataclasses.replace(CONFIG, name="mri-brain-wavelet",
+                              sparsity_basis="haar", n_sparse=8000,
+                              scale_granularity="per_band")
+WAVELET_BENCH = dataclasses.replace(WAVELET, name="mri-brain-wavelet-bench",
+                                    resolution=128, n_sparse=2000, n_iters=40)
+WAVELET_SMOKE = dataclasses.replace(WAVELET, name="mri-brain-wavelet-smoke",
+                                    resolution=64, n_sparse=500, n_iters=25)

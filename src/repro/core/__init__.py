@@ -11,10 +11,12 @@ from repro.core.niht import (
     stopping_iterations,
 )
 from repro.core.operators import (
+    ComposedOperator,
     DenseOperator,
     FakeQuantPairOperator,
     PackedStreamingOperator,
     SubsampledFourierOperator,
+    WaveletSynthesisOperator,
     as_operator,
     is_linear_operator,
     make_iteration_operators,
@@ -28,6 +30,7 @@ from repro.core.recovery import (
 )
 from repro.core.rip import (
     corollary1_coeffs,
+    effective_scale,
     eps_q,
     eps_s,
     gamma_from_rics,
@@ -50,11 +53,13 @@ __all__ = [
     "clean", "cosamp", "fista_l1", "iht", "spectral_norm",
     "IHTResult", "IHTTrace", "niht", "niht_iteration", "qniht", "qniht_batch",
     "stopping_iterations",
-    "DenseOperator", "FakeQuantPairOperator", "PackedStreamingOperator",
-    "SubsampledFourierOperator", "as_operator", "is_linear_operator",
+    "ComposedOperator", "DenseOperator", "FakeQuantPairOperator",
+    "PackedStreamingOperator", "SubsampledFourierOperator",
+    "WaveletSynthesisOperator", "as_operator", "is_linear_operator",
     "make_iteration_operators",
     "psnr", "relative_error", "snr_db", "source_recovery", "support_recovery",
-    "corollary1_coeffs", "eps_q", "eps_s", "gamma_from_rics", "gamma_full",
+    "corollary1_coeffs", "effective_scale", "eps_q", "eps_s",
+    "gamma_from_rics", "gamma_full",
     "gamma_hat_bound", "min_bits_lemma1", "rics_sampled", "singular_values",
     "theorem3_bound",
     "find_threshold_bisect", "hard_threshold", "hard_threshold_bisect", "support",

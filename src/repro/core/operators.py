@@ -19,17 +19,40 @@ representations of Φ̂:
   followed by a k-space sampling mask (the MRI workload, paper §5's brain
   images). No (M, N) array ever exists — at 256×256 the dense partial-Fourier
   matrix would be ~2 GB; the implicit form stores only the sample indices.
+* :class:`WaveletSynthesisOperator` — the orthonormal synthesis W† mapping
+  wavelet coefficients to image pixels (implicit multi-level DWT, see
+  :mod:`repro.transforms.wavelet`).
+* :class:`ComposedOperator` — the algebra: ``B ∘ A`` with the exact adjoint
+  ``A† ∘ B†``. Composing the two above yields the full CS-MRI model
+  Φ = P_Ω F W†, still matrix-free.
 
-Protocol: ``mv(x)`` computes Φ̂ x, ``rmv(r)`` computes Φ̂† r, ``nbytes`` is the
-bytes of operator data streamed by ONE application (mv ≈ rmv), ``shape`` is
-(M, N) and ``dtype`` the measurement dtype. All operators accept a single
-vector ``(n,)`` or a batch ``(B, n)``; a batch is served by one matmul/kernel
-invocation, amortizing the Φ̂ stream across B problems (the "heavy traffic"
-scenario exploited by ``qniht_batch``).
+Operator protocol (the contract every backend implements, and what a new
+operator must provide to slot into ``qniht``/``qniht_batch``):
+
+* ``mv(x)`` — apply Φ̂: ``(n,) → (m,)``, and batched ``(B, n) → (B, m)``. A
+  batch MUST be served by one vectorized application (one matmul / kernel
+  call / batched FFT), since amortizing the operator stream across B problems
+  is the "heavy traffic" scenario ``qniht_batch`` exploits.
+* ``rmv(r)`` — apply the adjoint Φ̂†: ``(m,) → (n,)``, batched likewise.
+  **Adjoint contract**: ``⟨mv(x), r⟩ == ⟨x, rmv(r)⟩`` must hold exactly (to
+  float tolerance) — NIHT's step size µ = ‖g_Γ‖²/‖Φ̂ g_Γ‖² and its acceptance
+  test both assume Φ̂† is the true adjoint, and a systematic mismatch breaks
+  the monotone-descent guarantee. Quantized backends are the one sanctioned
+  relaxation: per-orientation scales hold the identity only to within
+  quantization error (documented on :class:`PackedStreamingOperator`).
+* ``shape`` — ``(m, n)`` as ints; ``dtype`` — the measurement dtype (what
+  ``mv`` returns).
+* ``nbytes`` — bytes of operator data streamed by ONE application (mv ≈ rmv):
+  the quantity the paper's bandwidth model ``T = size(Φ̂)/BW`` (suppl. §8.1)
+  prices. Dense: the full matrix. Packed: the packed codes (+ documented
+  ``scale_nbytes``). Matrix-free: only the parameters actually read — the
+  sampling pattern for P_Ω F, the filter taps for W†. Composition sums the
+  factors' nbytes (each factor's data is streamed once per application).
 
 Operators are registered pytrees (config in aux_data) so they both close over
 ``lax.scan`` bodies and cross jit boundaries as arguments —
-``qniht(phi_op, y, ...)`` takes any of them directly.
+``qniht(phi_op, y, ...)`` takes any of them directly. Composition preserves
+this: a :class:`ComposedOperator` of pytree operators is a pytree.
 
 :func:`make_iteration_operators` is the solver's factory seam: it turns
 whatever the caller handed in (dense array or operator) plus the
@@ -261,6 +284,13 @@ class SubsampledFourierOperator:
         r = self.resolution
         return jnp.zeros((r * r,), bool).at[self.indices].set(True).reshape(r, r)
 
+    @property
+    def kspace_op(self) -> "SubsampledFourierOperator":
+        """The factor owning the k-space sampling geometry (self). Exists so
+        band-geometry consumers (``kspace_radial_bands``) can unwrap either a
+        bare Fourier operator or a composition uniformly."""
+        return self
+
     def mv(self, x: jax.Array) -> jax.Array:
         r = self.resolution
         img = x.reshape(*x.shape[:-1], r, r)
@@ -280,6 +310,134 @@ class SubsampledFourierOperator:
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(children[0], aux[0])
+
+
+@jax.tree_util.register_pytree_node_class
+class WaveletSynthesisOperator:
+    """Matrix-free orthonormal wavelet synthesis W†: coefficients → image.
+
+    ``mv(c)`` runs the inverse multi-level periodized 2D DWT
+    (:func:`repro.transforms.wavelet.idwt2`) on the ``(r²,)`` coefficient
+    vector; W is unitary, so ``rmv`` — the exact adjoint (W†)† = W — is simply
+    the *forward* transform. Square (r², r²) and real, but applied to complex
+    residuals component-wise (the transform is linear over ℂ), which is what
+    the composed CS-MRI adjoint W F† P_Ωᵀ feeds it.
+
+    ``nbytes`` counts the only operator data an application reads: the 2·L
+    f32 filter taps — the reason a transform-domain Φ costs nothing over the
+    pixel-domain one on the stream model.
+    """
+
+    def __init__(self, resolution: int, wavelet: str = "haar",
+                 levels: Optional[int] = None):
+        from repro.transforms.wavelet import _resolve_levels, wavelet_filters
+
+        self.resolution = int(resolution)
+        self.wavelet = str(wavelet)
+        wavelet_filters(self.wavelet)  # validate the spelling eagerly
+        self.levels = _resolve_levels(self.resolution, self.wavelet, levels)
+
+    @property
+    def shape(self):
+        n = self.resolution * self.resolution
+        return (n, n)
+
+    @property
+    def dtype(self):
+        return jnp.dtype(jnp.float32)
+
+    @property
+    def nbytes(self) -> int:
+        from repro.transforms.wavelet import wavelet_filters
+
+        lo, hi = wavelet_filters(self.wavelet)
+        return 4 * (len(lo) + len(hi))
+
+    def mv(self, c: jax.Array) -> jax.Array:
+        from repro.transforms.wavelet import idwt2
+
+        r = self.resolution
+        img = idwt2(c.reshape(*c.shape[:-1], r, r), self.wavelet, self.levels)
+        return img.reshape(*c.shape[:-1], r * r)
+
+    def rmv(self, x: jax.Array) -> jax.Array:
+        from repro.transforms.wavelet import dwt2
+
+        r = self.resolution
+        co = dwt2(x.reshape(*x.shape[:-1], r, r), self.wavelet, self.levels)
+        return co.reshape(*x.shape[:-1], r * r)
+
+    def tree_flatten(self):
+        return (), (self.resolution, self.wavelet, self.levels)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del children
+        return cls(*aux)
+
+
+@jax.tree_util.register_pytree_node_class
+class ComposedOperator:
+    """The operator algebra's product: ``ComposedOperator(B, A)`` applies
+    x ↦ B(A x), with the exact adjoint r ↦ A†(B† r).
+
+    Exactness is compositional — if each factor satisfies the adjoint
+    contract, so does the product: ⟨BAx, r⟩ = ⟨Ax, B†r⟩ = ⟨x, A†B†r⟩. Shapes
+    must chain (``B.shape[1] == A.shape[0]``); ``shape`` is
+    (B.shape[0], A.shape[1]), ``dtype`` is the outer factor's measurement
+    dtype, and ``nbytes`` is the sum of the factors' (each factor's data is
+    streamed once per application).
+
+    The CS-MRI model Φ = P_Ω F W† is
+    ``ComposedOperator(SubsampledFourierOperator, WaveletSynthesisOperator)``;
+    the ``kspace_op`` property surfaces whichever factor owns the k-space
+    sampling geometry so per-band observation quantization keeps working on
+    the composition.
+    """
+
+    def __init__(self, outer, inner):
+        if outer.shape[1] != inner.shape[0]:
+            raise ValueError(
+                f"cannot compose: outer expects inputs of size {outer.shape[1]}, "
+                f"inner produces size {inner.shape[0]}")
+        self.outer = outer
+        self.inner = inner
+
+    @property
+    def shape(self):
+        return (self.outer.shape[0], self.inner.shape[1])
+
+    @property
+    def dtype(self):
+        return self.outer.dtype
+
+    @property
+    def nbytes(self) -> int:
+        return self.outer.nbytes + self.inner.nbytes
+
+    @property
+    def kspace_op(self):
+        """The (unique) factor exposing k-space geometry, unwrapped through
+        nested compositions."""
+        for f in (self.outer, self.inner):
+            op = getattr(f, "kspace_op", None)
+            if op is not None:
+                return op
+        raise AttributeError("no factor of this composition owns k-space geometry")
+
+    def mv(self, x: jax.Array) -> jax.Array:
+        return self.outer.mv(self.inner.mv(x))
+
+    def rmv(self, r: jax.Array) -> jax.Array:
+        return self.inner.rmv(self.outer.rmv(r))
+
+    def tree_flatten(self):
+        return (self.outer, self.inner), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
 
 
 def is_linear_operator(phi) -> bool:

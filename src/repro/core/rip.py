@@ -60,8 +60,41 @@ def gamma_from_rics(alpha: jax.Array, beta: jax.Array) -> jax.Array:
     return jnp.maximum(1.0 - alpha / beta, beta / alpha - 1.0)
 
 
-def min_bits_lemma1(gamma: float, alpha: float, support_size: int, target: float = 1.0 / 16.0) -> int:
-    """Lemma 1: smallest b with  b ≥ log₂(2√|Γ| / (ε·α)),  ε = target − γ.
+def effective_scale(scale) -> float:
+    """Collapse a quantizer scale spec to the c_Φ entering Lemma 1's bounds.
+
+    ``scale`` is either the paper's single per-tensor scale (a scalar) or a
+    vector of per-group scales (e.g. the per-row scales of a ``per_channel``
+    quantization, or per-block scales along the measurement axis — any
+    grouping that partitions each column's entries uniformly). The
+    quantization perturbation Δ then satisfies |Δ_ij| ≤ s_g(i)/2^{b−1}
+    *groupwise*, so the Frobenius-norm step of Eqn. 48 prices each column at
+    the root-mean-square of the group scales instead of their max:
+
+        ‖Δ_Γ‖ ≤ ‖Δ_Γ‖_F ≤ √|Γ| · rms(s) · (√M / 2^{b−1})-normalized,
+
+    exactly the per-tensor expression with c_Φ → rms(s). Since the per-tensor
+    scale is by construction max(s) ≥ rms(s), group scaling always yields the
+    SAME OR SMALLER γ̂ inflation — and hence the same or fewer bits from
+    :func:`min_bits_lemma1` — quantifying why group-scaled streams buy
+    accuracy at high dynamic range (the ROADMAP's granularity-aware RIP item).
+    """
+    arr = jnp.asarray(scale, jnp.float32)
+    if arr.ndim == 0:
+        return float(arr)
+    if arr.size == 0:
+        raise ValueError("scale vector must be non-empty")
+    return float(jnp.sqrt(jnp.mean(arr * arr)))
+
+
+def min_bits_lemma1(gamma: float, alpha: float, support_size: int,
+                    target: float = 1.0 / 16.0, scale=1.0) -> int:
+    """Lemma 1: smallest b with  b ≥ log₂(2·c_Φ·√|Γ| / (ε·α)),  ε = target − γ.
+
+    ``scale`` is the quantizer scale: the paper's per-tensor c_Φ (scalar,
+    default 1 — entries confined to [-1, 1] a priori) or a per-group scale
+    vector, which enters through its RMS (see :func:`effective_scale`) and so
+    never *raises* the returned bit width relative to the per-tensor bound.
 
     Returns a large sentinel (64) when γ already exceeds the target (no bit
     width can help — the full-precision matrix itself violates the condition).
@@ -69,13 +102,18 @@ def min_bits_lemma1(gamma: float, alpha: float, support_size: int, target: float
     eps = target - float(gamma)
     if eps <= 0:
         return 64
-    b = math.log2(2.0 * math.sqrt(support_size) / (eps * float(alpha)))
+    c = effective_scale(scale)
+    b = math.log2(2.0 * c * math.sqrt(support_size) / (eps * float(alpha)))
     return max(2, math.ceil(b))
 
 
-def gamma_hat_bound(gamma: float, alpha: float, support_size: int, bits: int) -> float:
-    """Lemma 1's Eqn. 48:  γ̂_|Γ| ≤ γ_|Γ| + √|Γ| / (2^{b−1} · α)."""
-    return float(gamma) + math.sqrt(support_size) / (2 ** (bits - 1) * float(alpha))
+def gamma_hat_bound(gamma: float, alpha: float, support_size: int, bits: int,
+                    scale=1.0) -> float:
+    """Lemma 1's Eqn. 48:  γ̂_|Γ| ≤ γ_|Γ| + c_Φ·√|Γ| / (2^{b−1} · α), with
+    ``scale`` a per-tensor scalar or per-group vector (RMS-collapsed;
+    see :func:`effective_scale`)."""
+    c = effective_scale(scale)
+    return float(gamma) + c * math.sqrt(support_size) / (2 ** (bits - 1) * float(alpha))
 
 
 def eps_s(x: jax.Array, s: int, e_norm: float, beta_2s: float) -> jax.Array:

@@ -42,13 +42,9 @@ def top_s_mask(x: jax.Array, s: int) -> jax.Array:
     return jnp.zeros(x.shape, dtype=bool).at[idx].set(True)
 
 
-def find_threshold_bisect(mag: jax.Array, s: int, iters: int = 32) -> jax.Array:
-    """Binary search t such that count(mag > t) <= s, count(mag >= t-) tight.
-
-    Returns the threshold (scalar). After ``iters`` halvings of the initial
-    range [0, max(mag)], the bracket width is max(mag) / 2^iters — below f32
-    resolution for iters=32, so the result is exact up to magnitude ties.
-    """
+def _bisect_bracket(mag: jax.Array, s: int, iters: int) -> tuple[jax.Array, jax.Array]:
+    """Final bisection bracket (lo, hi): count(mag > hi) <= s, and every
+    magnitude tied at the threshold lies in (lo, hi]."""
     hi = jnp.max(mag)
     lo = jnp.zeros_like(hi)
 
@@ -61,17 +57,38 @@ def find_threshold_bisect(mag: jax.Array, s: int, iters: int = 32) -> jax.Array:
         hi = jnp.where(cnt > s, hi, mid)
         return lo, hi
 
-    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
-    return hi
+    return jax.lax.fori_loop(0, iters, body, (lo, hi))
+
+
+def find_threshold_bisect(mag: jax.Array, s: int, iters: int = 32) -> jax.Array:
+    """Binary search t such that count(mag > t) <= s, count(mag >= t-) tight.
+
+    Returns the threshold (scalar). After ``iters`` halvings of the initial
+    range [0, max(mag)], the bracket width is max(mag) / 2^iters — below f32
+    resolution for iters=32, so the result is exact up to magnitude ties.
+    """
+    return _bisect_bracket(mag, s, iters)[1]
 
 
 def hard_threshold_bisect(x: jax.Array, s: int, iters: int = 32) -> jax.Array:
-    """H_s via bisection threshold. Keeps entries with |x| > t.
+    """H_s via bisection threshold: entries with |x| > t, plus threshold ties
+    (the final-bracket magnitudes) in deterministic ascending-index order up
+    to support size s.
 
-    With distinct magnitudes this equals :func:`hard_threshold`; on exact ties at
-    the threshold it may keep fewer than s entries (all ties dropped), which is a
-    valid H_s relaxation (support size <= s) — same behaviour as the FPGA design.
+    With distinct magnitudes this equals :func:`hard_threshold`. On ties the
+    kept *magnitudes* still match :func:`hard_threshold` (which tie-breaks by
+    ``top_k``'s ordering instead) — crucially the support can no longer
+    collapse to empty, the degeneracy that made flat phantoms re-enter the
+    NIHT init path every iteration.
     """
+    # The tie-fill guard: a strict |x| > t cut drops EVERY entry when
+    # magnitudes tie at the threshold (flat/piecewise-constant phantoms),
+    # handing the solver an empty iterate that re-triggers its init branch.
+    from repro.kernels.hsthresh.ref import tie_fill_mask
+
     mag = jnp.abs(x)
-    t = find_threshold_bisect(mag, s, iters)
-    return jnp.where(mag > t, x, jnp.zeros_like(x))
+    lo, hi = _bisect_bracket(mag, s, iters)
+    strict = mag > hi
+    tied = (mag > lo) & ~strict
+    keep = strict | tie_fill_mask(strict, tied, s)
+    return jnp.where(keep, x, jnp.zeros_like(x))

@@ -7,7 +7,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.hsthresh.kernel import hist_pallas, mask_pallas
-from repro.kernels.hsthresh.ref import hist_ref, hsthresh_ref, mask_ref, select_threshold
+from repro.kernels.hsthresh.ref import (
+    fill_threshold_bin,
+    hist_ref,
+    hsthresh_ref,
+    mask_ref,
+    select_threshold,
+)
 
 
 def _round_up(v: int, mult: int) -> int:
@@ -24,7 +30,10 @@ def hsthresh(
     interpret: bool = False,
 ) -> jax.Array:
     """Streaming hard threshold on a real vector. Support size <= s guaranteed;
-    equals exact H_s whenever no two magnitudes share the threshold bin."""
+    equals exact H_s whenever no two magnitudes share the threshold bin.
+    Threshold-bin ties are kept (ascending index) up to support size s rather
+    than dropped — see :func:`repro.kernels.hsthresh.ref.fill_threshold_bin`
+    for why an all-dropped tie bin is solver-fatal."""
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu" or interpret
     if not use_pallas:
@@ -38,4 +47,5 @@ def hsthresh(
     # padded zeros land in bin 0, which never participates in the tail selection
     t = select_threshold(h[0], vmax[0, 0], s)
     y = mask_pallas(x2, t.reshape(1, 1), block_n=block_n, interpret=interpret)
-    return y[0, :n].astype(x.dtype)
+    out = fill_threshold_bin(x2[0, :n], y[0, :n], t, vmax[0, 0] / nbins, s)
+    return out.astype(x.dtype)

@@ -10,6 +10,14 @@ but in two streaming passes instead of a sequential bisection:
 
 With ``nbins`` large the within-bin ties are rare; the operator always returns
 support size <= s (a valid H_s relaxation, identical in kind to the FPGA one).
+
+Threshold-bin ties are FILLED rather than dropped (:func:`fill_threshold_bin`):
+a strict ``|x| > t`` cut returns the *empty* support when every magnitude lands
+in one bin (flat / piecewise-constant phantoms — their tied top values ARE the
+signal), which silently re-triggers the solver's x=0 init branch forever. The
+fill keeps the strict survivors plus same-bin entries in ascending-index order
+up to support size s, so the support degrades gracefully to exactly s under
+ties instead of collapsing.
 """
 from __future__ import annotations
 
@@ -39,10 +47,39 @@ def mask_ref(x: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(jnp.abs(x) > t, x, jnp.zeros_like(x))
 
 
+def tie_fill_mask(strict: jnp.ndarray, tied: jnp.ndarray, s: int) -> jnp.ndarray:
+    """Mask of the ``tied`` entries to ADD to the ``strict`` survivors: the
+    first (ascending index) ties up to a total support of s. The tie-fill
+    primitive shared by BOTH H_s relaxations — this histogram oracle and the
+    bisection variant in :mod:`repro.core.threshold` (which imports it from
+    here: this module has no repro deps, so it is the one home that avoids the
+    core↔kernels import cycle). Support never exceeds s by construction of
+    the cumsum cap."""
+    return tied & (jnp.cumsum(tied) <= s - jnp.sum(strict))
+
+
+def fill_threshold_bin(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    t: jnp.ndarray,
+    binw: jnp.ndarray,
+    s: int,
+) -> jnp.ndarray:
+    """Top up the strict-cut output ``y = where(|x| > t, x, 0)`` with
+    threshold-bin entries (``t - binw <= |x| <= t``, zeros excluded) in
+    ascending-index order until the support reaches s (see module docstring).
+    ``select_threshold`` guarantees count(|x| >= t - binw) > s whenever it had
+    a choice, so the result has exactly min(s, plausible) nonzeros."""
+    mag = jnp.abs(x)
+    strict = mag > t
+    tied = (mag >= t - binw) & ~strict & (mag > 0)
+    return jnp.where(tie_fill_mask(strict, tied, s), x, y)
+
+
 def hsthresh_ref(x: jnp.ndarray, s: int, nbins: int = 4096) -> jnp.ndarray:
-    """Full oracle: histogram-select-mask H_s on a vector."""
+    """Full oracle: histogram-select-mask-fill H_s on a vector."""
     mag = jnp.abs(x)
     vmax = jnp.maximum(jnp.max(mag), 1e-30)
     h = hist_ref(mag, vmax, nbins)
     t = select_threshold(h, vmax, s)
-    return mask_ref(x, t)
+    return fill_threshold_bin(x, mask_ref(x, t), t, vmax / nbins, s)

@@ -34,9 +34,16 @@ variable-density-subsampled k-space. Φ is the *matrix-free*
 ``SubsampledFourierOperator`` (implicit 2D FFT + mask) — no dense Φ ever
 exists, which is what makes the 256×256 config representable at all — so the
 backend knobs don't apply; ``--bits-y`` is the precision under study and the
-driver reports PSNR against the sparse phantom alongside relative error.
-With ``--batch B``, B randomized brain phantoms share one sampling mask and
-are recovered in a single ``qniht_batch`` call.
+driver reports PSNR in image space alongside relative error. With
+``--batch B``, B randomized brain phantoms share one sampling mask and are
+recovered in a single ``qniht_batch`` call.
+
+``--sparsity-basis`` picks the MRI recovery model: ``pixel`` (the s-sparse
+phantom of the exact-sparsity guarantees) or ``haar``/``db4`` — the **full,
+unsparsified** phantom recovered through the composed Φ = P_Ω F W†
+(``ComposedOperator`` of the Fourier factor with a wavelet synthesis; still
+matrix-free end to end). ``--config mri-wavelet`` (also ``-bench``/``-smoke``)
+preselects the haar basis with wavelet-sized s and per-band scaling.
 """
 from __future__ import annotations
 
@@ -48,7 +55,14 @@ import jax.numpy as jnp
 
 from repro.configs.gaussian_toy import CONFIG as GAUSS_CONFIG, SMOKE as GAUSS_SMOKE
 from repro.configs.lofar_cs302 import BENCH as LOFAR_BENCH, CONFIG as LOFAR_CONFIG, SMOKE as LOFAR_SMOKE
-from repro.configs.mri_brain import BENCH as MRI_BENCH, CONFIG as MRI_CONFIG, SMOKE as MRI_SMOKE
+from repro.configs.mri_brain import (
+    BENCH as MRI_BENCH,
+    CONFIG as MRI_CONFIG,
+    SMOKE as MRI_SMOKE,
+    WAVELET as MRI_WAVELET,
+    WAVELET_BENCH as MRI_WAVELET_BENCH,
+    WAVELET_SMOKE as MRI_WAVELET_SMOKE,
+)
 from repro.core import niht, psnr, qniht, qniht_batch, relative_error, source_recovery, support_recovery
 from repro.sensing import (
     Station,
@@ -149,19 +163,26 @@ def recover_gaussian(g, backend, bits_phi, bits_y, key, requantize="pair", batch
             "support_recovery": float(support_recovery(res.x, prob.x_true, g.s))}
 
 
-def recover_mri(cfg, bits_y, key, batch=0, granularity="per_tensor", n_bands=None):
-    """Matrix-free §5 workload: PSNR/relative error of the recovered sparse
-    phantom. ``bits_y=None`` → full-precision observations (the 32-bit
-    baseline); ``batch`` recovers B randomized brain phantoms sharing one
-    sampling mask in a single batched call. ``granularity="per_band"``
+def recover_mri(cfg, bits_y, key, batch=0, granularity="per_tensor", n_bands=None,
+                sparsity_basis=None):
+    """Matrix-free §5 workload: image-space PSNR/relative error of the
+    recovered phantom. ``bits_y=None`` → full-precision observations (the
+    32-bit baseline); ``batch`` recovers B randomized brain phantoms sharing
+    one sampling mask in a single batched call. ``granularity="per_band"``
     quantizes the observations with one scale per radial k-space band
-    (``n_bands`` of them) instead of the paper's single c_y."""
+    (``n_bands`` of them) instead of the paper's single c_y.
+    ``sparsity_basis`` (default: the config's) selects pixel sparsity or the
+    composed wavelet model Φ = P_Ω F W† over the full phantom."""
+    basis = sparsity_basis if sparsity_basis is not None else cfg.sparsity_basis
     prob = make_mri_problem(cfg.resolution, cfg.n_sparse, cfg.fraction, key,
                             density=cfg.density, center_fraction=cfg.center_fraction,
-                            snr_db=cfg.snr_db, phantom=cfg.phantom)
+                            snr_db=cfg.snr_db, phantom=cfg.phantom,
+                            sparsity_basis=basis,
+                            wavelet_levels=cfg.wavelet_levels)
     r = cfg.resolution
     n_bands = n_bands if n_bands is not None else cfg.n_bands
-    kw = dict(real_signal=True, nonneg=True)
+    # wavelet coefficients are signed; only the pixel basis is a nonneg image
+    kw = dict(real_signal=True, nonneg=basis == "pixel")
 
     def prep(y):
         """Quantize observations per granularity; per-band happens up front
@@ -175,37 +196,46 @@ def recover_mri(cfg, bits_y, key, batch=0, granularity="per_tensor", n_bands=Non
         return y
 
     if batch:
-        # per-row jitter breaks the phantom skull ring's exact-1.0 top-k ties
-        # so the B rows are genuinely distinct problems (see benchmarks/fig_mri)
-        def sparse_truth(b):
-            img = brain_phantom(r, jax.random.fold_in(key, b))
-            jitter = 1e-3 * jax.random.uniform(jax.random.fold_in(key, 100 + b),
-                                               img.shape)
-            return sparsify_image(img + jitter, cfg.n_sparse)
+        if basis == "pixel":
+            # per-row jitter breaks the phantom skull ring's exact-1.0 top-k
+            # ties so the B rows are genuinely distinct problems
+            def truth(b):
+                img = brain_phantom(r, jax.random.fold_in(key, b))
+                jitter = 1e-3 * jax.random.uniform(
+                    jax.random.fold_in(key, 100 + b), img.shape)
+                return sparsify_image(img + jitter, cfg.n_sparse)
+        else:
+            # full phantoms: rows differ by construction, no thresholding ties
+            def truth(b):
+                return brain_phantom(r, jax.random.fold_in(key, b)).ravel()
 
-        X_true = jnp.stack([sparse_truth(b) for b in range(batch)])
-        Y, _ = mri_observations(prob.op, X_true, cfg.snr_db,
-                                jax.random.fold_in(key, batch))
+        Img_true = jnp.stack([truth(b) for b in range(batch)])
+        Y, _ = mri_observations(getattr(prob.op, "kspace_op", prob.op), Img_true,
+                                cfg.snr_db, jax.random.fold_in(key, batch))
         Y = prep(Y)
         t0 = time.time()
         res = qniht_batch(prob.op, Y, cfg.n_sparse, cfg.n_iters, **kw)
         jax.block_until_ready(res.x)
         wall = time.time() - t0
-        ps = [float(psnr(res.x[b].reshape(r, r), X_true[b].reshape(r, r)))
+        Img_hat = prob.to_image(res.x)
+        ps = [float(psnr(Img_hat[b].reshape(r, r), Img_true[b].reshape(r, r)))
               for b in range(batch)]
-        rel = [float(relative_error(res.x[b], X_true[b])) for b in range(batch)]
-        return {"batch": batch, "m": prob.op.shape[0], "psnr_mean": sum(ps) / batch,
-                "psnr_min": min(ps), "rel_error_mean": sum(rel) / batch,
+        rel = [float(relative_error(Img_hat[b], Img_true[b])) for b in range(batch)]
+        return {"basis": basis, "batch": batch, "m": prob.op.shape[0],
+                "psnr_mean": sum(ps) / batch, "psnr_min": min(ps),
+                "rel_error_mean": sum(rel) / batch,
                 "rel_error_max": max(rel), "wall_s": wall}
     y = prep(prob.y)
     t0 = time.time()
     res = qniht(prob.op, y, cfg.n_sparse, cfg.n_iters, **kw)
     jax.block_until_ready(res.x)
     wall = time.time() - t0
+    img_hat = prob.to_image(res.x)
     out = {
+        "basis": basis,
         "m": prob.op.shape[0],
-        "psnr": float(psnr(res.x.reshape(r, r), prob.x_true.reshape(r, r))),
-        "rel_error": float(relative_error(res.x, prob.x_true)),
+        "psnr": float(psnr(img_hat.reshape(r, r), prob.image_true.reshape(r, r))),
+        "rel_error": float(relative_error(img_hat, prob.image_true)),
         "wall_s": wall,
         "phi_nbytes": prob.op.nbytes,
     }
@@ -220,7 +250,9 @@ def main(argv=None):
     ap.add_argument("--config", default="lofar-bench",
                     choices=["lofar", "lofar-bench", "lofar-smoke",
                              "gaussian", "gaussian-smoke",
-                             "mri", "mri-bench", "mri-smoke"])
+                             "mri", "mri-bench", "mri-smoke",
+                             "mri-wavelet", "mri-wavelet-bench",
+                             "mri-wavelet-smoke"])
     ap.add_argument("--backend", default="fake", choices=["dense", "fake", "packed"],
                     help="dense: f32 NIHT baseline; fake: quantized values, dense "
                          "compute (Algorithm 1); packed: stream packed codes via "
@@ -232,21 +264,34 @@ def main(argv=None):
     ap.add_argument("--requantize", default="pair", choices=["pair", "fixed"])
     ap.add_argument("--batch", type=int, default=0,
                     help="recover B observations of one Φ̂ at once (qniht_batch)")
-    ap.add_argument("--scale-granularity", default="per_tensor",
+    ap.add_argument("--scale-granularity", default=None,
                     choices=["per_tensor", "per_channel", "per_block", "per_band"],
                     help="quantizer scale layout: per_channel/per_block apply to "
                          "the packed Φ̂ stream (--backend packed), per_band to "
-                         "the MRI observation quantizer")
+                         "the MRI observation quantizer (default: the MRI "
+                         "config's scale_granularity, else per_tensor)")
     ap.add_argument("--group-size", type=int, default=None,
                     help="per_block group size along the contraction axis, or "
                          "the number of radial k-space bands for per_band "
                          "(default: the MRI config's n_bands)")
+    ap.add_argument("--sparsity-basis", default=None,
+                    choices=["pixel", "haar", "db4"],
+                    help="MRI recovery model: pixel sparsity (exact s-sparse "
+                         "phantom) or a wavelet basis — the full unsparsified "
+                         "phantom via the composed Φ = P_Ω F W† "
+                         "(default: the config's sparsity_basis)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     backend = "dense" if args.full_precision else args.backend
     key = jax.random.PRNGKey(args.seed)
-    gran = args.scale_granularity
+    # None = unset: non-MRI configs fall back to per_tensor, MRI configs to
+    # their own scale_granularity. An EXPLICIT --scale-granularity always wins
+    # (the wavelet configs default to per_band, and the per-tensor baseline
+    # must stay reachable against them).
+    gran = args.scale_granularity or "per_tensor"
+    if args.sparsity_basis and not args.config.startswith("mri"):
+        ap.error("--sparsity-basis selects the MRI recovery model; use an mri config")
     if args.config.startswith("lofar"):
         if gran == "per_band":
             ap.error("per_band is the MRI observation granularity; use an mri config")
@@ -261,12 +306,16 @@ def main(argv=None):
             ap.error("the MRI Φ is matrix-free (nothing packed to scale); "
                      "use --scale-granularity per_band for the observations")
         cs = {"mri": MRI_CONFIG, "mri-bench": MRI_BENCH,
-              "mri-smoke": MRI_SMOKE}[args.config]
+              "mri-smoke": MRI_SMOKE, "mri-wavelet": MRI_WAVELET,
+              "mri-wavelet-bench": MRI_WAVELET_BENCH,
+              "mri-wavelet-smoke": MRI_WAVELET_SMOKE}[args.config]
         bits_y = None if backend == "dense" else args.bits_y
-        gran = cs.scale_granularity if gran == "per_tensor" else gran
-        out = recover_mri(cs, bits_y, key, args.batch, gran, args.group_size)
+        gran = args.scale_granularity or cs.scale_granularity
+        out = recover_mri(cs, bits_y, key, args.batch, gran, args.group_size,
+                          sparsity_basis=args.sparsity_basis)
+        basis = args.sparsity_basis or cs.sparsity_basis
         label = ("32bit[matrix-free]" if bits_y is None
-                 else f"y@{bits_y}bit[{gran},matrix-free]")
+                 else f"y@{bits_y}bit[{gran},matrix-free]") + f"[{basis}]"
     else:
         if gran == "per_band":
             ap.error("per_band is the MRI observation granularity; use an mri config")

@@ -16,7 +16,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.hsthresh.ref import hist_ref, select_threshold
+from repro.kernels.hsthresh.ref import hsthresh_ref
 
 
 class IHTConfig(NamedTuple):
@@ -26,11 +26,11 @@ class IHTConfig(NamedTuple):
 
 
 def _project_matrix(w: jax.Array, keep: int, nbins: int = 4096) -> jax.Array:
-    flat = jnp.abs(w.astype(jnp.float32)).ravel()
-    vmax = jnp.maximum(jnp.max(flat), 1e-30)
-    h = hist_ref(flat, vmax, nbins)
-    t = select_threshold(h, vmax, keep)
-    return jnp.where(jnp.abs(w) > t, w, jnp.zeros_like(w))
+    # hsthresh_ref (not a bare strict |w| > t cut): its threshold-bin fill is
+    # what keeps a tied plateau — e.g. a constant-initialized matrix — from
+    # being zeroed ENTIRELY in one projection.
+    flat = hsthresh_ref(w.astype(jnp.float32).ravel(), keep, nbins)
+    return jnp.where(flat.reshape(w.shape) != 0, w, jnp.zeros_like(w))
 
 
 def project_params(params, cfg: IHTConfig):

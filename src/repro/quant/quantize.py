@@ -73,6 +73,10 @@ class QTensor:
         step = self.elementwise_scale() / k
         vals = self.codes.astype(jnp.float32) * step
         if self.is_complex:
+            if dtype is not None:
+                # build the parts in the matching real dtype so the requested
+                # complex width survives even when the stored scale is f32
+                vals = vals.astype(jnp.finfo(dtype).dtype)
             out = jax.lax.complex(vals[0], vals[1])
             return out.astype(dtype) if dtype is not None else out
         return vals.astype(dtype) if dtype is not None else vals
@@ -213,7 +217,7 @@ def fake_quantize(
     channel_axis: Optional[int] = None,
     granularity: Union[Granularity, str, None] = None,
 ) -> jax.Array:
-    """Quantize-dequantize round trip (the reference 'Q(v)' of the paper's math)."""
-    return quantize(v, bits, key, scale, channel_axis, granularity).dequantize(
-        v.dtype if not jnp.iscomplexobj(v) else None
-    )
+    """Quantize-dequantize round trip (the reference 'Q(v)' of the paper's math).
+    Dtype-preserving: f32/f64/c64/c128 in → same dtype out (complex included —
+    the round trip must not silently narrow c128 measurements to c64)."""
+    return quantize(v, bits, key, scale, channel_axis, granularity).dequantize(v.dtype)

@@ -12,6 +12,7 @@ from repro.sensing.mri import (
     quantize_observations,
     shepp_logan,
     sparsify_image,
+    wavelet_coeffs,
 )
 from repro.sensing.sky import ascii_render, make_sky, to_image
 from repro.sensing.telescope import (
@@ -37,6 +38,7 @@ __all__ = [
     "quantize_observations",
     "shepp_logan",
     "sparsify_image",
+    "wavelet_coeffs",
     "ascii_render",
     "make_sky",
     "to_image",

@@ -1,0 +1,20 @@
+"""Sparsifying transforms: the W of transform-domain compressed sensing."""
+from repro.transforms.wavelet import (
+    WAVELETS,
+    dwt2,
+    flatten_coeffs,
+    idwt2,
+    max_levels,
+    unflatten_coeffs,
+    wavelet_filters,
+)
+
+__all__ = [
+    "WAVELETS",
+    "dwt2",
+    "flatten_coeffs",
+    "idwt2",
+    "max_levels",
+    "unflatten_coeffs",
+    "wavelet_filters",
+]

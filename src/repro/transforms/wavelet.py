@@ -1,0 +1,201 @@
+"""Periodized orthonormal 2D discrete wavelet transform, in pure JAX.
+
+The MRI workload (paper §5) recovers images that are sparse in a *transform*
+domain: anatomical images are piecewise smooth, so their wavelet coefficients
+decay fast even though the pixels do not. This module provides the W of the
+CS-MRI model Φ = P_Ω F W† — an orthonormal multi-level DWT whose synthesis
+(W†) maps the sparse coefficient vector the solver iterates on back to image
+space.
+
+Design constraints, and how they are met:
+
+* **Orthonormal** — the analysis/synthesis pair must be an exact unitary so
+  the sensing operator's adjoint stays exact (`rmv` of the synthesis operator
+  is simply the forward transform; see
+  :class:`repro.core.operators.WaveletSynthesisOperator`). We use conjugate
+  quadrature mirror filters with *periodized* (circular) boundary handling,
+  which keeps every level a square orthogonal matrix — no coefficient
+  redundancy, no boundary distortion of the adjoint identity.
+* **Pure JAX, fixed shapes** — the multi-level pyramid is driven by one
+  ``lax.scan`` over levels. Each level transforms only the top-left ``m×m``
+  approximation block (``m = r >> level``), but all arrays stay ``(r, r)``:
+  the active block size enters only through *index arithmetic* (periodized
+  gathers ``(2k+t) mod m`` and pass-through masks), never through shapes, so
+  the whole transform is a single compiled scan with a static trip count.
+* **Batched** — every function maps over arbitrary leading axes; a ``(B, r,
+  r)`` stack is one vectorized transform (the shape contract of the operator
+  protocol's ``mv``/``rmv``).
+
+Filters: ``"haar"`` (2 taps) and ``"db4"`` (the 4-tap Daubechies filter —
+"D4" in the classical numbering; pywt calls it ``db2``). High-pass taps are
+the standard QMF mirror ``hi[t] = (−1)^t · lo[L−1−t]``.
+
+Coefficient layout is the standard pyramid: after ``levels`` steps the
+``(r, r)`` array holds the coarsest approximation in the top-left
+``(r >> levels)``-square, with each level's (LH, HL, HH) detail blocks
+filling out the quadrants around it. :func:`flatten_coeffs` /
+:func:`unflatten_coeffs` move between that array and the ``(r²,)`` vector the
+solver's H_s thresholding consumes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_SQRT3 = math.sqrt(3.0)
+_D4_NORM = 4.0 * math.sqrt(2.0)
+
+# Orthonormal low-pass analysis taps (sum of squares = 1).
+WAVELETS = {
+    "haar": (1.0 / math.sqrt(2.0), 1.0 / math.sqrt(2.0)),
+    "db4": (
+        (1.0 + _SQRT3) / _D4_NORM,
+        (3.0 + _SQRT3) / _D4_NORM,
+        (3.0 - _SQRT3) / _D4_NORM,
+        (1.0 - _SQRT3) / _D4_NORM,
+    ),
+}
+
+
+def wavelet_filters(wavelet: str) -> tuple[tuple[float, ...], tuple[float, ...]]:
+    """(lo, hi) analysis taps; ``hi`` is the QMF mirror of ``lo``."""
+    if wavelet not in WAVELETS:
+        raise ValueError(
+            f"unknown wavelet {wavelet!r} (available: {sorted(WAVELETS)})")
+    lo = WAVELETS[wavelet]
+    n = len(lo)
+    hi = tuple((-1.0) ** t * lo[n - 1 - t] for t in range(n))
+    return lo, hi
+
+
+def max_levels(resolution: int, wavelet: str = "haar") -> int:
+    """Deepest valid pyramid: every transformed block must be even-sized and
+    at least one filter length wide (periodization below that is not
+    orthogonal)."""
+    flen = len(WAVELETS[wavelet]) if wavelet in WAVELETS else len(
+        wavelet_filters(wavelet)[0])
+    lv = 0
+    m = resolution
+    while m % 2 == 0 and m >= flen and m > 1:
+        lv += 1
+        m //= 2
+    return lv
+
+
+def _resolve_levels(resolution: int, wavelet: str, levels: Optional[int]) -> int:
+    cap = max_levels(resolution, wavelet)
+    if cap < 1:
+        raise ValueError(
+            f"resolution {resolution} admits no {wavelet!r} level "
+            "(needs an even size >= the filter length)")
+    if levels is None:
+        return cap
+    if not 1 <= levels <= cap:
+        raise ValueError(
+            f"levels must be in [1, {cap}] for resolution {resolution} "
+            f"and wavelet {wavelet!r}, got {levels}")
+    return levels
+
+
+def _analysis_axis(x: jax.Array, m: jax.Array, lo, hi) -> jax.Array:
+    """One analysis step along the last axis of the active ``m``-prefix.
+
+    ``x`` is ``(..., r)``; entries ``[0, m)`` are split into ``m/2``
+    approximation then ``m/2`` detail coefficients (periodized decimating
+    convolution ``a[k] = Σ_t lo[t]·x[(2k+t) mod m]``); entries ``[m, r)``
+    pass through. ``m`` may be a traced scalar — it only feeds index math.
+    """
+    r = x.shape[-1]
+    half = r // 2
+    k = jnp.arange(half)
+    m2 = m // 2
+    a = jnp.zeros(x.shape[:-1] + (half,), x.dtype)
+    d = jnp.zeros_like(a)
+    for t, (lt, ht) in enumerate(zip(lo, hi)):
+        g = jnp.take(x, (2 * k + t) % m, axis=-1)
+        a = a + lt * g
+        d = d + ht * g
+    c = jnp.arange(r)
+    approx = jnp.take(a, jnp.clip(c, 0, half - 1), axis=-1)
+    detail = jnp.take(d, jnp.clip(c - m2, 0, half - 1), axis=-1)
+    return jnp.where(c < m2, approx, jnp.where(c < m, detail, x))
+
+
+def _synthesis_axis(x: jax.Array, m: jax.Array, lo, hi) -> jax.Array:
+    """Exact transpose of :func:`_analysis_axis` (orthonormal taps ⇒ the
+    inverse): scatter-add each (approx, detail) pair back through the
+    periodized filter. Contributions from the inactive tail are masked to
+    zero, so their wrapped indices are harmless."""
+    r = x.shape[-1]
+    half = r // 2
+    k = jnp.arange(half)
+    m2 = m // 2
+    valid = (k < m2).astype(x.dtype)
+    a = jnp.take(x, jnp.clip(k, 0, r - 1), axis=-1) * valid
+    d = jnp.take(x, jnp.clip(k + m2, 0, r - 1), axis=-1) * valid
+    rec = jnp.zeros_like(x)
+    for t, (lt, ht) in enumerate(zip(lo, hi)):
+        rec = rec.at[..., (2 * k + t) % m].add(lt * a + ht * d)
+    c = jnp.arange(r)
+    return jnp.where(c < m, rec, x)
+
+
+def _both_axes(x: jax.Array, m: jax.Array, lo, hi, step_axis) -> jax.Array:
+    """Apply a 1D step separably over the last two axes of the active
+    ``m×m`` block (rows outside it pass through unchanged)."""
+    rows = jnp.arange(x.shape[-2])[:, None]
+    y = jnp.where(rows < m, step_axis(x, m, lo, hi), x)
+    yt = y.swapaxes(-1, -2)
+    cols = jnp.arange(yt.shape[-2])[:, None]
+    z = jnp.where(cols < m, step_axis(yt, m, lo, hi), yt)
+    return z.swapaxes(-1, -2)
+
+
+def dwt2(img: jax.Array, wavelet: str = "haar",
+         levels: Optional[int] = None) -> jax.Array:
+    """Multi-level periodized 2D DWT: ``(..., r, r)`` image → same-shape
+    pyramid coefficient array. Orthonormal: ``‖dwt2(x)‖₂ = ‖x‖₂``."""
+    lo, hi = wavelet_filters(wavelet)
+    r = img.shape[-1]
+    if img.shape[-2] != r:
+        raise ValueError(f"dwt2 expects square images, got {img.shape[-2:]}")
+    lv = _resolve_levels(r, wavelet, levels)
+    sizes = jnp.asarray([r >> l for l in range(lv)], jnp.int32)
+
+    def step(x, m):
+        return _both_axes(x, m, lo, hi, _analysis_axis), None
+
+    out, _ = jax.lax.scan(step, img, sizes)
+    return out
+
+
+def idwt2(coeffs: jax.Array, wavelet: str = "haar",
+          levels: Optional[int] = None) -> jax.Array:
+    """Inverse of :func:`dwt2` (synthesis W†): coefficient pyramid → image.
+    Being the transpose of an orthonormal map, it is also the exact adjoint."""
+    lo, hi = wavelet_filters(wavelet)
+    r = coeffs.shape[-1]
+    if coeffs.shape[-2] != r:
+        raise ValueError(f"idwt2 expects square arrays, got {coeffs.shape[-2:]}")
+    lv = _resolve_levels(r, wavelet, levels)
+    sizes = jnp.asarray([r >> l for l in reversed(range(lv))], jnp.int32)
+
+    def step(x, m):
+        return _both_axes(x, m, lo, hi, _synthesis_axis), None
+
+    out, _ = jax.lax.scan(step, coeffs, sizes)
+    return out
+
+
+def flatten_coeffs(coeffs: jax.Array) -> jax.Array:
+    """Pyramid array ``(..., r, r)`` → coefficient vector ``(..., r²)``."""
+    r = coeffs.shape[-1]
+    return coeffs.reshape(*coeffs.shape[:-2], r * r)
+
+
+def unflatten_coeffs(vec: jax.Array, resolution: int) -> jax.Array:
+    """Coefficient vector ``(..., r²)`` → pyramid array ``(..., r, r)``."""
+    return vec.reshape(*vec.shape[:-1], resolution, resolution)

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import clean, cosamp, fista_l1, iht, relative_error, spectral_norm, support_recovery
 from repro.sensing import (
@@ -16,11 +17,13 @@ from repro.sensing import (
 
 
 class TestIHT:
+    @pytest.mark.slow
     def test_noiseless_recovery(self):
         prob = make_gaussian_problem(128, 256, 8, snr_db=None, key=jax.random.PRNGKey(0))
         x, resid = iht(prob.phi, prob.y, prob.s, n_iters=150)
         assert float(relative_error(x, prob.x_true)) < 1e-3
 
+    @pytest.mark.slow
     def test_residual_finite_and_shrinking(self):
         prob = make_gaussian_problem(64, 128, 4, snr_db=20.0, key=jax.random.PRNGKey(1))
         x, resid = iht(prob.phi, prob.y, prob.s, n_iters=100)
@@ -29,6 +32,7 @@ class TestIHT:
 
 
 class TestCoSaMP:
+    @pytest.mark.slow
     def test_noiseless_recovery(self):
         prob = make_gaussian_problem(128, 256, 8, snr_db=None, key=jax.random.PRNGKey(2))
         x, _ = cosamp(prob.phi, prob.y, prob.s, n_iters=15)
@@ -54,6 +58,7 @@ class TestFISTA:
 
 
 class TestCLEAN:
+    @pytest.mark.slow
     def test_clean_reduces_residual_and_finds_sources(self):
         st = Station(n_antennas=20)
         r = 32

@@ -162,6 +162,7 @@ class TestLemma4PerBlockBound:
                                    rtol=0.02)
 
 
+@pytest.mark.slow
 class TestGroupScaledQmm:
     @pytest.mark.parametrize("bits", BITS)
     @pytest.mark.parametrize("group", [8, 32])
@@ -241,6 +242,7 @@ class TestPackOperatorSharedConflict:
 
 
 class TestQnihtGranularity:
+    @pytest.mark.slow
     def test_per_tensor_bit_identical_to_default(self):
         key = jax.random.PRNGKey(10)
         prob = make_gaussian_problem(64, 128, 6, snr_db=25.0, key=key)
@@ -251,6 +253,7 @@ class TestQnihtGranularity:
                      scale_granularity="per_tensor", **kw)
         assert float(jnp.max(jnp.abs(r_def.x - r_pt.x))) == 0.0
 
+    @pytest.mark.slow
     def test_group_scaled_runs_and_recovers(self):
         key = jax.random.PRNGKey(11)
         prob = make_gaussian_problem(64, 128, 6, snr_db=25.0, key=key)

@@ -47,18 +47,20 @@ class TestHsthreshSemantics:
     @given(seed=st.integers(0, 50))
     @settings(max_examples=12, deadline=None)
     def test_matches_exact_topk_generic(self, seed):
-        """Gaussian magnitudes rarely collide within a bin: expect exact H_s."""
+        """Gaussian magnitudes rarely collide within a bin: expect exact H_s;
+        on a bin collision the tie fill still returns s entries whose
+        magnitudes match the exact top-s up to one bin width."""
         x = jax.random.normal(jax.random.PRNGKey(seed), (2000,))
         s = 64
         y_kernel = hsthresh(x, s, nbins=4096, use_pallas=True, interpret=True)
         y_exact = hard_threshold(x, s)
         kept = int(jnp.sum(jnp.abs(y_kernel) > 0))
-        if kept == s:
-            np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_exact), atol=0)
-        else:
-            # bin ties: kernel support must be a subset of the exact support
-            sub = (jnp.abs(y_kernel) > 0) & ~(jnp.abs(y_exact) > 0)
-            assert int(sub.sum()) == 0
+        assert kept == s
+        if not np.array_equal(np.asarray(y_kernel), np.asarray(y_exact)):
+            binw = float(jnp.max(jnp.abs(x))) / 4096
+            mk = np.sort(np.abs(np.asarray(y_kernel)[np.asarray(y_kernel) != 0]))
+            me = np.sort(np.abs(np.asarray(y_exact)[np.asarray(y_exact) != 0]))
+            np.testing.assert_allclose(mk, me, atol=binw)
 
     def test_preserves_values(self):
         x = jax.random.normal(jax.random.PRNGKey(1), (512,))

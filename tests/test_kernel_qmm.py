@@ -38,6 +38,7 @@ class TestQmmVsOracle:
 
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
     @pytest.mark.parametrize("bits", BITS)
+    @pytest.mark.slow
     def test_dtype_sweep(self, dtype, bits):
         key = jax.random.PRNGKey(0)
         x = jax.random.normal(key, (16, 256)).astype(dtype)
@@ -48,6 +49,7 @@ class TestQmmVsOracle:
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-2, atol=1e-2)
 
     @pytest.mark.parametrize("bits", BITS)
+    @pytest.mark.slow
     def test_exact_block_multiple_shapes(self, bits):
         key = jax.random.PRNGKey(1)
         x = jax.random.normal(key, (128, 512), jnp.float32)
@@ -60,6 +62,7 @@ class TestQmmVsOracle:
 
 class TestQmmSemantics:
     @pytest.mark.parametrize("bits", BITS)
+    @pytest.mark.slow
     def test_matches_dequantized_matmul(self, bits):
         """qmm == x @ Q(w)^T where Q is the framework quantizer (per-channel)."""
         key = jax.random.PRNGKey(2)
@@ -72,6 +75,7 @@ class TestQmmSemantics:
         ref = x @ w_deq.T
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
 
+    @pytest.mark.slow
     def test_8bit_quantization_error_small(self):
         key = jax.random.PRNGKey(3)
         x = jax.random.normal(key, (8, 128), jnp.float32)
@@ -91,6 +95,7 @@ class TestQmmSemantics:
 
 class TestPackedOperator:
     @pytest.mark.parametrize("bits", BITS)
+    @pytest.mark.slow
     def test_complex_matvec_adjoint_consistency(self, bits):
         """<Φ̂x, r> == <x, Φ̂†r> exactly when fwd/adj share one deterministic
         quantization. (With stochastic keys the two orientations are
@@ -111,6 +116,7 @@ class TestPackedOperator:
         denom = max(float(jnp.abs(lhs)), 1e-6)
         assert float(jnp.abs(lhs - rhs)) / denom < 1e-4
 
+    @pytest.mark.slow
     def test_interpret_matches_ref_path(self):
         key = jax.random.PRNGKey(6)
         phi = (

@@ -3,6 +3,9 @@ one train-style loss/grad step + serve consistency, on CPU.
 
 (The FULL assigned configs are exercised only via the dry-run —
 ShapeDtypeStruct lowering, no allocation.)
+
+The whole module is @slow: ~3–4 min of per-architecture compiles, peripheral
+to the CS solver core — scripts/ci.sh fast skips it, full still runs it.
 """
 import dataclasses
 
@@ -10,6 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.models import (

@@ -46,6 +46,7 @@ class TestNIHT:
         frac = np.mean(np.diff(r) <= 1e-4 * r[0])
         assert frac > 0.9
 
+    @pytest.mark.slow
     def test_scale_invariance(self):
         """NIHT is scale-invariant in Phi (Remark 1): scaling Phi & y together
         changes nothing; scaling only Phi rescales x by 1/scale."""
@@ -68,6 +69,7 @@ class TestNIHT:
 
 
 class TestQNIHT:
+    @pytest.mark.slow
     def test_8bit_matches_full_precision(self):
         prob = make_gaussian_problem(128, 256, 8, snr_db=25.0, key=jax.random.PRNGKey(5))
         r32 = niht(prob.phi, prob.y, prob.s, n_iters=40)
@@ -82,6 +84,7 @@ class TestQNIHT:
         with pytest.raises(ValueError):
             qniht(prob.phi, prob.y, prob.s, bits_phi=4)
 
+    @pytest.mark.slow
     def test_pair_vs_fixed_modes_run(self):
         prob = make_gaussian_problem(64, 128, 4, snr_db=20.0, key=jax.random.PRNGKey(8))
         for mode in ("pair", "fixed"):
@@ -89,6 +92,7 @@ class TestQNIHT:
                         key=jax.random.PRNGKey(9), requantize=mode)
             assert np.isfinite(np.asarray(res.trace.resid_true)).all()
 
+    @pytest.mark.slow
     def test_theorem3_bound_holds(self):
         """E||x^ - x^s|| <= 2^-n ||x^s|| + 10 eps_s + 5 eps_q  (Theorem 3).
         Statistical check with sampled RICs on a well-conditioned instance."""
@@ -107,6 +111,7 @@ class TestQNIHT:
         bound = theorem3_bound(n_iters, float(jnp.linalg.norm(prob.x_true)), es, eq)
         assert err <= bound
 
+    @pytest.mark.slow
     def test_quantized_y_only(self):
         prob = make_gaussian_problem(96, 192, 6, snr_db=20.0, key=jax.random.PRNGKey(11))
         res = qniht(prob.phi, prob.y, prob.s, n_iters=30, bits_y=8, key=jax.random.PRNGKey(12))

@@ -57,6 +57,7 @@ class TestOperatorProtocol:
         assert float(jnp.abs(lhs - rhs)) / float(jnp.abs(lhs)) < 1e-5
 
     @pytest.mark.parametrize("bits", BITS)
+    @pytest.mark.slow
     def test_packed_adjoint_identity_shared_codes(self, bits):
         """Shared codes make ⟨Φ̂x, r⟩ = ⟨x, Φ̂†r⟩ exact (one quantization backs
         both orientations), even with a stochastic key."""
@@ -111,6 +112,7 @@ class TestOperatorProtocol:
         assert not np.array_equal(np.asarray(op1a.mat), np.asarray(op2a.mat))
         assert not np.array_equal(np.asarray(op1a.mat), np.asarray(op1b.mat))
 
+    @pytest.mark.slow
     def test_niht_iteration_operator_api(self):
         prob = make_gaussian_problem(32, 64, 3, snr_db=None, key=jax.random.PRNGKey(7))
         op = DenseOperator(prob.phi)
@@ -122,6 +124,7 @@ class TestOperatorProtocol:
         assert float(mu) > 0
 
 
+@pytest.mark.slow
 class TestPackedBackendParity:
     @pytest.mark.parametrize("bits", BITS)
     def test_matches_dense_fixed(self, bits):
@@ -149,6 +152,7 @@ class TestPackedBackendParity:
         with pytest.raises(ValueError):
             qniht(prob.phi, prob.y, prob.s, 5, backend="packed")
 
+    @pytest.mark.slow
     def test_complex_packed_matches_dense_fixed(self):
         key = jax.random.PRNGKey(13)
         m, n = 48, 96
@@ -166,6 +170,7 @@ class TestPackedBackendParity:
 
 
 class TestBatchedRecovery:
+    @pytest.mark.slow
     def test_batch_matches_looped_singles(self):
         key = jax.random.PRNGKey(20)
         prob = make_gaussian_problem(64, 128, 6, snr_db=25.0, key=key)
@@ -188,6 +193,7 @@ class TestBatchedRecovery:
             # every row actually recovers its own signal
             assert float(relative_error(res_b.x[b], X_true[b])) < 0.15
 
+    @pytest.mark.slow
     def test_batch_full_precision_and_support(self):
         key = jax.random.PRNGKey(21)
         prob = make_gaussian_problem(48, 96, 4, snr_db=None, key=key)
@@ -205,6 +211,7 @@ class TestBatchedRecovery:
             qniht_batch(prob.phi, prob.y, 3, 5)
 
 
+@pytest.mark.slow
 class TestHsthreshInLoop:
     def test_support_size_parity_with_topk(self):
         """The streaming H_s keeps the loop's support invariant: |supp| ≤ s,
@@ -247,3 +254,99 @@ class TestTraceToggle:
         # the iterates themselves are unaffected
         ref = qniht(prob.phi, prob.y, 3, 10)
         np.testing.assert_allclose(np.asarray(res.x), np.asarray(ref.x), rtol=1e-6)
+
+
+class TestComposedOperator:
+    """The operator algebra: B∘A with exact adjoint A†∘B† (ISSUE-4 tentpole)."""
+
+    def _dense_pair(self, key, m=12, k=20, n=28):
+        from repro.core import ComposedOperator, DenseOperator
+
+        b = DenseOperator(jax.random.normal(key, (m, k), jnp.float32))
+        a = DenseOperator(jax.random.normal(jax.random.fold_in(key, 1), (k, n),
+                                            jnp.float32))
+        return ComposedOperator(b, a), b, a
+
+    def test_mv_is_product(self):
+        key = jax.random.PRNGKey(50)
+        comp, b, a = self._dense_pair(key)
+        x = jax.random.normal(jax.random.fold_in(key, 2), (28,), jnp.float32)
+        np.testing.assert_allclose(np.asarray(comp.mv(x)),
+                                   np.asarray(b.mat @ (a.mat @ x)),
+                                   rtol=1e-5, atol=1e-5)
+        r = jax.random.normal(jax.random.fold_in(key, 3), (12,), jnp.float32)
+        np.testing.assert_allclose(np.asarray(comp.rmv(r)),
+                                   np.asarray(a.mat.T @ (b.mat.T @ r)),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_exact_adjoint_property(self):
+        """Acceptance: ⟨A x, y⟩ == ⟨x, A† y⟩ to f32 tolerance, across random
+        draws and for the real CS-MRI composition P_Ω F W†."""
+        from repro.core import ComposedOperator, SubsampledFourierOperator, WaveletSynthesisOperator
+        from repro.sensing import cartesian_mask
+
+        key = jax.random.PRNGKey(51)
+        comp, _, _ = self._dense_pair(key)
+        for trial in range(5):
+            kx, kr = jax.random.split(jax.random.fold_in(key, trial))
+            x = jax.random.normal(kx, (comp.shape[1],), jnp.float32)
+            r = jax.random.normal(kr, (comp.shape[0],), jnp.float32)
+            lhs = float(jnp.vdot(comp.mv(x), r))
+            rhs = float(jnp.vdot(x, comp.rmv(r)))
+            assert abs(lhs - rhs) <= 1e-4 * max(abs(lhs), 1.0)
+
+        mask = cartesian_mask(16, 0.4, jax.random.PRNGKey(52))
+        mri = ComposedOperator(SubsampledFourierOperator.from_mask(mask),
+                               WaveletSynthesisOperator(16, "db4"))
+        kx, kr = jax.random.split(jax.random.PRNGKey(53))
+        x = jax.random.normal(kx, (mri.shape[1],), jnp.float32)
+        r = (jax.random.normal(kr, (mri.shape[0],))
+             + 1j * jax.random.normal(jax.random.fold_in(kr, 1), (mri.shape[0],))
+             ).astype(jnp.complex64)
+        lhs = jnp.vdot(mri.mv(x), r)
+        rhs = jnp.vdot(x.astype(jnp.complex64), mri.rmv(r))
+        assert float(jnp.abs(lhs - rhs)) <= 1e-4 * float(jnp.abs(lhs))
+
+    def test_shape_dtype_nbytes(self):
+        comp, b, a = self._dense_pair(jax.random.PRNGKey(54))
+        assert comp.shape == (12, 28)
+        assert comp.dtype == jnp.float32
+        assert comp.nbytes == b.nbytes + a.nbytes
+
+    def test_shape_mismatch_rejected(self):
+        from repro.core import ComposedOperator, DenseOperator
+
+        b = DenseOperator(jnp.ones((4, 6)))
+        a = DenseOperator(jnp.ones((5, 8)))
+        with pytest.raises(ValueError, match="cannot compose"):
+            ComposedOperator(b, a)
+
+    def test_kspace_op_unwrapping(self):
+        from repro.core import ComposedOperator, SubsampledFourierOperator, WaveletSynthesisOperator
+        from repro.sensing import cartesian_mask
+
+        mask = cartesian_mask(16, 0.5, jax.random.PRNGKey(55))
+        fourier = SubsampledFourierOperator.from_mask(mask)
+        assert fourier.kspace_op is fourier
+        comp = ComposedOperator(fourier, WaveletSynthesisOperator(16, "haar"))
+        assert comp.kspace_op is fourier
+        # nested composition unwraps too
+        from repro.core import DenseOperator
+
+        nested = ComposedOperator(comp, DenseOperator(jnp.eye(256, dtype=jnp.float32)))
+        assert nested.kspace_op is fourier
+
+    def test_pytree_crosses_jit(self):
+        comp, _, _ = self._dense_pair(jax.random.PRNGKey(56))
+        x = jax.random.normal(jax.random.PRNGKey(57), (28,), jnp.float32)
+        out = jax.jit(lambda o, v: o.mv(v))(comp, x)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(comp.mv(x)),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_batched_mv_matches_singles(self):
+        comp, _, _ = self._dense_pair(jax.random.PRNGKey(58))
+        X = jax.random.normal(jax.random.PRNGKey(59), (3, 28), jnp.float32)
+        B = comp.mv(X)
+        for i in range(3):
+            np.testing.assert_allclose(np.asarray(B[i]), np.asarray(comp.mv(X[i])),
+                                       rtol=1e-5, atol=1e-5)

@@ -124,3 +124,44 @@ class TestPacking:
     @pytest.mark.parametrize("bits,ratio", [(2, 4), (4, 2), (8, 1)])
     def test_compression_ratio(self, bits, ratio):
         assert packed_len(128, bits) == 128 // ratio
+
+
+class TestDtypeRoundTrip:
+    """ISSUE-4 regression: fake_quantize must preserve the input dtype —
+    complex128 measurements were silently narrowed to complex64 (dequantize
+    built lax.complex from f32 parts and fake_quantize requested no dtype
+    for complex inputs)."""
+
+    @pytest.mark.parametrize("dt", ["float32", "float64", "complex64", "complex128"])
+    def test_fake_quantize_preserves_dtype(self, dt):
+        from jax.experimental import enable_x64
+
+        with enable_x64():
+            dtype = jnp.dtype(dt)
+            v = jnp.asarray([0.5, -0.25, 1.0, 0.0], dtype)
+            if jnp.issubdtype(dtype, jnp.complexfloating):
+                v = v * (1.0 + 0.5j)
+            out = fake_quantize(v, 8, jax.random.PRNGKey(0))
+            assert out.dtype == dtype
+            # values still within one quantization step
+            step = float(jnp.max(jnp.abs(v))) / BY_BITS[8].half_steps
+            assert float(jnp.max(jnp.abs(out - v))) <= step
+
+    def test_complex128_explicit_f32_scale(self):
+        """The narrowing path: an f32 scale must not drag the output to c64."""
+        from jax.experimental import enable_x64
+
+        with enable_x64():
+            v = jnp.asarray([0.5 + 0.5j, -0.25 - 1.0j], jnp.complex128)
+            q = quantize(v, 8, jax.random.PRNGKey(1), scale=jnp.float32(1.0))
+            assert q.dequantize(jnp.complex128).dtype == jnp.complex128
+            out = fake_quantize(v, 8, jax.random.PRNGKey(1),
+                                scale=jnp.float32(1.0))
+            assert out.dtype == jnp.complex128
+
+    def test_default_x64_disabled_unchanged(self):
+        v = (jax.random.normal(jax.random.PRNGKey(2), (16,))
+             + 1j * jax.random.normal(jax.random.PRNGKey(3), (16,))
+             ).astype(jnp.complex64)
+        out = fake_quantize(v, 4, jax.random.PRNGKey(4))
+        assert out.dtype == jnp.complex64

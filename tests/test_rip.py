@@ -90,3 +90,72 @@ class TestErrorTerms:
         c1, c2 = corollary1_coeffs(30, 60.0, 50.0)
         assert c1 == pytest.approx(math.sqrt(30) / 60.0)
         assert c2 == pytest.approx(30 / 50.0)
+
+
+class TestGranularityAwareRIP:
+    """ISSUE-4: Lemma 1 bounds accepting per-group scale vectors (the
+    granularity-aware RIP item). The per-group vector enters via its RMS,
+    which never exceeds the per-tensor max — so group scaling can only
+    tighten the bit bound."""
+
+    def test_effective_scale(self):
+        from repro.core import effective_scale
+
+        assert effective_scale(0.5) == pytest.approx(0.5)
+        assert effective_scale(jnp.asarray([1.0, 1.0, 1.0])) == pytest.approx(1.0)
+        assert effective_scale(jnp.asarray([3.0, 4.0])) == pytest.approx(
+            math.sqrt(12.5), rel=1e-6)
+        with pytest.raises(ValueError):
+            effective_scale(jnp.asarray([]))
+
+    def test_uniform_vector_matches_scalar(self):
+        vec = jnp.full((32,), 0.7)
+        assert gamma_hat_bound(0.02, 1.0, 8, 8, scale=vec) == pytest.approx(
+            gamma_hat_bound(0.02, 1.0, 8, 8, scale=0.7), rel=1e-6)
+        assert min_bits_lemma1(0.02, 1.0, 8, scale=vec) == \
+            min_bits_lemma1(0.02, 1.0, 8, scale=0.7)
+
+    def test_group_scales_never_raise_the_bound(self):
+        key = jax.random.PRNGKey(7)
+        scales = 2.0 ** jax.random.uniform(key, (64,), minval=-4.0, maxval=0.0)
+        c_tensor = float(jnp.max(scales))
+        assert gamma_hat_bound(0.01, 1.0, 16, 4, scale=scales) <= \
+            gamma_hat_bound(0.01, 1.0, 16, 4, scale=c_tensor)
+        assert min_bits_lemma1(0.01, 1.0, 16, scale=scales) <= \
+            min_bits_lemma1(0.01, 1.0, 16, scale=c_tensor)
+
+    def test_high_dynamic_range_saves_bits(self):
+        """The ROADMAP claim made concrete: one hot row among many small ones
+        (k-space-like dynamic range) needs strictly fewer bits under group
+        scaling than the per-tensor worst case prices."""
+        scales = jnp.concatenate([jnp.ones((1,)), jnp.full((63,), 1.0 / 64.0)])
+        b_group = min_bits_lemma1(0.02, 1.0, 16, scale=scales)
+        b_tensor = min_bits_lemma1(0.02, 1.0, 16, scale=1.0)
+        assert b_group < b_tensor
+
+    def test_empirical_gamma_hat_group_quantized(self):
+        """Tie the vector bound to rics_sampled on a per-channel-quantized
+        matrix with strongly varying row scales: the group bound must hold
+        empirically AND be tighter than the per-tensor one."""
+        key = jax.random.PRNGKey(8)
+        phi0 = jax.random.normal(key, (128, 64)) / math.sqrt(128)
+        row_scale = 2.0 ** jax.random.uniform(
+            jax.random.fold_in(key, 1), (128,), minval=-3.0, maxval=0.0)
+        phi = phi0 * row_scale[:, None]
+        s, bits = 8, 8
+        alpha, beta = rics_sampled(phi, s, 24, key)
+        gamma = float(gamma_from_rics(alpha, beta))
+        phi_hat = fake_quantize(phi, bits, jax.random.fold_in(key, 2),
+                                channel_axis=0)
+        a_h, b_h = rics_sampled(phi_hat, s, 24, key)
+        gamma_hat = float(gamma_from_rics(a_h, b_h))
+        group_scales = jnp.max(jnp.abs(phi), axis=1)  # what channel_axis=0 used
+        # ×2 covers stochastic rounding's full-step worst case (Lemma-1 form
+        # prices the deterministic half step), same slack style as the
+        # per-tensor empirical test above
+        bound_group = gamma_hat_bound(gamma, float(alpha), s, bits,
+                                      scale=2.0 * group_scales)
+        bound_tensor = gamma_hat_bound(gamma, float(alpha), s, bits,
+                                       scale=2.0 * float(jnp.max(jnp.abs(phi))))
+        assert gamma_hat <= bound_group + 0.05
+        assert bound_group < bound_tensor

@@ -25,6 +25,7 @@ from repro.train import (
 
 
 class TestAdamW:
+    @pytest.mark.slow
     def test_quadratic_convergence(self):
         opt = adamw(lr=0.1, weight_decay=0.0)
         params = {"w": jnp.asarray([5.0, -3.0])}
@@ -140,6 +141,7 @@ class TestShardingRules:
             batch_spec(mesh, 8, 2) == P("data", None)
 
 
+@pytest.mark.slow
 class TestTrainIntegration:
     def _setup(self):
         cfg = get_smoke_config("starcoder2_3b")
@@ -199,3 +201,25 @@ class TestTrainIntegration:
         b = jax.tree.leaves(final.params)
         for x, y in zip(a, b):
             np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestIHTTiePlateau:
+    def test_constant_matrix_keeps_budget(self):
+        """Tie-degeneracy regression (same bug class as the solver's H_s): a
+        constant plateau must keep `keep` entries, not be zeroed wholesale."""
+        from repro.optim.iht import _project_matrix
+
+        w = jnp.ones((64, 64))
+        out = _project_matrix(w, keep=2048)
+        assert int(jnp.sum(out != 0)) == 2048
+
+    def test_distinct_magnitudes_unchanged_semantics(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+        from repro.optim.iht import _project_matrix
+
+        out = _project_matrix(w, keep=1024)
+        n = int(jnp.sum(out != 0))
+        assert 1024 - 8 <= n <= 1024  # bin ties only
+        kept_min = float(jnp.min(jnp.abs(out[out != 0])))
+        dropped_max = float(jnp.max(jnp.abs(jnp.where(out == 0, w, 0.0))))
+        assert kept_min >= dropped_max - float(jnp.max(jnp.abs(w))) / 4096

@@ -66,6 +66,7 @@ class TestPhi:
 
 
 class TestSky:
+    @pytest.mark.slow
     def test_source_count_and_range(self):
         x = make_sky(32, 7, jax.random.PRNGKey(0))
         assert int(jnp.sum(x > 0)) == 7
@@ -86,6 +87,7 @@ class TestSky:
 
 
 class TestVisibilities:
+    @pytest.mark.slow
     def test_snr_calibration(self):
         phi = measurement_matrix(Station(n_antennas=8), 12, extent=1.0)
         x = make_sky(12, 3, jax.random.PRNGKey(3), min_sep=3)
@@ -108,6 +110,7 @@ class TestDirtyImage:
         db = np.asarray(dirty_beam(phi, r))
         assert np.unravel_index(np.argmax(np.abs(db)), db.shape) == (r // 2, r // 2)
 
+    @pytest.mark.slow
     def test_dirty_image_sees_source(self):
         r = 24
         phi = measurement_matrix(Station(n_antennas=16), r, extent=1.2)
@@ -122,6 +125,7 @@ class TestDirtyImage:
 class TestEndToEndRecovery:
     """The paper's headline (Fig. 1): 2&8-bit recovery ~ 32-bit recovery at 0 dB."""
 
+    @pytest.mark.slow
     def test_sky_recovery_low_precision(self):
         key = jax.random.PRNGKey(9)
         st = Station(n_antennas=30)

@@ -8,6 +8,9 @@ paper's insight feeds (quantized serving bytes, compressed-gradient training).
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytestmark = pytest.mark.slow  # end-to-end pipeline runs, ~30s total
 
 from repro.core import (
     eps_q,
@@ -33,6 +36,7 @@ class TestPaperPipelineEndToEnd:
         self.x = make_sky(self.r, self.s, self.key, min_sep=4)
         self.y, _ = visibilities(self.phi, self.x, 0.0, self.key)  # 0 dB
 
+    @pytest.mark.slow
     def test_low_precision_recovery_matches_full(self):
         full = niht(self.phi, self.y, self.s, 40, real_signal=True, nonneg=True)
         low = qniht(self.phi, self.y, self.s, 40,
@@ -80,6 +84,7 @@ class TestFrameworkIntegration:
         assert b4 < 0.45 * b32
         assert b2 < b4
 
+    @pytest.mark.slow
     def test_compressed_gradient_training_converges(self):
         """Unbiased Q8 gradients do not break optimization (QSGD lineage)."""
         from repro.configs import get_smoke_config

@@ -73,3 +73,56 @@ class TestBisect:
         x = jnp.asarray([3.0, -1.0, 2.0])
         m = top_s_mask(x, 2)
         np.testing.assert_array_equal(np.asarray(m), [True, False, True])
+
+
+class TestTieDegeneracy:
+    """ISSUE-4 regression: tied magnitudes at the threshold must not collapse
+    the support to empty (the flat-phantom degeneracy that silently re-enters
+    the solver's init branch)."""
+
+    def test_all_equal_keeps_exactly_s_by_index(self):
+        x = jnp.ones((16,))
+        out = hard_threshold_bisect(x, 5)
+        np.testing.assert_array_equal(np.asarray(jnp.abs(out) > 0),
+                                      [True] * 5 + [False] * 11)
+
+    def test_piecewise_constant_phantom_profile(self):
+        # two plateaus, tie at the threshold inside the top plateau
+        x = jnp.concatenate([jnp.full((8,), 2.0), jnp.full((8,), 1.0)])
+        out = hard_threshold_bisect(x, 4)
+        assert int(jnp.sum(jnp.abs(out) > 0)) == 4
+        assert bool(jnp.all(out[8:] == 0))          # only top-plateau entries
+        np.testing.assert_array_equal(np.asarray(out[:4]), [2.0] * 4)
+
+    def test_zeros_never_enter_support(self):
+        x = jnp.zeros((16,)).at[3].set(1.0)
+        out = hard_threshold_bisect(x, 5)
+        assert int(jnp.sum(jnp.abs(out) > 0)) == 1
+
+    @given(n=st.integers(8, 200), s_frac=st.floats(0.05, 0.9),
+           n_levels=st.integers(1, 4), seed=st.integers(0, 99))
+    @settings(max_examples=40, deadline=None)
+    def test_tied_magnitudes_match_hard_threshold(self, n, s_frac, n_levels, seed):
+        """Property (vs exact H_s): on arbitrarily tied inputs the bisection
+        keeps the SAME multiset of magnitudes as top-k, with support size
+        min(s, nnz)."""
+        s = max(1, int(n * s_frac))
+        key = jax.random.PRNGKey(seed)
+        levels = jnp.arange(n_levels, dtype=jnp.float32)  # includes exact 0
+        x = levels[jax.random.randint(key, (n,), 0, n_levels)]
+        signs = jnp.where(jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5,
+                                               (n,)), 1.0, -1.0)
+        x = x * signs
+        a = np.abs(np.asarray(hard_threshold(x, s)))
+        b = np.abs(np.asarray(hard_threshold_bisect(x, s)))
+        assert (b > 0).sum() == (a > 0).sum() == min(s, int((np.abs(np.asarray(x)) > 0).sum()))
+        np.testing.assert_allclose(np.sort(b)[::-1], np.sort(a)[::-1], atol=1e-6)
+
+    def test_hsthresh_flat_input_keeps_s(self):
+        """The kernel path of the same degeneracy (histogram select)."""
+        from repro.kernels.hsthresh.ops import hsthresh
+
+        x = jnp.ones((64,))
+        for use_pallas in (False, True):
+            out = hsthresh(x, 7, use_pallas=use_pallas, interpret=use_pallas)
+            assert int(jnp.sum(jnp.abs(out) > 0)) == 7
