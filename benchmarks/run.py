@@ -42,6 +42,7 @@ def main(argv=None) -> None:
         fig7_rip_bits,
         fig9_clean,
         fig11_gaussian,
+        fig_batch_scaling,
         fig_mri,
         kernels_micro,
         roofline,
@@ -66,6 +67,7 @@ def main(argv=None) -> None:
         "mri": fig_mri,
         "mri-groupscale": _FnSuite(fig_mri.run_groupscale),
         "mri-fullimage": _FnSuite(fig_mri.run_fullimage),
+        "batch-scaling": fig_batch_scaling,
         "kernels": kernels_micro,
         "roofline": roofline,
     }
@@ -76,9 +78,11 @@ def main(argv=None) -> None:
             ap.error(f"unknown suite(s) {unknown}; choose from {sorted(suites)}")
         suites = {k: v for k, v in suites.items() if k in selected}
     else:
-        # opt-in only: the full default run already covers these rows via "mri"
+        # opt-in only: the full default run already covers these rows via "mri",
+        # and batch-scaling spawns forced-device-count subprocesses (minutes)
         suites.pop("mri-groupscale")
         suites.pop("mri-fullimage")
+        suites.pop("batch-scaling")
 
     print("name,us_per_call,derived")
     failures = 0

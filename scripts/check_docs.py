@@ -1,0 +1,93 @@
+#!/usr/bin/env python
+"""Docs gate (scripts/ci.sh docs): snippets execute, links resolve.
+
+* Every fenced ```python block in README.md and docs/*.md is executed as a
+  standalone program (fresh namespace, repo root as cwd). Blocks are the
+  docs' executable examples — if one breaks, the docs lie. Mark a block
+  non-executable by using a different fence language (```text, ```bash, …).
+* Every relative markdown link/image target must exist on disk (http(s) and
+  #anchors are skipped).
+
+Exit code 0 = all good; prints one line per failure otherwise.
+"""
+from __future__ import annotations
+
+import re
+import sys
+import traceback
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+# [text](target) — excluding images' leading ! only for clarity (same rule)
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def md_files() -> list[Path]:
+    files = [ROOT / "README.md"]
+    files += sorted((ROOT / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def python_blocks(text: str):
+    """Yield (start_line, source) for each ```python fenced block."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE_RE.match(lines[i])
+        if m and m.group(1) == "python":
+            start = i + 1
+            j = start
+            while j < len(lines) and not lines[j].startswith("```"):
+                j += 1
+            yield start + 1, "\n".join(lines[start:j])
+            i = j + 1
+        else:
+            i += 1
+
+
+def check_links(path: Path, text: str) -> list[str]:
+    errors = []
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "#", "mailto:")):
+            continue
+        rel = target.split("#")[0]
+        if not rel:
+            continue
+        if not (path.parent / rel).resolve().exists():
+            errors.append(f"{path.relative_to(ROOT)}: broken link -> {target}")
+    return errors
+
+
+def run_block(path: Path, line: int, src: str) -> list[str]:
+    try:
+        code = compile(src, f"{path.name}:{line}", "exec")
+        exec(code, {"__name__": "__docs_snippet__"})
+        return []
+    except Exception:
+        tb = traceback.format_exc(limit=3)
+        return [f"{path.relative_to(ROOT)}:{line}: snippet failed\n{tb}"]
+
+
+def main() -> int:
+    sys.path.insert(0, str(ROOT / "src"))
+    errors: list[str] = []
+    n_blocks = 0
+    for f in md_files():
+        text = f.read_text()
+        errors += check_links(f, text)
+        for line, src in python_blocks(text):
+            n_blocks += 1
+            errors += run_block(f, line, src)
+    if errors:
+        print("\n".join(errors))
+        print(f"[check_docs] FAILED ({len(errors)} problem(s))")
+        return 1
+    print(f"[check_docs] OK: {len(md_files())} files, {n_blocks} snippets "
+          "executed, all links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,6 +6,7 @@
 #   scripts/ci.sh fast   # same
 #   scripts/ci.sh full   # everything — the driver's tier-1 command
 #   scripts/ci.sh lint   # byte-compile src/tests/benchmarks (+ ruff if installed)
+#   scripts/ci.sh docs   # docs gate: README/docs snippets execute, links resolve
 #
 # Extra args go straight to pytest: scripts/ci.sh fast -k mri
 set -euo pipefail
@@ -25,5 +26,6 @@ case "$mode" in
       echo "[lint] ruff not installed; compileall only"
     fi
     ;;
-  *) echo "usage: scripts/ci.sh [fast|full|lint] [pytest args...]" >&2; exit 2 ;;
+  docs) exec python scripts/check_docs.py "$@" ;;
+  *) echo "usage: scripts/ci.sh [fast|full|lint|docs] [pytest args...]" >&2; exit 2 ;;
 esac

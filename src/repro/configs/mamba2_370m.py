@@ -2,7 +2,7 @@
 ssm_state=128 — SSD (state-space duality). [arXiv:2405.21060]
 
 d_inner = 2×1024 = 2048; headdim 64 → 32 SSD heads.
-Vocab padded 50280 → 50432 for 16-way TP divisibility (DESIGN.md §7).
+Vocab padded 50280 → 50432 for 16-way TP divisibility (see repro.parallel.sharding).
 Supports long_500k (O(1) recurrent state)."""
 from repro.models.config import ModelConfig
 

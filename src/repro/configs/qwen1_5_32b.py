@@ -2,7 +2,7 @@
 vocab=152064 — QKV bias. [hf:Qwen/Qwen1.5 family]
 
 TP note: 40 heads do not divide the 16-way model axis → q/kv heads padded to
-48 (DESIGN.md §7)."""
+48 (see repro.parallel.sharding)."""
 from repro.models.config import ModelConfig
 
 CONFIG = ModelConfig(

@@ -4,7 +4,7 @@ vocab=256000 — RG-LRU + local attention, pattern (rec, rec, attn).
 
 head_dim 256; local window 2048 → supports long_500k (bounded state).
 Attention is small (MQA) → heads replicated on the model axis (pad_heads_to=1);
-TP shards the MLP and RG-LRU width instead (DESIGN.md §7)."""
+TP shards the MLP and RG-LRU width instead (see repro.parallel.sharding)."""
 from repro.models.config import ModelConfig
 
 CONFIG = ModelConfig(

@@ -1,0 +1,58 @@
+"""Serving-workload configs for the sharded batch recovery path.
+
+Models the heavy-traffic scenario the ROADMAP's north star describes: a
+stream of fixed-shape observation chunks (instrument-rate data from many
+users/stations) recovered against ONE measurement operator by
+:class:`repro.parallel.batch.BatchServer` over a ``batch`` device mesh.
+
+The workload is deliberately *heterogeneous*: real streams are. Each chunk
+carries a leading burst of ``hard_fraction`` hard rows — geometrically
+decaying (near-compressible) coefficients at lower SNR, the kind of item
+whose support NIHT resolves slowly — followed by clean flat s-sparse rows.
+``n_iters`` is the serving horizon, sized for the hard rows; the per-row
+freeze rule (``exit_tol``) is what keeps that horizon cheap for everyone
+else. That is exactly why per-shard early exit matters: in a single fused
+batch every easy row rides along for the hardest row's iterations, while on
+a mesh only the shard holding the burst keeps working (see
+``docs/architecture.md`` and ``benchmarks/fig_batch_scaling.py``).
+"""
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    name: str
+    m: int = 512
+    n: int = 1024
+    s: int = 64
+    chunk: int = 64              # rows per incoming (B, M) chunk
+    n_chunks: int = 4            # chunks per measured stream
+    n_iters: int = 96            # the serving horizon: sized for the hard rows
+    snr_easy_db: float = 30.0
+    snr_hard_db: float = 15.0
+    hard_decay: float = 0.85     # hard rows: amplitudes decay^j (compressible)
+    hard_fraction: float = 1.0 / 8.0    # leading burst of hard rows per chunk
+    exit_tol: float = 1e-5       # per-row freeze tolerance (0 → exact rule)
+    bits_phi: Optional[int] = None      # None → f32 operator; set for packed
+    bits_y: Optional[int] = None
+    backend: str = "dense"              # "dense" | "packed"
+    seed: int = 0
+
+    @property
+    def n_hard(self) -> int:
+        """Hard rows at the head of each chunk (at least 1 when fraction > 0)."""
+        if self.hard_fraction <= 0:
+            return 0
+        return max(1, int(round(self.chunk * self.hard_fraction)))
+
+
+CONFIG = ServeConfig(name="serve-gaussian")
+
+# Packed-operator serving: Φ̂ packed once at server construction, every chunk
+# streams the same int4 codes (bits_y=8 observation quantization per chunk).
+PACKED = ServeConfig(name="serve-gaussian-packed", bits_phi=4, bits_y=8,
+                     backend="packed")
+
+SMOKE = ServeConfig(name="serve-gaussian-smoke", m=64, n=128, s=8, chunk=8,
+                    n_chunks=2, n_iters=40)

@@ -6,7 +6,7 @@
   long_500k    seq_len=524288  global_batch=1     → serve_step, sub-quadratic only
 
 ``long_500k`` runs only for SSM/hybrid archs (O(1) state / bounded local
-window); pure full-attention archs skip it (DESIGN.md §6).
+window); pure full-attention archs skip it (window-vs-full attention asymptotics).
 """
 from __future__ import annotations
 
@@ -35,5 +35,5 @@ def applicable(cfg, shape: ShapeSuite) -> tuple[bool, str]:
     if shape.name == "long_500k" and not cfg.supports_long_context:
         return False, ("pure full-attention arch: 512k dense KV cache is beyond "
                        "design envelope; paper technique does not change attention "
-                       "asymptotics (DESIGN.md §6)")
+                       "asymptotics")
     return True, ""

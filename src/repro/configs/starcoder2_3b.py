@@ -2,7 +2,7 @@
 vocab=49152 — GQA, RoPE, GELU MLP + LayerNorm. [arXiv:2402.19173]
 
 TP note: 24 q-heads padded to 32 for the 16-way model axis; kv=2 does not
-divide 16 → kv projections replicated (DESIGN.md §7)."""
+divide 16 → kv projections replicated (see repro.parallel.sharding)."""
 from repro.models.config import ModelConfig
 
 CONFIG = ModelConfig(

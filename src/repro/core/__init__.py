@@ -8,6 +8,7 @@ from repro.core.niht import (
     niht_iteration,
     qniht,
     qniht_batch,
+    qniht_batch_sharded,
     stopping_iterations,
 )
 from repro.core.operators import (
@@ -52,7 +53,7 @@ from repro.core.threshold import (
 __all__ = [
     "clean", "cosamp", "fista_l1", "iht", "spectral_norm",
     "IHTResult", "IHTTrace", "niht", "niht_iteration", "qniht", "qniht_batch",
-    "stopping_iterations",
+    "qniht_batch_sharded", "stopping_iterations",
     "ComposedOperator", "DenseOperator", "FakeQuantPairOperator",
     "PackedStreamingOperator", "SubsampledFourierOperator",
     "WaveletSynthesisOperator", "as_operator", "is_linear_operator",

@@ -35,6 +35,13 @@ across the batch (the heavy-traffic serving scenario). Key contract: row ``b``
 of ``qniht_batch(phi, Y, key=k)`` computes exactly what ``qniht(phi, Y[b],
 key=k)`` computes (same quantization draws), up to f32 batching accumulation.
 
+``qniht_batch_sharded`` splits that batch over a 1-D ``batch`` device mesh
+(:mod:`repro.parallel.batch`): Y and all per-item solver state sharded, the
+packed operator codes/scales replicated, every item bit-identical to the
+single-device path. Combined with ``early_exit`` (skip iterations once a
+shard's rows all hit a bitwise fixed point) this is the heavy-traffic serving
+mode — see ``docs/architecture.md``.
+
 ``threshold="hsthresh"`` (real-signal path) swaps the exact ``top_k`` H_s for
 the streaming histogram-select-mask kernel (paper §8's FPGA top-S search);
 support size stays ≤ s by construction.
@@ -69,6 +76,11 @@ class IHTTrace(NamedTuple):
 class IHTResult(NamedTuple):
     x: jax.Array
     trace: IHTTrace
+
+
+# consecutive sub-tol updates required before the early-exit freeze rule
+# (exit_tol > 0) declares a row stalled — see _qniht_core
+_EXIT_PATIENCE = 3
 
 
 def _sqnorm(v: jax.Array) -> jax.Array:
@@ -190,11 +202,29 @@ def niht_iteration(
 
 
 def _validate(phi, bits_phi, bits_y, key, requantize, backend, threshold, real_signal,
-              scale_granularity="per_tensor", group_size=None):
+              scale_granularity="per_tensor", group_size=None, early_exit=False,
+              exit_tol=0.0, unroll=1):
     if (bits_phi or bits_y) and key is None:
         raise ValueError("quantized NIHT needs a PRNG key")
     if requantize not in ("pair", "fixed"):
         raise ValueError(f"unknown requantize {requantize!r}")
+    if early_exit and bits_phi and requantize == "pair":
+        raise ValueError(
+            "early_exit skips iterations once x reaches a bitwise fixed point, "
+            "which is only absorbing when every iteration applies the SAME "
+            "operators; requantize='pair' redraws Φ̂ each iteration — use "
+            "requantize='fixed' (or full precision) with early_exit")
+    if exit_tol < 0.0:
+        raise ValueError(f"exit_tol must be >= 0, got {exit_tol}")
+    if exit_tol > 0.0 and not early_exit:
+        raise ValueError("exit_tol is the early_exit freeze tolerance; set early_exit=True")
+    if unroll < 1:
+        raise ValueError(f"unroll must be a positive int, got {unroll}")
+    if unroll > 1 and early_exit:
+        raise ValueError(
+            "unroll amortizes dispatch of the fixed-trip lax.scan; the "
+            "early_exit path is a lax.while_loop with a data-dependent trip "
+            "count, which cannot unroll — use unroll with early_exit=False")
     if backend not in ("dense", "packed"):
         raise ValueError(f"unknown backend {backend!r} (use 'dense' or 'packed')")
     gran = as_granularity(scale_granularity, group_size)  # validates the spelling
@@ -227,9 +257,53 @@ def _validate(phi, bits_phi, bits_y, key, requantize, backend, threshold, real_s
 def _qniht_core(
     phi, Y, s, n_iters, bits_phi, bits_y, key, requantize, backend, threshold,
     c, shrink_k, max_backtracks, real_signal, nonneg, with_trace,
-    scale_granularity="per_tensor", group_size=None,
+    scale_granularity="per_tensor", group_size=None, early_exit=False,
+    exit_tol=0.0, unroll=1,
 ):
-    """Shared batched implementation behind qniht / qniht_batch (Y is (B, M))."""
+    """Shared batched implementation behind qniht / qniht_batch (Y is (B, M)).
+
+    ``early_exit=True`` tracks a per-row convergence flag and, once EVERY row
+    of this batch is converged, stops executing iteration bodies: the loop
+    over iterations becomes a ``lax.while_loop`` that terminates early and
+    the remaining trace rows are broadcast-filled with the stationary row
+    (NOT a scan of ``lax.cond`` — under SPMD partitioning XLA rewrites a
+    cond into a select that executes both branches, which would silently
+    undo the skip; see the comment in the implementation). Two flavours,
+    selected by ``exit_tol``:
+
+    * ``exit_tol == 0.0`` (lossless): a row is converged when ``x`` reached a
+      bitwise fixed point of the iteration map. Because the map is a
+      deterministic function of ``x`` when the per-iteration operators are
+      stationary (``requantize="fixed"``, packed, matrix-free, or full
+      precision), a bitwise fixed point is absorbing and the recomputed
+      ``(mu, changed, backtracks, resid)`` would be identical — so the output
+      is bit-for-bit the same as ``early_exit=False``, only cheaper.
+    * ``exit_tol > 0.0`` (freeze): a row is *frozen* — its state masked to
+      stop updating — once its relative update stalls:
+      ``‖x⁺−x‖ ≤ exit_tol·‖x⁺‖`` for ``_EXIT_PATIENCE`` consecutive
+      iterations (a single tiny step can be a backtracking artefact, not a
+      stall). This catches rows orbiting tiny limit cycles (low-order bits
+      oscillating around the noise floor) that never hit an exact fixed
+      point. It is a *heuristic* serving trade-off: a row drifting slowly
+      toward a support change (a long saddle plateau) can be frozen short of
+      the escape the full run would eventually make, so frozen results match
+      the full run only up to the quality the stall point already reached —
+      the scaling benchmark records recovery error for both paths to keep
+      that trade visible. No longer bit-identical to
+      ``early_exit=False``, but the rule is deterministic and **row-local**
+      (it reads only the row's own trajectory), so results are bit-identical
+      across ANY row grouping — single device, any mesh width — at the same
+      tolerance.
+
+    This per-row flag is the solver state the sharded serving path splits
+    over the device mesh: a shard whose rows all converged stops paying for
+    iterations while other shards keep working (:mod:`repro.parallel.batch`).
+
+    ``unroll`` is handed to ``lax.scan`` (identical numerics, fewer dispatch
+    boundaries — matters for small per-shard programs on CPU). It applies
+    only to the fixed-trip scan: the early-exit while_loop's trip count is
+    data-dependent and cannot unroll (validated as mutually exclusive).
+    """
     key = key if key is not None else jax.random.PRNGKey(0)
     ky, kphi = jax.random.split(key)
 
@@ -237,18 +311,19 @@ def _qniht_core(
     # batch row b reproduces the single-problem run with the same key.
     Yhat = jax.vmap(lambda yy: fake_quantize(yy, bits_y, ky))(Y) if bits_y else Y
 
+    B = Y.shape[0]
     n = phi.shape[1]
     x_dtype = jnp.float32 if real_signal else (
         phi.dtype if jnp.issubdtype(jnp.dtype(phi.dtype), jnp.complexfloating)
         else jnp.float32
     )
-    X0 = jnp.zeros((Y.shape[0], n), dtype=x_dtype)
+    X0 = jnp.zeros((B, n), dtype=x_dtype)
     hs = _make_hs(threshold, s)
     phi_true, get_ops = make_iteration_operators(
         phi, bits_phi, requantize, backend, kphi,
         granularity=as_granularity(scale_granularity, group_size))
 
-    def step(X, i):
+    def iteration(X, i):
         op1, op2 = get_ops(i)
         X_new, mu, changed, n_bt = _niht_iteration_batch(
             X, Yhat, op1, op2, s, c, shrink_k, max_backtracks,
@@ -263,7 +338,62 @@ def _qniht_core(
             rq = rt = jnp.full((X.shape[0],), jnp.nan, jnp.float32)
         return X_new, (rq, rt, mu, changed, n_bt)
 
-    X_final, (rq, rt, mus, ch, bt) = jax.lax.scan(step, X0, jnp.arange(n_iters))
+    if not early_exit:
+        X_final, (rq, rt, mus, ch, bt) = jax.lax.scan(
+            lambda X, i: iteration(X, i), X0, jnp.arange(n_iters), unroll=unroll)
+    else:
+        # A while_loop, NOT a scan-of-cond: under SPMD partitioning
+        # (shard_map) XLA rewrites a cond into a select that executes BOTH
+        # branches, which would silently undo the skip; a loop's trip count
+        # cannot be select-ified, so converged shards genuinely stop paying.
+        # Trace rows are written into preallocated buffers as iterations
+        # execute; the stationary tail is broadcast-filled after the loop.
+        def body(st):
+            k, X, done, streak, prev, bufs = st
+            X_c, outs_c = iteration(X, k)
+            if exit_tol == 0.0:
+                # a done row recomputes itself identically (fixed point) —
+                # no masking needed, and the no-early-exit output is
+                # reproduced bit-for-bit.
+                X_new, outs = X_c, outs_c
+            else:
+                # frozen rows stop updating; their trace re-emits the last
+                # live row (deterministic + row-local → grouping-invariant)
+                X_new = jnp.where(done[:, None], X, X_c)
+                outs = jax.tree_util.tree_map(
+                    lambda p, n_: jnp.where(done, p, n_), prev, outs_c)
+            bufs = jax.tree_util.tree_map(
+                lambda buf, o: jax.lax.dynamic_update_index_in_dim(buf, o, k, 0),
+                bufs, outs)
+            if exit_tol == 0.0:
+                newly = jnp.all(X_new == X, axis=-1)
+            else:
+                # one sub-tol step can be a backtracking artefact (µ shrunk to
+                # a tiny accepted step), not a stall — require _EXIT_PATIENCE
+                # consecutive sub-tol updates before freezing the row
+                small = _rows_sqnorm(X_new - X) <= (
+                    exit_tol * exit_tol) * _rows_sqnorm(X_new)
+                streak = jnp.where(small, streak + 1, 0)
+                newly = streak >= _EXIT_PATIENCE
+            return k + 1, X_new, done | newly, streak, outs, bufs
+
+        def cond(st):
+            k, _, done, _, _, _ = st
+            return (k < n_iters) & ~jnp.all(done)
+
+        nanrow = jnp.full((B,), jnp.nan, jnp.float32)
+        prev0 = (nanrow, nanrow, jnp.zeros((B,), jnp.float32),
+                 jnp.zeros((B,), bool), jnp.zeros((B,), jnp.int32))
+        bufs0 = jax.tree_util.tree_map(
+            lambda o: jnp.zeros((n_iters,) + o.shape, o.dtype), prev0)
+        k_end, X_final, _, _, last, bufs = jax.lax.while_loop(
+            cond, body, (jnp.asarray(0, jnp.int32), X0, jnp.zeros((B,), bool),
+                         jnp.zeros((B,), jnp.int32), prev0, bufs0))
+        # iterations k_end.. would all re-emit the stationary trace row (every
+        # row is at a fixed point / frozen), so fill instead of compute
+        tail = jnp.arange(n_iters)[:, None] >= k_end
+        (rq, rt, mus, ch, bt) = jax.tree_util.tree_map(
+            lambda buf, o: jnp.where(tail, o[None, :], buf), bufs, last)
     return IHTResult(
         x=X_final,
         trace=IHTTrace(resid_q=rq, resid_true=rt, mu=mus, support_changed=ch, backtracks=bt),
@@ -273,7 +403,7 @@ def _qniht_core(
 _STATIC = (
     "s", "n_iters", "bits_phi", "bits_y", "requantize", "backend", "threshold",
     "c", "shrink_k", "max_backtracks", "real_signal", "nonneg", "with_trace",
-    "scale_granularity", "group_size",
+    "scale_granularity", "group_size", "early_exit", "exit_tol", "unroll",
 )
 
 
@@ -298,6 +428,9 @@ def qniht(
     with_trace: bool = True,
     scale_granularity: str = "per_tensor",
     group_size: Optional[int] = None,
+    early_exit: bool = False,
+    exit_tol: float = 0.0,
+    unroll: int = 1,
 ) -> IHTResult:
     """Low-precision NIHT (Algorithm 1). ``bits_phi=bits_y=None`` → plain NIHT.
 
@@ -330,17 +463,20 @@ def qniht(
         behaviour; "per_channel"; "per_block" with ``group_size``). Group
         granularities quantize each orientation separately (packed backend
         only); see :mod:`repro.quant.formats` for layout and overhead.
+      early_exit: skip remaining iteration bodies once x reaches a bitwise
+        fixed point (stationary operators only — bit-identical output, see
+        :func:`_qniht_core`).
     """
     if y.ndim != 1:
         raise ValueError(
             f"qniht expects y of shape (M,), got ndim={y.ndim}; "
             "use qniht_batch for a (B, M) stack of observations")
     _validate(phi, bits_phi, bits_y, key, requantize, backend, threshold, real_signal,
-              scale_granularity, group_size)
+              scale_granularity, group_size, early_exit, exit_tol, unroll)
     res = _qniht_core(
         phi, y[None, :], s, n_iters, bits_phi, bits_y, key, requantize, backend,
         threshold, c, shrink_k, max_backtracks, real_signal, nonneg, with_trace,
-        scale_granularity, group_size,
+        scale_granularity, group_size, early_exit, exit_tol, unroll,
     )
     return IHTResult(
         x=res.x[0],
@@ -369,6 +505,9 @@ def qniht_batch(
     with_trace: bool = True,
     scale_granularity: str = "per_tensor",
     group_size: Optional[int] = None,
+    early_exit: bool = False,
+    exit_tol: float = 0.0,
+    unroll: int = 1,
 ) -> IHTResult:
     """Recover B observation vectors of the same Φ at once (heavy-traffic mode).
 
@@ -383,15 +522,95 @@ def qniht_batch(
     ``qniht(phi, Y[b], ..., key=key)`` up to f32 accumulation order (defaults
     included: both sides default to ``requantize="pair"``; the packed backend
     requires ``requantize="fixed"`` explicitly, same as ``qniht``).
+
+    ``early_exit=True`` skips remaining iteration bodies once EVERY row has
+    reached a bitwise fixed point — bit-identical output, cheaper tail
+    (stationary operators only; see :func:`_qniht_core`). Most valuable
+    through :func:`qniht_batch_sharded`, where the all-rows condition is per
+    shard rather than per batch.
     """
     if Y.ndim != 2:
         raise ValueError("qniht_batch expects Y of shape (B, M); use qniht for one y")
     _validate(phi, bits_phi, bits_y, key, requantize, backend, threshold, real_signal,
-              scale_granularity, group_size)
+              scale_granularity, group_size, early_exit, exit_tol, unroll)
     return _qniht_core(
         phi, Y, s, n_iters, bits_phi, bits_y, key, requantize, backend,
         threshold, c, shrink_k, max_backtracks, real_signal, nonneg, with_trace,
-        scale_granularity, group_size,
+        scale_granularity, group_size, early_exit, exit_tol, unroll,
+    )
+
+
+def qniht_batch_sharded(
+    phi,
+    Y: jax.Array,
+    s: int,
+    n_iters: int = 50,
+    *,
+    mesh=None,
+    n_devices: Optional[int] = None,
+    bits_phi: Optional[int] = None,
+    bits_y: Optional[int] = None,
+    key: Optional[jax.Array] = None,
+    requantize: str = "pair",
+    backend: str = "dense",
+    threshold: str = "topk",
+    c: float = 0.01,
+    shrink_k: float = 2.0,
+    max_backtracks: int = 30,
+    real_signal: bool = False,
+    nonneg: bool = False,
+    with_trace: bool = True,
+    scale_granularity: str = "per_tensor",
+    group_size: Optional[int] = None,
+    early_exit: bool = True,
+    exit_tol: float = 0.0,
+    unroll: int = 1,
+) -> IHTResult:
+    """:func:`qniht_batch` with the B axis split over a 1-D ``batch`` device
+    mesh — the multi-device serving mode.
+
+    ``mesh`` is a 1-D :class:`jax.sharding.Mesh` whose sole axis is named
+    ``"batch"`` (default: all local devices via
+    :func:`repro.parallel.batch.make_batch_mesh`; ``n_devices`` limits the
+    count). ``Y`` is sharded by rows, Φ̂'s codes/scales (or the matrix-free
+    operator's parameters) are replicated, and every piece of per-item solver
+    state — ``x``, support, step size µ, backtrack counters, convergence
+    flags — lives with its rows. B need not divide the mesh: rows are
+    zero-padded to the next multiple (an all-zero row converges at iteration
+    0, so padding never delays a shard) and the padding is stripped from the
+    result.
+
+    Contract: item ``b`` computes exactly what ``qniht_batch(phi, Y, ...)``
+    computes on one device — same quantization draws (the key is replicated
+    and every row folds it exactly as the single-device path does), same
+    per-item iterates, up to f32 batching accumulation (the hedge the
+    ``qniht_batch`` ↔ ``qniht`` row contract has always carried: results are
+    bitwise identical whenever XLA's batched ops are batching-invariant at
+    the problem shape, which the test suite pins on an 8-device mesh, and
+    differ by ULPs otherwise). Sharding changes only WHERE rows are
+    computed, plus the ``early_exit`` default (True here: per-shard
+    convergence is the point — a shard of converged rows stops iterating
+    instead of riding along with the slowest item in the global batch; see
+    :func:`_qniht_core`).
+
+    All other arguments exactly as :func:`qniht_batch`, and every backend
+    works sharded: dense, fake-quant, packed (all scale granularities), and
+    matrix-free operators (Fourier, composed wavelet) — dispatch goes through
+    :func:`repro.core.operators.make_iteration_operators` inside each shard.
+    """
+    if Y.ndim != 2:
+        raise ValueError("qniht_batch_sharded expects Y of shape (B, M)")
+    _validate(phi, bits_phi, bits_y, key, requantize, backend, threshold, real_signal,
+              scale_granularity, group_size, early_exit, exit_tol, unroll)
+    from repro.parallel.batch import sharded_qniht_run
+
+    return sharded_qniht_run(
+        phi, Y, key, mesh=mesh, n_devices=n_devices, s=s, n_iters=n_iters,
+        bits_phi=bits_phi, bits_y=bits_y, requantize=requantize, backend=backend,
+        threshold=threshold, c=c, shrink_k=shrink_k, max_backtracks=max_backtracks,
+        real_signal=real_signal, nonneg=nonneg, with_trace=with_trace,
+        scale_granularity=scale_granularity, group_size=group_size,
+        early_exit=early_exit, exit_tol=exit_tol, unroll=unroll,
     )
 
 

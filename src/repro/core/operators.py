@@ -27,7 +27,9 @@ representations of Φ̂:
   Φ = P_Ω F W†, still matrix-free.
 
 Operator protocol (the contract every backend implements, and what a new
-operator must provide to slot into ``qniht``/``qniht_batch``):
+operator must provide to slot into ``qniht``/``qniht_batch``/
+``qniht_batch_sharded`` — ``docs/operator-protocol.md`` walks through writing
+one):
 
 * ``mv(x)`` — apply Φ̂: ``(n,) → (m,)``, and batched ``(B, n) → (B, m)``. A
   batch MUST be served by one vectorized application (one matmul / kernel

@@ -10,6 +10,7 @@
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import NamedTuple, Optional, Union
 
@@ -33,13 +34,21 @@ def _round_up(v: int, mult: int) -> int:
     return (v + mult - 1) // mult * mult
 
 
-class PackedWeights(NamedTuple):
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PackedWeights:
     """(N, K) weight matrix quantized & packed along K.
 
     ``scale`` layout follows ``granularity``: (1, N) per-output-channel f32 for
     ``per_tensor``/``per_channel`` (per-tensor broadcasts one value), or
     (N, ⌈K/group_size⌉) blockwise-along-K for ``per_block`` (consumed by the
     group-scaled kernel, which dequantizes inside the contraction).
+
+    Registered pytree: the arrays (``packed``, ``scale``) are children and the
+    config (``bits``, ``k_dim``, ``granularity``) is aux data, so packed
+    weights — and every operator built from them — cross jit/shard_map
+    boundaries as ordinary arguments (e.g. a pre-packed Φ̂ handed to the
+    sharded serving loop, :class:`repro.parallel.batch.BatchServer`).
     """
 
     packed: jax.Array      # (N, packed_len(K)) uint8
@@ -47,6 +56,13 @@ class PackedWeights(NamedTuple):
     bits: int
     k_dim: int
     granularity: Granularity = PER_TENSOR
+
+    def tree_flatten(self):
+        return (self.packed, self.scale), (self.bits, self.k_dim, self.granularity)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
 
     @property
     def nbytes(self) -> int:

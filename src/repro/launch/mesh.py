@@ -1,10 +1,24 @@
-"""Production meshes.
+"""Device meshes for both halves of the system.
 
-``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+Two mesh shapes exist because the repo runs two kinds of distributed work:
+
+* **Solver serving** — a 1-D ``("batch",)`` mesh for the sharded recovery
+  path (``qniht_batch_sharded`` / :class:`repro.parallel.batch.BatchServer`):
+  observations split by row, operator replicated. :func:`make_batch_mesh`
+  delegates to :func:`repro.parallel.batch.make_batch_mesh`; on CPU, force a
+  multi-device view with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+  before jax initializes (see ``docs/benchmarks.md``).
+* **Model training** — 2-D/3-D ``(data, model)`` / ``(pod, data, model)``
+  meshes for the LM-twin workloads' FSDP × TP (× DP) layout, consumed by
+  :func:`repro.parallel.sharding.params_shardings`.
+
+Every factory here is a FUNCTION (not a module-level constant) so that
 importing this module never touches jax device state — the dry-run must set
 XLA_FLAGS before the first jax call, and tests must keep their 1-device view.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 
@@ -20,3 +34,11 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests/examples)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_batch_mesh(n_devices: Optional[int] = None):
+    """1-D ``("batch",)`` serving mesh over the first ``n_devices`` local
+    devices (all by default) — the mesh ``qniht_batch_sharded`` expects."""
+    from repro.parallel.batch import make_batch_mesh as _make
+
+    return _make(n_devices)

@@ -18,7 +18,11 @@ Backends (``--backend``):
   Fig. 5/6 speed-up mode.
 
 ``--batch B`` recovers B observations of the same Φ̂ at once (``qniht_batch``):
-one packed Φ̂ stream serves the whole batch per iteration.
+one packed Φ̂ stream serves the whole batch per iteration. Adding
+``--devices N`` splits those rows over an N-device ``("batch",)`` mesh
+(``qniht_batch_sharded`` — bit-identical per item, with per-shard early exit;
+on CPU the driver forces N host devices for you). The multi-chunk streaming
+loop lives in ``python -m repro.launch.serve``.
 
 ``--scale-granularity`` picks the quantizer scale layout (default
 ``per_tensor``, the paper's single c): with ``--backend packed`` it selects the
@@ -49,6 +53,7 @@ from __future__ import annotations
 
 import argparse
 import time
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -63,7 +68,16 @@ from repro.configs.mri_brain import (
     WAVELET_BENCH as MRI_WAVELET_BENCH,
     WAVELET_SMOKE as MRI_WAVELET_SMOKE,
 )
-from repro.core import niht, psnr, qniht, qniht_batch, relative_error, source_recovery, support_recovery
+from repro.core import (
+    niht,
+    psnr,
+    qniht,
+    qniht_batch,
+    qniht_batch_sharded,
+    relative_error,
+    source_recovery,
+    support_recovery,
+)
 from repro.sensing import (
     Station,
     brain_phantom,
@@ -76,6 +90,17 @@ from repro.sensing import (
     sparsify_image,
     visibilities,
 )
+
+
+def _batch_solver(devices, kw):
+    """qniht_batch, or its mesh-sharded twin when ``--devices`` asks for one
+    (bit-identical per item — see repro.parallel.batch). ``early_exit`` is on
+    whenever the per-iteration operators are stationary (it is invalid under
+    requantize='pair', which redraws Φ̂ each iteration)."""
+    if devices:
+        early = not (kw.get("bits_phi") and kw.get("requantize", "pair") == "pair")
+        return partial(qniht_batch_sharded, n_devices=devices, early_exit=early)
+    return qniht_batch
 
 
 def _solver_kwargs(backend, bits_phi, bits_y, key, requantize,
@@ -99,7 +124,7 @@ def _solver_kwargs(backend, bits_phi, bits_y, key, requantize,
 
 
 def recover_lofar(cs, backend, bits_phi, bits_y, key, requantize="pair", batch=0,
-                  granularity="per_tensor", group_size=None):
+                  granularity="per_tensor", group_size=None, devices=None):
     st = Station(n_antennas=cs.n_antennas, seed=cs.seed)
     phi = measurement_matrix(st, cs.resolution, cs.extent)
     kw = _solver_kwargs(backend, bits_phi, bits_y, key, requantize,
@@ -111,8 +136,8 @@ def recover_lofar(cs, backend, bits_phi, bits_y, key, requantize="pair", batch=0
                        for b, x in enumerate(skies)])
         X_true = jnp.stack(skies)
         t0 = time.time()
-        res = qniht_batch(phi, Y, cs.n_sources, cs.n_iters,
-                          real_signal=True, nonneg=True, **kw)
+        res = _batch_solver(devices, kw)(phi, Y, cs.n_sources, cs.n_iters,
+                                         real_signal=True, nonneg=True, **kw)
         jax.block_until_ready(res.x)
         wall = time.time() - t0
         rel = [float(relative_error(res.x[b], X_true[b])) for b in range(batch)]
@@ -140,7 +165,7 @@ def recover_lofar(cs, backend, bits_phi, bits_y, key, requantize="pair", batch=0
 
 
 def recover_gaussian(g, backend, bits_phi, bits_y, key, requantize="pair", batch=0,
-                     granularity="per_tensor", group_size=None):
+                     granularity="per_tensor", group_size=None, devices=None):
     prob = make_gaussian_problem(g.m, g.n, g.s, 20.0, key)
     kw = _solver_kwargs(backend, bits_phi, bits_y, key, requantize,
                         granularity, group_size)
@@ -152,7 +177,7 @@ def recover_gaussian(g, backend, bits_phi, bits_y, key, requantize="pair", batch
         Y = jnp.stack([p.y for p in probs])
         X_true = jnp.stack([p.x_true for p in probs])
         t0 = time.time()
-        res = qniht_batch(prob.phi, Y, g.s, g.n_iters, **kw)
+        res = _batch_solver(devices, kw)(prob.phi, Y, g.s, g.n_iters, **kw)
         jax.block_until_ready(res.x)
         rel = [float(relative_error(res.x[b], X_true[b])) for b in range(batch)]
         return {"batch": batch, "rel_error_mean": sum(rel) / batch,
@@ -164,7 +189,7 @@ def recover_gaussian(g, backend, bits_phi, bits_y, key, requantize="pair", batch
 
 
 def recover_mri(cfg, bits_y, key, batch=0, granularity="per_tensor", n_bands=None,
-                sparsity_basis=None):
+                sparsity_basis=None, devices=None):
     """Matrix-free §5 workload: image-space PSNR/relative error of the
     recovered phantom. ``bits_y=None`` → full-precision observations (the
     32-bit baseline); ``batch`` recovers B randomized brain phantoms sharing
@@ -214,7 +239,7 @@ def recover_mri(cfg, bits_y, key, batch=0, granularity="per_tensor", n_bands=Non
                                 cfg.snr_db, jax.random.fold_in(key, batch))
         Y = prep(Y)
         t0 = time.time()
-        res = qniht_batch(prob.op, Y, cfg.n_sparse, cfg.n_iters, **kw)
+        res = _batch_solver(devices, kw)(prob.op, Y, cfg.n_sparse, cfg.n_iters, **kw)
         jax.block_until_ready(res.x)
         wall = time.time() - t0
         Img_hat = prob.to_image(res.x)
@@ -264,6 +289,11 @@ def main(argv=None):
     ap.add_argument("--requantize", default="pair", choices=["pair", "fixed"])
     ap.add_argument("--batch", type=int, default=0,
                     help="recover B observations of one Φ̂ at once (qniht_batch)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard the --batch rows over an N-device ('batch',) "
+                         "mesh (qniht_batch_sharded; bit-identical per item). "
+                         "On CPU this also forces N host devices when jax has "
+                         "not initialized yet")
     ap.add_argument("--scale-granularity", default=None,
                     choices=["per_tensor", "per_channel", "per_block", "per_band"],
                     help="quantizer scale layout: per_channel/per_block apply to "
@@ -283,6 +313,13 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    if args.devices and not args.batch:
+        ap.error("--devices shards the batch axis; combine it with --batch B")
+    if args.devices:
+        # only effective before the first jax call of this process
+        from repro.parallel.batch import force_host_devices
+
+        force_host_devices(args.devices)
     backend = "dense" if args.full_precision else args.backend
     key = jax.random.PRNGKey(args.seed)
     # None = unset: non-MRI configs fall back to per_tensor, MRI configs to
@@ -298,7 +335,8 @@ def main(argv=None):
         cs = {"lofar": LOFAR_CONFIG, "lofar-bench": LOFAR_BENCH,
               "lofar-smoke": LOFAR_SMOKE}[args.config]
         out = recover_lofar(cs, backend, args.bits_phi, args.bits_y, key,
-                            args.requantize, args.batch, gran, args.group_size)
+                            args.requantize, args.batch, gran, args.group_size,
+                            devices=args.devices)
         label = ("32bit" if backend == "dense"
                  else f"{args.bits_phi}&{args.bits_y}bit[{backend}]")
     elif args.config.startswith("mri"):
@@ -312,7 +350,7 @@ def main(argv=None):
         bits_y = None if backend == "dense" else args.bits_y
         gran = args.scale_granularity or cs.scale_granularity
         out = recover_mri(cs, bits_y, key, args.batch, gran, args.group_size,
-                          sparsity_basis=args.sparsity_basis)
+                          sparsity_basis=args.sparsity_basis, devices=args.devices)
         basis = args.sparsity_basis or cs.sparsity_basis
         label = ("32bit[matrix-free]" if bits_y is None
                  else f"y@{bits_y}bit[{gran},matrix-free]") + f"[{basis}]"
@@ -321,7 +359,8 @@ def main(argv=None):
             ap.error("per_band is the MRI observation granularity; use an mri config")
         g = GAUSS_CONFIG if args.config == "gaussian" else GAUSS_SMOKE
         out = recover_gaussian(g, backend, args.bits_phi, args.bits_y, key,
-                               args.requantize, args.batch, gran, args.group_size)
+                               args.requantize, args.batch, gran, args.group_size,
+                               devices=args.devices)
         label = ("32bit" if backend == "dense"
                  else f"{args.bits_phi}&{args.bits_y}bit[{backend}]")
     print(f"[recover] {args.config} {label}: " +

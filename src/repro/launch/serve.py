@@ -1,0 +1,150 @@
+"""Sharded batch-recovery serving driver — the heavy-traffic loop as a CLI.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.serve --devices 8 --chunks 4
+
+Simulates the production shape of the system: a stream of fixed-size (B, M)
+observation chunks arriving against ONE measurement operator, recovered by a
+:class:`repro.parallel.batch.BatchServer` whose ``batch`` mesh splits each
+chunk's rows across devices. The driver demonstrates the three amortizations
+the serving mode is built around:
+
+* the operator is packed once at server construction (``--config
+  serve-gaussian-packed``) — chunk programs stream codes, never re-quantize;
+* the sharded solve compiles once per (chunk shape, solver config) and every
+  later chunk reuses the executable (the driver prints compile vs steady-state
+  wall times);
+* per-shard ``early_exit`` lets shards of converged rows stop iterating while
+  the shard holding the workload's hard rows keeps going.
+
+The default workload is the heterogeneous stream of
+:mod:`repro.configs.serve_batch` (a leading burst of low-SNR rows per chunk);
+``--devices N`` picks the mesh width. On CPU the flag above must force the
+multi-device view before jax initializes — the driver sets it for you when
+run as ``__main__`` with ``--devices`` (it exports XLA_FLAGS before the first
+jax call). Scaling numbers live in ``benchmarks/fig_batch_scaling.py`` /
+``BENCH_batch.json``; see ``docs/benchmarks.md``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def build_stream(cfg, key):
+    """(phi, chunks, truths): ``cfg.n_chunks`` chunks of ``cfg.chunk`` rows
+    sharing one Φ. Rows 0..n_hard-1 of each chunk are the *hard burst* —
+    geometrically decaying coefficients (``cfg.hard_decay``) observed at
+    ``snr_hard_db`` — and the rest flat s-sparse rows at ``snr_easy_db``."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.sensing import make_gaussian_problem
+
+    base = make_gaussian_problem(cfg.m, cfg.n, cfg.s, None, key)
+
+    def sig(k, decay):
+        perm = jax.random.permutation(k, cfg.n)[: cfg.s]
+        amps = jnp.power(decay, jnp.arange(cfg.s, dtype=jnp.float32))
+        signs = jax.random.rademacher(jax.random.fold_in(k, 1), (cfg.s,), jnp.float32)
+        return jnp.zeros(cfg.n).at[perm].set(amps * signs)
+
+    def obs(x, snr, k):
+        y = x @ base.phi.T
+        noise = jax.random.normal(k, y.shape) * jnp.sqrt(
+            jnp.mean(y**2) / 10 ** (snr / 10))
+        return y + noise
+
+    chunks, truths = [], []
+    for ci in range(cfg.n_chunks):
+        ys, xs = [], []
+        for b in range(cfg.chunk):
+            kb = jax.random.fold_in(key, 1 + ci * cfg.chunk + b)
+            decay, snr = ((cfg.hard_decay, cfg.snr_hard_db) if b < cfg.n_hard
+                          else (1.0, cfg.snr_easy_db))
+            x = sig(kb, decay)
+            xs.append(x)
+            ys.append(obs(x, snr, jax.random.fold_in(kb, 9)))
+        chunks.append(jnp.stack(ys))
+        truths.append(jnp.stack(xs))
+    return base.phi, chunks, truths
+
+
+def serve(cfg, devices=None, chunks=None):
+    """Run the stream through a BatchServer; returns a metrics dict."""
+    import jax
+
+    from repro.core import relative_error
+    from repro.parallel import BatchServer, make_batch_mesh
+
+    key = jax.random.PRNGKey(cfg.seed)
+    if chunks is not None:
+        cfg = __import__("dataclasses").replace(cfg, n_chunks=chunks)
+    phi, stream, truths = build_stream(cfg, key)
+    mesh = make_batch_mesh(devices)
+    kw = {}
+    if cfg.backend == "packed":
+        kw = dict(bits_phi=cfg.bits_phi, bits_y=cfg.bits_y, backend="packed")
+    elif cfg.bits_y:
+        kw = dict(bits_y=cfg.bits_y)
+    srv = BatchServer(phi, cfg.s, cfg.n_iters, mesh=mesh, key=key,
+                      exit_tol=cfg.exit_tol, **kw)
+
+    walls, rels_easy, rels_hard = [], [], []
+    for ci, Y in enumerate(stream):
+        t0 = time.time()
+        res = srv.submit(Y, jax.random.fold_in(key, 1000 + ci))
+        jax.block_until_ready(res.x)
+        walls.append(time.time() - t0)
+        for b in range(cfg.chunk):
+            rel = float(relative_error(res.x[b], truths[ci][b]))
+            (rels_hard if b < cfg.n_hard else rels_easy).append(rel)
+    steady = walls[1:] if len(walls) > 1 else walls
+    items_per_s = cfg.chunk / (sum(steady) / len(steady))
+    return {
+        "devices": srv.n_shards,
+        "chunks": len(stream),
+        "chunk_rows": cfg.chunk,
+        "compile_chunk_s": round(walls[0], 3),
+        "steady_chunk_s": round(sum(steady) / len(steady), 3),
+        "items_per_s": round(items_per_s, 1),
+        "rel_error_easy_mean": round(sum(rels_easy) / len(rels_easy), 4),
+        "rel_error_hard_mean": (round(sum(rels_hard) / len(rels_hard), 4)
+                                if rels_hard else None),
+        "compile_cache_keys": list(map(list, srv.compile_cache_keys)),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--config", default="serve-gaussian-smoke",
+                    choices=["serve-gaussian", "serve-gaussian-packed",
+                             "serve-gaussian-smoke"])
+    ap.add_argument("--devices", type=int, default=None,
+                    help="mesh width (default: all visible devices); on CPU "
+                         "also forces that many host devices when set before "
+                         "jax initializes")
+    ap.add_argument("--chunks", type=int, default=None,
+                    help="override the config's number of stream chunks")
+    args = ap.parse_args(argv)
+    if args.chunks is not None and args.chunks < 1:
+        ap.error("--chunks must be >= 1")
+
+    if args.devices:
+        # must happen before the first jax call in this process
+        from repro.parallel.batch import force_host_devices
+
+        force_host_devices(args.devices)
+
+    from repro.configs.serve_batch import CONFIG, PACKED, SMOKE
+
+    cfg = {"serve-gaussian": CONFIG, "serve-gaussian-packed": PACKED,
+           "serve-gaussian-smoke": SMOKE}[args.config]
+    out = serve(cfg, args.devices, args.chunks)
+    print(f"[serve] {cfg.name}: " +
+          " ".join(f"{k}={v}" for k, v in out.items()))
+
+
+if __name__ == "__main__":
+    main()

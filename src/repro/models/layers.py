@@ -147,7 +147,7 @@ def _flash_core(qf, kf, vf, scale, causal, window, q_offset, unroll):
     """Online-softmax attention over chunk grids with a flash-style backward:
     only (out, logsumexp) are saved — O(S·d) residuals instead of the O(S²/ck)
     scan carries a naive autodiff would store. This is what makes the 4k-train
-    and 32k-prefill cells fit HBM (see EXPERIMENTS.md §Perf)."""
+    and 32k-prefill cells fit HBM (measured in benchmarks/roofline.py)."""
     b, h, nq, cq, d = qf.shape
     sq = nq * cq
     sk = kf.shape[2] * kf.shape[3]

@@ -5,7 +5,7 @@ processed in groups of ``group_size`` via ``lax.scan``; each group builds a
 (g, E, C) dispatch tensor with per-group capacity C = g·k/E·cf. This bounds
 live activation memory to O(g·k·cf·d) regardless of batch·seq, at the cost of
 re-streaming the expert weights once per group — the group size is therefore a
-first-order bandwidth/memory trade-off (exploited in EXPERIMENTS.md §Perf).
+first-order bandwidth/memory trade-off (exploited by the serving benchmarks).
 
 Sharding: the expert dimension of the weights lives on the `model` mesh axis
 (expert parallelism); dispatch/combine einsums then induce all-to-all-style
@@ -98,7 +98,7 @@ def moe_apply(
 
         # remat per group: a group's dispatch/combine tensors are rebuilt in
         # the backward instead of being stored for all n_groups at once —
-        # O(group) live memory instead of O(tokens) (EXPERIMENTS.md §Perf).
+        # O(group) live memory instead of O(tokens) (the memory-bound regime).
         step = jax.checkpoint(step)
         _, (ys, loads) = jax.lax.scan(step, None, xg,
                                       unroll=n_groups if unroll else 1)

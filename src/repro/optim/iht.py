@@ -4,7 +4,7 @@ The paper's hard-threshold operator, applied to model weights after each
 optimizer update, is exactly iterative magnitude pruning as projected gradient
 descent — ``w ← H_s(w − η∇L)``. Exposed as a wrapper so any arch can train
 s-sparse weight matrices. (No Theorem-3 recovery guarantee transfers to LM
-weights — see DESIGN.md §5 — this is the *mechanism* as a framework feature.)
+weights — this is the *mechanism* as a framework feature.)
 
 Uses the streaming histogram threshold (kernels/hsthresh semantics) so the
 projection is O(N) per matrix, never a sort.

@@ -1,4 +1,17 @@
-"""Distribution layer: sharding rules, meshes, compressed collectives."""
+"""Distribution layer — two independent stories share this package:
+
+* **solver serving** (:mod:`repro.parallel.batch`): the B axis of
+  ``qniht_batch`` sharded over a 1-D ``batch`` mesh, bit-identical per item.
+* **model training** (:mod:`repro.parallel.sharding`,
+  :mod:`repro.parallel.collectives`): parameter sharding rules and quantized
+  gradient collectives for the LM-twin workloads.
+"""
+from repro.parallel.batch import (
+    BatchServer,
+    make_batch_mesh,
+    pad_batch,
+    sharded_qniht_run,
+)
 from repro.parallel.collectives import (
     fake_grad_compression,
     make_qgrad_allreduce,
@@ -13,6 +26,10 @@ from repro.parallel.sharding import (
 )
 
 __all__ = [
+    "BatchServer",
+    "make_batch_mesh",
+    "pad_batch",
+    "sharded_qniht_run",
     "fake_grad_compression",
     "make_qgrad_allreduce",
     "quantized_allreduce_mean",

@@ -1,0 +1,257 @@
+"""Sharded batch recovery: ``qniht_batch`` split over a 1-D device mesh.
+
+This is the *solver* half of the distribution layer (the model-training half —
+parameter sharding rules and compressed gradient collectives — lives in
+:mod:`repro.parallel.sharding` and :mod:`repro.parallel.collectives`). Per
+Blumensath & Davies' analysis, NIHT iterations for independent observations of
+the same Φ̂ never interact: all cross-row structure in ``qniht_batch`` is the
+shared operator stream, while step sizes, supports, backtracking, and
+convergence are per-row. That makes the B (observations) axis embarrassingly
+parallel, and this module maps it onto a mesh:
+
+* **mesh** — 1-D, sole axis named ``"batch"`` (:func:`make_batch_mesh`).
+* **sharded** — ``Y`` by rows, and with it every piece of per-item solver
+  state inside the loop: ``x``, support masks, µ, backtrack counters, and the
+  per-item convergence flags that drive ``early_exit``.
+* **replicated** — the operator (dense Φ, packed codes + scales, or a
+  matrix-free operator's parameters) and the PRNG key. Each shard re-derives
+  exactly the quantization draws the single-device path uses, which is what
+  makes the result bit-identical per item rather than merely statistically
+  equivalent.
+
+Implementation: :func:`jax.experimental.shard_map` around the shared batched
+core ``repro.core.niht._qniht_core`` (``check_rep=False`` — the loop's
+``lax.while_loop`` backtracking has no replication rule, and the program
+contains no collectives to mis-infer: shards are fully independent). B is
+zero-padded up to a multiple of the mesh size; an all-zero row is accepted at
+iteration 0 and immediately flagged converged, so padding never slows a shard
+down. ``jax.jit`` over static solver config gives the compile cache the
+serving loop relies on: a stream of equally-shaped chunks compiles once.
+
+:class:`BatchServer` is the multi-chunk driver: fixed chunk shape, operator
+packed ONCE at construction (the packed backend's quantize+pack leaves the
+per-chunk path entirely), per-chunk observation keys. This is the layer the
+heavy-traffic scenarios (MRI fleets, telescope streams) sit on.
+
+User-facing entry points: :func:`repro.core.niht.qniht_batch_sharded`,
+``repro.launch.recover --batch B --devices N``, and
+``python -m repro.launch.serve``. See ``docs/architecture.md`` for where this
+sits in the layer map.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+try:  # JAX ≤ 0.4.x ships shard_map under experimental
+    from jax.experimental.shard_map import shard_map as _shard_map
+except ImportError:  # newer JAX promoted it to the top level
+    _shard_map = jax.shard_map
+
+from repro.core.niht import _STATIC, IHTResult, IHTTrace, _qniht_core, _validate
+from repro.core.operators import PackedStreamingOperator
+from repro.quant.formats import as_granularity
+
+BATCH_AXIS = "batch"
+
+
+def force_host_devices(n: int, env=None) -> None:
+    """Append ``--xla_force_host_platform_device_count=n`` to XLA_FLAGS in
+    ``env`` (default ``os.environ``). The CPU platform reads the flag ONCE,
+    at backend initialization, so this must run before the first jax call of
+    the target process; it is harmless on non-CPU platforms and merely
+    appends for an already-initialized backend. The single owner of this
+    contract — the CLIs and the scaling benchmark all call it.
+    """
+    import os
+
+    target = os.environ if env is None else env
+    target["XLA_FLAGS"] = (target.get("XLA_FLAGS", "")
+                           + f" --xla_force_host_platform_device_count={int(n)}")
+
+# the solver's own static-argname list — shared, not copied, so a kwarg added
+# to the single-device jit can never silently become a traced argument here
+_CORE_STATICS = _STATIC
+
+# x is (B_local, N) → rows sharded; trace arrays are (n_iters, B_local) → the
+# batch axis is second. The operator/key inputs are replicated (P() prefix).
+_OUT_SPECS = IHTResult(
+    x=P(BATCH_AXIS),
+    trace=IHTTrace(*([P(None, BATCH_AXIS)] * 5)),
+)
+
+
+def make_batch_mesh(n_devices: Optional[int] = None, devices=None) -> Mesh:
+    """1-D serving mesh over the local devices, axis name ``"batch"``.
+
+    ``n_devices`` takes the first N local devices (all of them by default).
+    On CPU, force a multi-device view with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` **before** the
+    first jax call — see ``docs/benchmarks.md``.
+    """
+    devs = list(devices if devices is not None else jax.devices())
+    if n_devices is not None:
+        if n_devices < 1 or n_devices > len(devs):
+            raise ValueError(
+                f"n_devices={n_devices} but {len(devs)} device(s) visible; on CPU "
+                "set XLA_FLAGS=--xla_force_host_platform_device_count before jax "
+                "initializes")
+        devs = devs[:n_devices]
+    return Mesh(np.array(devs).reshape(len(devs)), (BATCH_AXIS,))
+
+
+def pad_batch(Y: jax.Array, n_shards: int) -> tuple[jax.Array, int]:
+    """Zero-pad rows of (B, M) ``Y`` up to a multiple of ``n_shards``.
+
+    Returns ``(Y_padded, B)``. Zero rows are free riders: NIHT accepts x = 0
+    for y = 0 at the first iteration, so the convergence flag of a padding row
+    is set immediately and ``early_exit`` shards never wait on it.
+    """
+    b = Y.shape[0]
+    b_pad = -(-b // n_shards) * n_shards
+    if b_pad == b:
+        return Y, b
+    pad = jnp.zeros((b_pad - b, Y.shape[1]), Y.dtype)
+    return jnp.concatenate([Y, pad], axis=0), b
+
+
+@partial(jax.jit, static_argnames=("mesh",) + _CORE_STATICS)
+def _sharded_call(phi, Y, key, *, mesh, **statics):
+    def local(phi_, Y_, key_):
+        return _qniht_core(
+            phi_, Y_, statics["s"], statics["n_iters"], statics["bits_phi"],
+            statics["bits_y"], key_, statics["requantize"], statics["backend"],
+            statics["threshold"], statics["c"], statics["shrink_k"],
+            statics["max_backtracks"], statics["real_signal"], statics["nonneg"],
+            statics["with_trace"], statics["scale_granularity"],
+            statics["group_size"], statics["early_exit"], statics["exit_tol"],
+            statics["unroll"],
+        )
+
+    fn = _shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(BATCH_AXIS), P()),
+        out_specs=_OUT_SPECS,
+        check_rep=False,  # lax.while_loop has no replication rule (JAX ≤ 0.4)
+    )
+    return fn(phi, Y, key)
+
+
+def sharded_qniht_run(phi, Y, key, *, mesh=None, n_devices=None, **statics) -> IHTResult:
+    """Pad → shard_map the batched NIHT core → strip padding.
+
+    The backend of :func:`repro.core.niht.qniht_batch_sharded`; call that
+    instead (it validates the solver configuration first).
+    """
+    mesh = mesh if mesh is not None else make_batch_mesh(n_devices)
+    if set(mesh.axis_names) != {BATCH_AXIS}:
+        raise ValueError(
+            f"qniht_batch_sharded needs a 1-D ('{BATCH_AXIS}',) mesh, got axes "
+            f"{mesh.axis_names}; build one with repro.parallel.batch.make_batch_mesh")
+    Y_pad, b = pad_batch(Y, mesh.devices.size)
+    res = _sharded_call(phi, Y_pad, key, mesh=mesh, **statics)
+    if Y_pad.shape[0] == b:
+        return res
+    return IHTResult(
+        x=res.x[:b],
+        trace=jax.tree_util.tree_map(lambda t: t[:, :b], res.trace),
+    )
+
+
+class BatchServer:
+    """Multi-chunk sharded recovery service: the serving loop's driver.
+
+    Holds one measurement operator and one solver configuration, and solves a
+    stream of equally-shaped ``(B, M)`` observation chunks over a fixed
+    ``batch`` mesh. Amortization contract:
+
+    * **pack once** — with ``backend="packed"``, Φ̂ is quantized and packed at
+      construction (keyed exactly as the solver would: ``fold_in(kφ, 0)`` of
+      the construction key's second split half), and every chunk streams the
+      same codes. ``submit`` then runs the matrix-free operator path, so the
+      per-chunk program contains no quantize/pack at all.
+    * **compile once** — the sharded call jits on (chunk shape, static solver
+      config, mesh); a stream of same-shaped chunks reuses one executable.
+      ``compile_cache_keys`` exposes the distinct shapes seen so far.
+    * **per-chunk keys** — ``submit(Y, key=k)`` draws the chunk's observation
+      quantization from ``k`` (default: the construction key), replicated so
+      each row folds it the same way the single-device path would.
+
+    Bit-identity: with construction key K and ``submit(Y, key=K)``, row ``b``
+    equals ``qniht_batch(phi, Y, ..., key=K)`` of the corresponding
+    single-device backend configuration bit-for-bit (the parity test in
+    ``tests/test_sharded_batch.py`` pins this).
+    """
+
+    def __init__(self, phi, s: int, n_iters: int = 50, *, mesh=None,
+                 n_devices: Optional[int] = None,
+                 bits_phi: Optional[int] = None, bits_y: Optional[int] = None,
+                 key: Optional[jax.Array] = None, requantize: str = "fixed",
+                 backend: str = "dense", threshold: str = "topk",
+                 c: float = 0.01, shrink_k: float = 2.0, max_backtracks: int = 30,
+                 real_signal: bool = False, nonneg: bool = False,
+                 with_trace: bool = False,
+                 scale_granularity: str = "per_tensor",
+                 group_size: Optional[int] = None, early_exit: bool = True,
+                 exit_tol: float = 0.0, unroll: int = 1):
+        _validate(phi, bits_phi, bits_y, key, requantize, backend, threshold,
+                  real_signal, scale_granularity, group_size, early_exit,
+                  exit_tol, unroll)
+        self.mesh = mesh if mesh is not None else make_batch_mesh(n_devices)
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        self.phi = phi
+        self.n_chunks = 0
+        self.n_items = 0
+        self._shapes: set = set()
+        statics = dict(
+            s=s, n_iters=n_iters, bits_phi=bits_phi, bits_y=bits_y,
+            requantize=requantize, backend=backend, threshold=threshold, c=c,
+            shrink_k=shrink_k, max_backtracks=max_backtracks,
+            real_signal=real_signal, nonneg=nonneg, with_trace=with_trace,
+            scale_granularity=scale_granularity, group_size=group_size,
+            early_exit=early_exit, exit_tol=exit_tol, unroll=unroll,
+        )
+        if backend == "packed":
+            # Pack once with the exact key the in-loop pack would fold, then
+            # serve through the operator path: per-chunk programs stream the
+            # codes but never re-quantize (see repro.core.operators).
+            _, kphi = jax.random.split(self.key)
+            self.phi = PackedStreamingOperator.pack(
+                phi, bits_phi, jax.random.fold_in(kphi, 0),
+                granularity=as_granularity(scale_granularity, group_size))
+            statics.update(bits_phi=None, backend="dense")
+        self._statics = statics
+
+    def submit(self, Y: jax.Array, key: Optional[jax.Array] = None) -> IHTResult:
+        """Solve one (B, M) chunk; returns the usual :class:`IHTResult`."""
+        if Y.ndim != 2:
+            raise ValueError(f"BatchServer.submit expects (B, M) chunks, got {Y.shape}")
+        self._shapes.add(Y.shape)
+        self.n_chunks += 1
+        self.n_items += Y.shape[0]
+        return sharded_qniht_run(self.phi, Y, key if key is not None else self.key,
+                                 mesh=self.mesh, **self._statics)
+
+    def serve(self, chunks, keys=None):
+        """Drive a stream: yields one :class:`IHTResult` per chunk. ``keys``
+        (optional iterable, any kind — generator included) supplies per-chunk
+        observation keys; when exhausted or None, chunks fall back to the
+        construction key."""
+        key_iter = iter(keys) if keys is not None else None
+        for Y in chunks:
+            k = next(key_iter, None) if key_iter is not None else None
+            yield self.submit(Y, k)
+
+    @property
+    def n_shards(self) -> int:
+        return int(self.mesh.devices.size)
+
+    @property
+    def compile_cache_keys(self) -> tuple:
+        """Distinct chunk shapes seen (each costs one compile per config)."""
+        return tuple(sorted(self._shapes))

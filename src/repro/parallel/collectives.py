@@ -1,4 +1,5 @@
-"""Distributed-optimization collectives: quantized gradient all-reduce.
+"""Distributed-optimization collectives: quantized gradient all-reduce — the
+MODEL-TRAINING half of the distribution layer.
 
 The paper's stochastic quantizer applied to the *communication* side of
 training (the authors' QSGD/ZipML lineage): gradients are compressed to b-bit
@@ -10,10 +11,18 @@ exact over the integer grid:
     3. sum           C  = psum(c)               (the big collective, b-bit payload)
     4. result        ĝ  = C · s / (K · n)       (unbiased mean)
 
-Intended placement (DESIGN.md §8): *inter-pod* gradient sync — intra-pod ICI
-runs full-precision SPMD; the slower pod-to-pod links carry compressed codes.
+Intended placement: *inter-pod* gradient sync — intra-pod ICI runs
+full-precision SPMD; the slower pod-to-pod links carry compressed codes.
 Implemented with ``shard_map``; optional error-feedback residual accumulation
 turns the per-step quantization error into a correction at the next step.
+
+The SOLVER mesh story is intentionally different: the sharded recovery path
+(:mod:`repro.parallel.batch`) contains NO collectives at all — independent
+observations of one Φ̂ are row-sharded over a 1-D ``("batch",)`` mesh and
+never communicate, which is why its results are per-item identical to the
+single-device run rather than merely unbiased. These gradient collectives
+apply only to the LM-twin training workloads (``docs/architecture.md`` maps
+both halves).
 
 (The HLO emitted on CPU carries int32 psum — the byte saving is realized by
 the int8/int4 all-reduce path on real interconnects; the *numerics* here are

@@ -1,11 +1,19 @@
-"""Path-based parameter sharding rules: FSDP (`data`) × TP/EP (`model`) × DP
-(`pod`), with divisibility-aware fallback to replication.
+"""Path-based parameter sharding rules for the MODEL-TRAINING half of the
+distribution layer: FSDP (`data`) × TP/EP (`model`) × DP (`pod`), with
+divisibility-aware fallback to replication.
+
+This module is about sharding *parameters* of the LM-twin training/serving
+workloads over 2-D/3-D meshes (:func:`repro.launch.mesh.make_production_mesh`).
+It is deliberately separate from the *solver* mesh story — the CS recovery
+path shards only the observation batch axis over a 1-D ``("batch",)`` mesh
+with the operator replicated, and none of the rules here apply to it; see
+:mod:`repro.parallel.batch` and ``docs/architecture.md`` for that half.
 
 Rules are written against the *logical* (unstacked) weight shapes; scanned
 stacks (leading n_periods/n_layers dim) get a ``None`` prepended automatically.
 A dim is sharded only when its size divides the mesh axis — otherwise that dim
-falls back to ``None`` (replicated), which encodes the DESIGN.md §7 decisions
-(e.g. kv-head replication when kv_heads % TP != 0) without special cases.
+falls back to ``None`` (replicated), which encodes decisions like kv-head
+replication when kv_heads % TP != 0 without special cases.
 """
 from __future__ import annotations
 
@@ -98,7 +106,7 @@ def _path_str(path) -> str:
 
 # serve-mode overrides: K/V projections are contraction-sharded (their OUTPUT
 # must stay head-replicated or the partitioner re-lays-out the whole KV cache
-# at the layer-scan boundary every token — §Perf H2/H3).
+# at the layer-scan boundary every token).
 _SERVE_OVERRIDES: list[tuple[str, tuple]] = [
     (r"attn/wk/w$",  ("tp", None)),
     (r"attn/wv/w$",  ("tp", None)),
@@ -115,7 +123,7 @@ def params_shardings(params, mesh: Mesh, mode: str = "train"):
     mode="train": FSDP over `data` × TP over `model` (ZeRO-style).
     mode="serve": TP only — weights replicated across the DP axes so the
     decode loop never all-gathers them (they are read-only and re-streamed
-    every token; gathering per step is pure collective waste — §Perf), with
+    every token; gathering per step is pure collective waste), with
     K/V projections contraction-sharded (see _SERVE_OVERRIDES)."""
 
     def one(path, leaf):

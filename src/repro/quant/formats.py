@@ -23,6 +23,8 @@ exactly ``b`` bits per value.
 
 Scaling granularity & storage layout
 ------------------------------------
+(guide with examples: ``docs/quantization.md``)
+
 
 The paper's Q_b uses ONE scale per tensor (c_Φ, c_y). That single scale is what
 collapses aggressive bit-widths on high-dynamic-range data (k-space: huge DC

@@ -18,7 +18,7 @@ def make_sky(
 
     Sources are separated by at least ``min_sep`` pixels (celestial sources are
     resolved objects — support separation at the instrument-resolution scale is
-    what makes the sampled RIP condition meaningful; see DESIGN.md §sensing).
+    what makes the sampled RIP condition meaningful; see repro.sensing.telescope).
     Implemented by sampling distinct cells of the min_sep-coarsened grid and
     jittering inside each cell.
     """

@@ -1,6 +1,6 @@
 """Fault tolerance: restart supervision, preemption handling, straggler notes.
 
-Posture for 1000+-node fleets (DESIGN.md §8):
+Posture for 1000+-node fleets:
 
 * **Node failure** → the job scheduler restarts the worker; `run_with_restarts`
   is the in-process equivalent (used by tests to inject failures): every
