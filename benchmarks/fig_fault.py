@@ -1,0 +1,162 @@
+"""Fault tolerance: checkpoint overhead and recovery time (BENCH_fault.json).
+
+Measures what the preemption-safe recovery path costs when nothing goes wrong,
+and what it buys when something does:
+
+* ``overhead`` rows — the segmented checkpointed solve
+  (:func:`repro.launch.resilience.recover_resilient`) vs the one-shot
+  ``qniht_batch`` on the same problem, swept over ``ckpt_every``. The derived
+  column reports the amortized checkpoint cost in µs per solver iteration and
+  the per-checkpoint write cost; ``us_per_call`` is the whole solve. Includes
+  an ``async`` variant (checkpoint I/O overlapped with the next segment).
+* ``recovery`` rows — a run is preempted at roughly the halfway checkpoint,
+  then resumed: ``us_per_call`` is the *resume* wall time (process-local:
+  restore + the remaining iterations; it excludes process/jax startup, which
+  dominates a cold restart and is not a property of this layer). ``restore``
+  times the checkpoint read+rebuild alone.
+
+Everything runs in-process with a simulated preemption guard — the real
+kill -TERM path is pinned (bitwise) in ``tests/test_fault_injection.py``; this
+file is about the numbers, not the contract.
+
+Every run rewrites ``BENCH_fault.json`` (override via ``BENCH_FAULT_JSON``).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+JSON_PATH = os.environ.get("BENCH_FAULT_JSON", "BENCH_fault.json")
+
+
+def _ckpt_dir_bytes(d):
+    total = 0
+    for root, _, files in os.walk(d):
+        for f in files:
+            total += os.path.getsize(os.path.join(root, f))
+    return total
+
+
+class _GuardAt:
+    """Simulated preemption: `requested` flips once `polls` reaches `after`."""
+
+    def __init__(self, after):
+        self.polls = 0
+        self.after = after
+
+    @property
+    def requested(self):
+        self.polls += 1
+        return self.polls >= self.after
+
+
+def run(fast: bool = True):
+    import shutil
+    import tempfile
+
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import row, write_json
+    from repro.core import qniht_batch, solver_init
+    from repro.launch.resilience import Preempted, recover_resilient
+    from repro.sensing import make_gaussian_problem
+    from repro.train.checkpoint import latest_step, restore_latest
+
+    B, m, n, s = (8, 64, 128, 6) if fast else (32, 256, 512, 16)
+    n_iters = 32 if fast else 96
+    sweep = (4, 8, 16) if fast else (4, 8, 16, 32, 96)
+    key = jax.random.PRNGKey(0)
+    base = make_gaussian_problem(m, n, s, 20.0, key)
+    Y = jnp.stack([make_gaussian_problem(m, n, s, 20.0,
+                                         jax.random.fold_in(key, b + 1),
+                                         phi=base.phi).y for b in range(B)])
+    kw = dict(bits_y=8, key=key, with_trace=False)
+
+    records, rows = [], []
+
+    def timed(fn):
+        out = fn()          # warm: compiles cached for the repeat
+        t0 = time.perf_counter()
+        out = fn()
+        return (time.perf_counter() - t0) * 1e6, out
+
+    base_us, ref = timed(lambda: jax.block_until_ready(
+        qniht_batch(base.phi, Y, s, n_iters, **kw).x))
+    rows.append(row("fault/baseline_one_shot", base_us,
+                    f"B={B} m={m} n={n} n_iters={n_iters}"))
+    records.append({"name": "baseline_one_shot", "us_per_call": base_us,
+                    "B": B, "m": m, "n": n, "n_iters": n_iters})
+
+    for every in sweep:
+        for mode in ("sync", "async"):
+            d = tempfile.mkdtemp(prefix="bench_fault_")
+            try:
+                us, got = timed(lambda: jax.block_until_ready(recover_resilient(
+                    base.phi, Y, s, n_iters, checkpoint_dir=d,
+                    ckpt_every=every, async_save=mode == "async", **kw).x))
+                assert bool(jnp.all(got == ref)), "bitwise parity violated"
+                n_ckpts = -(-n_iters // every)
+                ovh_iter = (us - base_us) / n_iters
+                ovh_ckpt = (us - base_us) / n_ckpts
+                size = _ckpt_dir_bytes(d)
+                rows.append(row(
+                    f"fault/overhead_every{every}_{mode}", us,
+                    f"+{ovh_iter:.1f}us/iter +{ovh_ckpt:.1f}us/ckpt "
+                    f"n_ckpts={n_ckpts} dir={size}B parity=bitwise"))
+                records.append({
+                    "name": f"overhead_every{every}_{mode}", "us_per_call": us,
+                    "ckpt_every": every, "mode": mode,
+                    "overhead_us_per_iter": ovh_iter,
+                    "overhead_us_per_ckpt": ovh_ckpt,
+                    "n_checkpoints": n_ckpts, "ckpt_dir_bytes": size,
+                    "baseline_us": base_us, "n_iters": n_iters})
+            finally:
+                shutil.rmtree(d, ignore_errors=True)
+
+    # recovery: preempt at ~half the checkpoints, then resume to completion
+    every = sweep[1]
+    d = tempfile.mkdtemp(prefix="bench_fault_rec_")
+    try:
+        half = max(1, (n_iters // every) // 2)
+        try:
+            recover_resilient(base.phi, Y, s, n_iters, checkpoint_dir=d,
+                              ckpt_every=every, guard=_GuardAt(half), **kw)
+        except Preempted:
+            pass
+        k0 = latest_step(d)
+
+        t0 = time.perf_counter()
+        target = jax.eval_shape(
+            lambda: solver_init(base.phi, Y, s, n_iters, **kw))
+        state, _ = restore_latest(d, target)
+        jax.block_until_ready(state.X)
+        restore_us = (time.perf_counter() - t0) * 1e6
+
+        t0 = time.perf_counter()
+        got = recover_resilient(base.phi, Y, s, n_iters, checkpoint_dir=d,
+                                ckpt_every=every, resume=True, **kw)
+        jax.block_until_ready(got.x)
+        resume_us = (time.perf_counter() - t0) * 1e6
+        assert bool(jnp.all(got.x == ref)), "resume parity violated"
+
+        rows.append(row("fault/restore_state", restore_us,
+                        f"k={k0}/{n_iters} leaves={len(jax.tree_util.tree_leaves(state))}"))
+        rows.append(row("fault/recovery_resume", resume_us,
+                        f"from_k={k0} remaining={n_iters - k0} "
+                        f"vs_full_run={resume_us / max(base_us, 1):.2f}x parity=bitwise"))
+        records.append({"name": "restore_state", "us_per_call": restore_us,
+                        "resumed_from_k": k0, "n_iters": n_iters})
+        records.append({"name": "recovery_resume", "us_per_call": resume_us,
+                        "resumed_from_k": k0, "remaining_iters": n_iters - k0,
+                        "ckpt_every": every, "baseline_us": base_us})
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+    write_json(records, JSON_PATH)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(fast=True):
+        print(r)

@@ -2,9 +2,14 @@
 # Tier-1 test entry point with a quick pre-commit tier.
 #
 #   scripts/ci.sh        # fast: skip @slow tests (model-arch compiles, subprocess
-#                        # dry-run / multidevice, large-grid MRI acceptance) — <2 min
+#                        # dry-run / multidevice, large-grid MRI acceptance, and the
+#                        # kill/restart fault-injection matrix) — <2 min; the
+#                        # in-process segment-resume parity smokes
+#                        # (tests/test_resilience.py) DO run in this tier
 #   scripts/ci.sh fast   # same
-#   scripts/ci.sh full   # everything — the driver's tier-1 command
+#   scripts/ci.sh full   # everything — the driver's tier-1 command; includes the
+#                        # @slow SIGTERM kill + --resume subprocess matrix
+#                        # (tests/test_fault_injection.py)
 #   scripts/ci.sh lint   # byte-compile src/tests/benchmarks (+ ruff if installed)
 #   scripts/ci.sh docs   # docs gate: README/docs snippets execute, links resolve
 #

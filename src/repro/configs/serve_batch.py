@@ -56,3 +56,16 @@ PACKED = ServeConfig(name="serve-gaussian-packed", bits_phi=4, bits_y=8,
 
 SMOKE = ServeConfig(name="serve-gaussian-smoke", m=64, n=128, s=8, chunk=8,
                     n_chunks=2, n_iters=40)
+
+# Fault-injection harness stream: small chunks but enough of them that a
+# kill -TERM reliably lands mid-stream (tests/test_fault_injection.py kills
+# after the first chunk's progress line and the restarted run must drain the
+# journaled prefix and replay the rest bit-identically).
+FAULT = ServeConfig(name="serve-gaussian-fault", m=48, n=96, s=5, chunk=8,
+                    n_chunks=5, n_iters=30)
+
+# Same stream through the packed-operator server (the restart must rebuild
+# the identical packed codes from the construction key).
+FAULT_PACKED = ServeConfig(name="serve-gaussian-fault-packed", m=48, n=96, s=5,
+                           chunk=8, n_chunks=5, n_iters=30, bits_phi=4,
+                           bits_y=8, backend="packed")

@@ -4,11 +4,15 @@ from repro.core.baselines import clean, cosamp, fista_l1, iht, spectral_norm
 from repro.core.niht import (
     IHTResult,
     IHTTrace,
+    SolverState,
     niht,
     niht_iteration,
     qniht,
     qniht_batch,
     qniht_batch_sharded,
+    solver_init,
+    solver_result,
+    solver_segment,
     stopping_iterations,
 )
 from repro.core.operators import (
@@ -52,8 +56,9 @@ from repro.core.threshold import (
 
 __all__ = [
     "clean", "cosamp", "fista_l1", "iht", "spectral_norm",
-    "IHTResult", "IHTTrace", "niht", "niht_iteration", "qniht", "qniht_batch",
-    "qniht_batch_sharded", "stopping_iterations",
+    "IHTResult", "IHTTrace", "SolverState", "niht", "niht_iteration", "qniht",
+    "qniht_batch", "qniht_batch_sharded", "solver_init", "solver_result",
+    "solver_segment", "stopping_iterations",
     "ComposedOperator", "DenseOperator", "FakeQuantPairOperator",
     "PackedStreamingOperator", "SubsampledFourierOperator",
     "WaveletSynthesisOperator", "as_operator", "is_linear_operator",

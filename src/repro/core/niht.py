@@ -254,6 +254,55 @@ def _validate(phi, bits_phi, bits_y, key, requantize, backend, threshold, real_s
         raise ValueError("threshold='hsthresh' is the real-signal streaming H_s")
 
 
+def _solver_setup(
+    phi, Y, s, bits_phi, bits_y, key, requantize, backend, threshold,
+    c, shrink_k, max_backtracks, real_signal, nonneg, with_trace,
+    scale_granularity, group_size,
+):
+    """Shared prologue of the one-shot core and the segmented runner.
+
+    Returns ``(X0, iteration)`` where ``iteration(X, i)`` is one Algorithm 1
+    step at global iteration index ``i``. Everything stochastic — the ŷ draw
+    and the per-iteration Φ̂ pair factory — is derived deterministically from
+    ``key``, and ``iteration`` consumes the *global* index, so running the
+    range [0, n) in one scan or in segments produces bit-identical iterates.
+    """
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ky, kphi = jax.random.split(key)
+
+    # One stochastic draw ŷ per problem, all rows folding the same ky so that
+    # batch row b reproduces the single-problem run with the same key.
+    Yhat = jax.vmap(lambda yy: fake_quantize(yy, bits_y, ky))(Y) if bits_y else Y
+
+    n = phi.shape[1]
+    x_dtype = jnp.float32 if real_signal else (
+        phi.dtype if jnp.issubdtype(jnp.dtype(phi.dtype), jnp.complexfloating)
+        else jnp.float32
+    )
+    X0 = jnp.zeros((Y.shape[0], n), dtype=x_dtype)
+    hs = _make_hs(threshold, s)
+    phi_true, get_ops = make_iteration_operators(
+        phi, bits_phi, requantize, backend, kphi,
+        granularity=as_granularity(scale_granularity, group_size))
+
+    def iteration(X, i):
+        op1, op2 = get_ops(i)
+        X_new, mu, changed, n_bt = _niht_iteration_batch(
+            X, Yhat, op1, op2, s, c, shrink_k, max_backtracks,
+            real_signal, nonneg, hs,
+        )
+        if with_trace:
+            rq = jnp.sqrt(_rows_sqnorm(Yhat - op2.mv(X_new)))
+            rt = jnp.sqrt(_rows_sqnorm(Y - phi_true.mv(X_new)))
+        else:
+            # skip the residual matvecs (one of them streams dense f32 Φ —
+            # benchmarks disable the trace so the loop is pure algorithm traffic)
+            rq = rt = jnp.full((X.shape[0],), jnp.nan, jnp.float32)
+        return X_new, (rq, rt, mu, changed, n_bt)
+
+    return X0, iteration
+
+
 def _qniht_core(
     phi, Y, s, n_iters, bits_phi, bits_y, key, requantize, backend, threshold,
     c, shrink_k, max_backtracks, real_signal, nonneg, with_trace,
@@ -304,39 +353,11 @@ def _qniht_core(
     only to the fixed-trip scan: the early-exit while_loop's trip count is
     data-dependent and cannot unroll (validated as mutually exclusive).
     """
-    key = key if key is not None else jax.random.PRNGKey(0)
-    ky, kphi = jax.random.split(key)
-
-    # One stochastic draw ŷ per problem, all rows folding the same ky so that
-    # batch row b reproduces the single-problem run with the same key.
-    Yhat = jax.vmap(lambda yy: fake_quantize(yy, bits_y, ky))(Y) if bits_y else Y
-
     B = Y.shape[0]
-    n = phi.shape[1]
-    x_dtype = jnp.float32 if real_signal else (
-        phi.dtype if jnp.issubdtype(jnp.dtype(phi.dtype), jnp.complexfloating)
-        else jnp.float32
-    )
-    X0 = jnp.zeros((B, n), dtype=x_dtype)
-    hs = _make_hs(threshold, s)
-    phi_true, get_ops = make_iteration_operators(
-        phi, bits_phi, requantize, backend, kphi,
-        granularity=as_granularity(scale_granularity, group_size))
-
-    def iteration(X, i):
-        op1, op2 = get_ops(i)
-        X_new, mu, changed, n_bt = _niht_iteration_batch(
-            X, Yhat, op1, op2, s, c, shrink_k, max_backtracks,
-            real_signal, nonneg, hs,
-        )
-        if with_trace:
-            rq = jnp.sqrt(_rows_sqnorm(Yhat - op2.mv(X_new)))
-            rt = jnp.sqrt(_rows_sqnorm(Y - phi_true.mv(X_new)))
-        else:
-            # skip the residual matvecs (one of them streams dense f32 Φ —
-            # benchmarks disable the trace so the loop is pure algorithm traffic)
-            rq = rt = jnp.full((X.shape[0],), jnp.nan, jnp.float32)
-        return X_new, (rq, rt, mu, changed, n_bt)
+    X0, iteration = _solver_setup(
+        phi, Y, s, bits_phi, bits_y, key, requantize, backend, threshold,
+        c, shrink_k, max_backtracks, real_signal, nonneg, with_trace,
+        scale_granularity, group_size)
 
     if not early_exit:
         X_final, (rq, rt, mus, ch, bt) = jax.lax.scan(
@@ -398,6 +419,227 @@ def _qniht_core(
         x=X_final,
         trace=IHTTrace(resid_q=rq, resid_true=rt, mu=mus, support_changed=ch, backtracks=bt),
     )
+
+
+class SolverState(NamedTuple):
+    """Complete solver state at an iteration boundary — the checkpoint unit.
+
+    A registered pytree (NamedTuple of arrays) holding everything the
+    iteration map consumes, so ``solver_segment`` can stop after any iteration
+    and a later process can resume **bit-identically** — the acceptance bar of
+    the preemption-safe recovery path (:mod:`repro.launch.resilience`):
+
+    * ``k``       — () int32, the next iteration index (segments resume here).
+    * ``X``       — (B, N) iterate. The support Γ is implicit: ``|X| > 0``
+      (plus the top-s-of-gradient rule at ``X == 0``), exactly as the
+      iteration body derives it.
+    * ``done``    — (B,) per-row convergence flags (the ``early_exit`` state).
+    * ``streak``  — (B,) consecutive sub-``exit_tol`` update counters (the
+      freeze rule's patience state; all-zero when ``exit_tol == 0``).
+    * ``last``    — the last emitted per-row trace row (µ, backtrack counts,
+      residuals): what frozen rows re-emit and the stationary tail-fill uses.
+    * ``trace``   — (n_iters, B) per-iteration buffers, written for
+      iterations ``< k``.
+    * ``Y``       — (B, M) raw observations. ŷ and the Φ̂ draws are
+      *recomputed* from (``Y``, ``key``) each segment rather than stored —
+      they are deterministic functions of both, which keeps the checkpoint
+      minimal and the bit-identity contract trivially segmentation-invariant.
+    * ``key``     — the run's PRNG key, replicated.
+
+    Every per-row leaf has the batch axis leading (``trace`` second), so the
+    sharded path splits the whole state by rows with one spec tree, and a
+    checkpoint written at one mesh width restores onto any other (elastic
+    resume — pad rows are bitwise fixed points, see
+    :func:`repro.parallel.batch.pad_state`).
+    """
+
+    k: jax.Array
+    X: jax.Array
+    done: jax.Array
+    streak: jax.Array
+    last: IHTTrace
+    trace: IHTTrace
+    Y: jax.Array
+    key: jax.Array
+
+
+def solver_init(
+    phi, Y: jax.Array, s: int, n_iters: int = 50, *,
+    bits_phi: Optional[int] = None, bits_y: Optional[int] = None,
+    key: Optional[jax.Array] = None, requantize: str = "pair",
+    backend: str = "dense", threshold: str = "topk", c: float = 0.01,
+    shrink_k: float = 2.0, max_backtracks: int = 30, real_signal: bool = False,
+    nonneg: bool = False, with_trace: bool = True,
+    scale_granularity: str = "per_tensor", group_size: Optional[int] = None,
+    early_exit: bool = False, exit_tol: float = 0.0,
+) -> SolverState:
+    """Fresh :class:`SolverState` for ``qniht_batch(phi, Y, s, n_iters, ...)``
+    run in segments. Same validation and defaults as :func:`qniht_batch`
+    (``unroll`` excepted: segments run a ``lax.while_loop``, which cannot
+    unroll). Composable under :func:`jax.eval_shape` — that is how the
+    checkpoint restore target is built without touching data."""
+    if Y.ndim != 2:
+        raise ValueError("solver_init expects Y of shape (B, M); wrap one y as y[None]")
+    _validate(phi, bits_phi, bits_y, key, requantize, backend, threshold,
+              real_signal, scale_granularity, group_size, early_exit, exit_tol)
+    B = Y.shape[0]
+    x_dtype = jnp.float32 if real_signal else (
+        phi.dtype if jnp.issubdtype(jnp.dtype(phi.dtype), jnp.complexfloating)
+        else jnp.float32
+    )
+    nanrow = jnp.full((B,), jnp.nan, jnp.float32)
+    last = IHTTrace(resid_q=nanrow, resid_true=nanrow,
+                    mu=jnp.zeros((B,), jnp.float32),
+                    support_changed=jnp.zeros((B,), bool),
+                    backtracks=jnp.zeros((B,), jnp.int32))
+    return SolverState(
+        k=jnp.zeros((), jnp.int32),
+        X=jnp.zeros((B, phi.shape[1]), x_dtype),
+        done=jnp.zeros((B,), bool),
+        streak=jnp.zeros((B,), jnp.int32),
+        last=last,
+        trace=jax.tree_util.tree_map(
+            lambda o: jnp.zeros((n_iters,) + o.shape, o.dtype), last),
+        Y=Y,
+        key=key if key is not None else jax.random.PRNGKey(0),
+    )
+
+
+# solver_segment statics: n_iters lives in the trace buffer shape and unroll
+# is scan-only, otherwise identical to _STATIC (shared spelling, not copied)
+_SEG_STATIC = (
+    "n_steps", "s", "bits_phi", "bits_y", "requantize", "backend", "threshold",
+    "c", "shrink_k", "max_backtracks", "real_signal", "nonneg", "with_trace",
+    "scale_granularity", "group_size", "early_exit", "exit_tol",
+)
+
+# one source of truth for the solver-config defaults of the segmented entry
+# points (solver_segment keyword defaults and the sharded/resilient drivers)
+_SEG_DEFAULTS = dict(
+    bits_phi=None, bits_y=None, requantize="pair", backend="dense",
+    threshold="topk", c=0.01, shrink_k=2.0, max_backtracks=30,
+    real_signal=False, nonneg=False, with_trace=True,
+    scale_granularity="per_tensor", group_size=None, early_exit=False,
+    exit_tol=0.0,
+)
+
+
+def _segment_core(
+    phi, state: SolverState, *, n_steps, s, bits_phi, bits_y, requantize,
+    backend, threshold, c, shrink_k, max_backtracks, real_signal, nonneg,
+    with_trace, scale_granularity, group_size, early_exit, exit_tol,
+) -> SolverState:
+    """Advance ``state`` by up to ``n_steps`` iterations (fewer only at the
+    horizon). The loop body is the same ``iteration`` closure the one-shot
+    core runs — segment boundaries are exact restart points because every
+    stochastic input is re-derived from (``Y``, ``key``) and the body consumes
+    the global index ``k``.
+
+    Early exit inside a segment: once every row is done, the remaining rows of
+    the segment's trace range are *filled* with the stationary row instead of
+    computed — bit-identical by the fixed-point/freeze argument in
+    :func:`_qniht_core` — so ``k`` always lands on ``min(k + n_steps,
+    n_iters)``, uniformly across shards. That keeps ``k`` replicated (the
+    sharded path's out-spec) and the state independent of the mesh width it
+    was computed on, which is what makes elastic resume possible.
+    """
+    n_iters = state.trace.mu.shape[0]
+    _, iteration = _solver_setup(
+        phi, state.Y, s, bits_phi, bits_y, state.key, requantize, backend,
+        threshold, c, shrink_k, max_backtracks, real_signal, nonneg, with_trace,
+        scale_granularity, group_size)
+    k_end = jnp.minimum(state.k + n_steps, n_iters)
+
+    def body(st):
+        k, X, done, streak, last, bufs = st
+        X_c, outs_c = iteration(X, k)
+        if exit_tol == 0.0:
+            # a done row recomputes itself identically (fixed point) — no
+            # masking needed; see _qniht_core
+            X_new, outs = X_c, outs_c
+        else:
+            X_new = jnp.where(done[:, None], X, X_c)
+            outs = jax.tree_util.tree_map(
+                lambda p, n_: jnp.where(done, p, n_), tuple(last), outs_c)
+        bufs = jax.tree_util.tree_map(
+            lambda buf, o: jax.lax.dynamic_update_index_in_dim(buf, o, k, 0),
+            tuple(bufs), outs)
+        if not early_exit:
+            newly = jnp.zeros_like(done)
+        elif exit_tol == 0.0:
+            newly = jnp.all(X_new == X, axis=-1)
+        else:
+            small = _rows_sqnorm(X_new - X) <= (
+                exit_tol * exit_tol) * _rows_sqnorm(X_new)
+            streak = jnp.where(small, streak + 1, 0)
+            newly = streak >= _EXIT_PATIENCE
+        return k + 1, X_new, done | newly, streak, IHTTrace(*outs), IHTTrace(*bufs)
+
+    def cond(st):
+        k, _, done, _, _, _ = st
+        live = k < k_end
+        return live & ~jnp.all(done) if early_exit else live
+
+    k_stop, X, done, streak, last, bufs = jax.lax.while_loop(
+        cond, body,
+        (state.k, state.X, state.done, state.streak, state.last, state.trace))
+    if early_exit:
+        # rows the early exit skipped would all re-emit the stationary row
+        rows = jnp.arange(n_iters)[:, None]
+        fill = (rows >= k_stop) & (rows < k_end)
+        bufs = jax.tree_util.tree_map(
+            lambda buf, o: jnp.where(fill, o[None, :], buf), bufs, last)
+    return SolverState(k=k_end, X=X, done=done, streak=streak, last=last,
+                       trace=bufs, Y=state.Y, key=state.key)
+
+
+_segment_jit = partial(jax.jit, static_argnames=_SEG_STATIC)(_segment_core)
+
+
+def solver_segment(
+    phi, state: SolverState, n_steps: int, *, s: int,
+    bits_phi: Optional[int] = None, bits_y: Optional[int] = None,
+    requantize: str = "pair", backend: str = "dense", threshold: str = "topk",
+    c: float = 0.01, shrink_k: float = 2.0, max_backtracks: int = 30,
+    real_signal: bool = False, nonneg: bool = False, with_trace: bool = True,
+    scale_granularity: str = "per_tensor", group_size: Optional[int] = None,
+    early_exit: bool = False, exit_tol: float = 0.0,
+) -> SolverState:
+    """Run one segment of ``n_steps`` iterations (single-process path).
+
+    Contract: for any split of ``[0, n_iters)`` into segments,
+    ``solver_result`` of the final state is **bit-identical** to
+    ``qniht_batch(phi, Y, ...)`` with the same arguments — the deterministic
+    iteration map makes every segment boundary an exact restart point. The
+    solver configuration must be passed identically to every call (it is
+    static; :mod:`repro.launch.resilience` owns that bookkeeping and persists
+    the state between segments through :mod:`repro.train.checkpoint`). The
+    sharded equivalent is :func:`repro.parallel.batch.sharded_segment_run`.
+    """
+    if n_steps < 1:
+        raise ValueError(f"n_steps must be >= 1, got {n_steps}")
+    _validate(phi, bits_phi, bits_y, state.key, requantize, backend, threshold,
+              real_signal, scale_granularity, group_size, early_exit, exit_tol)
+    return _segment_jit(
+        phi, state, n_steps=n_steps, s=s, bits_phi=bits_phi, bits_y=bits_y,
+        requantize=requantize, backend=backend, threshold=threshold, c=c,
+        shrink_k=shrink_k, max_backtracks=max_backtracks,
+        real_signal=real_signal, nonneg=nonneg, with_trace=with_trace,
+        scale_granularity=scale_granularity, group_size=group_size,
+        early_exit=early_exit, exit_tol=exit_tol)
+
+
+def solver_result(state: SolverState) -> IHTResult:
+    """Wrap a :class:`SolverState` as the usual :class:`IHTResult`.
+
+    Trace rows at iterations ``>= state.k`` (a run finalized before the
+    horizon — e.g. a preempted partial result) are filled with the stationary
+    last row, matching the early-exit tail-fill convention."""
+    n_iters = state.trace.mu.shape[0]
+    tail = jnp.arange(n_iters)[:, None] >= state.k
+    trace = jax.tree_util.tree_map(
+        lambda buf, o: jnp.where(tail, o[None, :], buf), state.trace, state.last)
+    return IHTResult(x=state.X, trace=trace)
 
 
 _STATIC = (

@@ -92,15 +92,40 @@ from repro.sensing import (
 )
 
 
-def _batch_solver(devices, kw):
+def _batch_solver(devices, kw, ckpt=None):
     """qniht_batch, or its mesh-sharded twin when ``--devices`` asks for one
     (bit-identical per item — see repro.parallel.batch). ``early_exit`` is on
     whenever the per-iteration operators are stationary (it is invalid under
-    requantize='pair', which redraws Φ̂ each iteration)."""
+    requantize='pair', which redraws Φ̂ each iteration).
+
+    ``ckpt`` (``--checkpoint-dir``): route the solve through the segmented
+    checkpointed driver (:func:`repro.launch.resilience.recover_resilient`) —
+    same arguments, bit-identical result, preemption-safe."""
+    early = not (kw.get("bits_phi") and kw.get("requantize", "pair") == "pair")
+    if ckpt:
+        from repro.launch.resilience import recover_resilient
+
+        def run(phi, Y, s, n_iters, **kws):
+            if devices:
+                kws.setdefault("early_exit", early)
+            return recover_resilient(phi, Y, s, n_iters,
+                                     n_devices=devices or None, verbose=True,
+                                     **ckpt, **kws)
+        return run
     if devices:
-        early = not (kw.get("bits_phi") and kw.get("requantize", "pair") == "pair")
         return partial(qniht_batch_sharded, n_devices=devices, early_exit=early)
     return qniht_batch
+
+
+def _single_via_ckpt(ckpt, phi, y, s, n_iters, **kw):
+    """One-problem solve through the segmented checkpointed driver (wraps the
+    observation as a 1-row batch, exactly what ``qniht`` itself does)."""
+    from repro.launch.resilience import recover_resilient
+
+    res = recover_resilient(phi, y[None, :], s, n_iters, verbose=True,
+                            **ckpt, **kw)
+    return type(res)(x=res.x[0],
+                     trace=jax.tree_util.tree_map(lambda t: t[:, 0], res.trace))
 
 
 def _solver_kwargs(backend, bits_phi, bits_y, key, requantize,
@@ -124,7 +149,8 @@ def _solver_kwargs(backend, bits_phi, bits_y, key, requantize,
 
 
 def recover_lofar(cs, backend, bits_phi, bits_y, key, requantize="pair", batch=0,
-                  granularity="per_tensor", group_size=None, devices=None):
+                  granularity="per_tensor", group_size=None, devices=None,
+                  ckpt=None):
     st = Station(n_antennas=cs.n_antennas, seed=cs.seed)
     phi = measurement_matrix(st, cs.resolution, cs.extent)
     kw = _solver_kwargs(backend, bits_phi, bits_y, key, requantize,
@@ -136,8 +162,8 @@ def recover_lofar(cs, backend, bits_phi, bits_y, key, requantize="pair", batch=0
                        for b, x in enumerate(skies)])
         X_true = jnp.stack(skies)
         t0 = time.time()
-        res = _batch_solver(devices, kw)(phi, Y, cs.n_sources, cs.n_iters,
-                                         real_signal=True, nonneg=True, **kw)
+        res = _batch_solver(devices, kw, ckpt)(phi, Y, cs.n_sources, cs.n_iters,
+                                               real_signal=True, nonneg=True, **kw)
         jax.block_until_ready(res.x)
         wall = time.time() - t0
         rel = [float(relative_error(res.x[b], X_true[b])) for b in range(batch)]
@@ -146,7 +172,10 @@ def recover_lofar(cs, backend, bits_phi, bits_y, key, requantize="pair", batch=0
     x = make_sky(cs.resolution, cs.n_sources, key, min_sep=cs.min_sep)
     y, _ = visibilities(phi, x, cs.snr_db, key)
     t0 = time.time()
-    if backend == "dense":
+    if ckpt:
+        res = _single_via_ckpt(ckpt, phi, y, cs.n_sources, cs.n_iters,
+                               real_signal=True, nonneg=True, **kw)
+    elif backend == "dense":
         res = niht(phi, y, cs.n_sources, cs.n_iters, real_signal=True, nonneg=True)
     else:
         res = qniht(phi, y, cs.n_sources, cs.n_iters, real_signal=True,
@@ -165,7 +194,8 @@ def recover_lofar(cs, backend, bits_phi, bits_y, key, requantize="pair", batch=0
 
 
 def recover_gaussian(g, backend, bits_phi, bits_y, key, requantize="pair", batch=0,
-                     granularity="per_tensor", group_size=None, devices=None):
+                     granularity="per_tensor", group_size=None, devices=None,
+                     ckpt=None):
     prob = make_gaussian_problem(g.m, g.n, g.s, 20.0, key)
     kw = _solver_kwargs(backend, bits_phi, bits_y, key, requantize,
                         granularity, group_size)
@@ -177,19 +207,22 @@ def recover_gaussian(g, backend, bits_phi, bits_y, key, requantize="pair", batch
         Y = jnp.stack([p.y for p in probs])
         X_true = jnp.stack([p.x_true for p in probs])
         t0 = time.time()
-        res = _batch_solver(devices, kw)(prob.phi, Y, g.s, g.n_iters, **kw)
+        res = _batch_solver(devices, kw, ckpt)(prob.phi, Y, g.s, g.n_iters, **kw)
         jax.block_until_ready(res.x)
         rel = [float(relative_error(res.x[b], X_true[b])) for b in range(batch)]
         return {"batch": batch, "rel_error_mean": sum(rel) / batch,
                 "rel_error_max": max(rel), "wall_s": time.time() - t0}
-    res = (niht(prob.phi, prob.y, g.s, g.n_iters) if backend == "dense" else
-           qniht(prob.phi, prob.y, g.s, g.n_iters, **kw))
+    if ckpt:
+        res = _single_via_ckpt(ckpt, prob.phi, prob.y, g.s, g.n_iters, **kw)
+    else:
+        res = (niht(prob.phi, prob.y, g.s, g.n_iters) if backend == "dense" else
+               qniht(prob.phi, prob.y, g.s, g.n_iters, **kw))
     return {"rel_error": float(relative_error(res.x, prob.x_true)),
             "support_recovery": float(support_recovery(res.x, prob.x_true, g.s))}
 
 
 def recover_mri(cfg, bits_y, key, batch=0, granularity="per_tensor", n_bands=None,
-                sparsity_basis=None, devices=None):
+                sparsity_basis=None, devices=None, ckpt=None):
     """Matrix-free §5 workload: image-space PSNR/relative error of the
     recovered phantom. ``bits_y=None`` → full-precision observations (the
     32-bit baseline); ``batch`` recovers B randomized brain phantoms sharing
@@ -239,7 +272,7 @@ def recover_mri(cfg, bits_y, key, batch=0, granularity="per_tensor", n_bands=Non
                                 cfg.snr_db, jax.random.fold_in(key, batch))
         Y = prep(Y)
         t0 = time.time()
-        res = _batch_solver(devices, kw)(prob.op, Y, cfg.n_sparse, cfg.n_iters, **kw)
+        res = _batch_solver(devices, kw, ckpt)(prob.op, Y, cfg.n_sparse, cfg.n_iters, **kw)
         jax.block_until_ready(res.x)
         wall = time.time() - t0
         Img_hat = prob.to_image(res.x)
@@ -252,7 +285,10 @@ def recover_mri(cfg, bits_y, key, batch=0, granularity="per_tensor", n_bands=Non
                 "rel_error_max": max(rel), "wall_s": wall}
     y = prep(prob.y)
     t0 = time.time()
-    res = qniht(prob.op, y, cfg.n_sparse, cfg.n_iters, **kw)
+    if ckpt:
+        res = _single_via_ckpt(ckpt, prob.op, y, cfg.n_sparse, cfg.n_iters, **kw)
+    else:
+        res = qniht(prob.op, y, cfg.n_sparse, cfg.n_iters, **kw)
     jax.block_until_ready(res.x)
     wall = time.time() - t0
     img_hat = prob.to_image(res.x)
@@ -311,7 +347,25 @@ def main(argv=None):
                          "phantom via the composed Φ = P_Ω F W† "
                          "(default: the config's sparsity_basis)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="run the solve in checkpointed segments persisted to "
+                         "this directory (preemption-safe: SIGTERM/SIGINT "
+                         "writes a final checkpoint and exits cleanly; the "
+                         "result is bit-identical to an unsegmented run)")
+    ap.add_argument("--ckpt-every", type=int, default=10,
+                    help="iterations per segment/checkpoint (with --checkpoint-dir)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest complete checkpoint in "
+                         "--checkpoint-dir; works across --devices widths "
+                         "(elastic) and falls back to a fresh start when the "
+                         "directory has no restorable checkpoint")
     args = ap.parse_args(argv)
+    if (args.resume or args.ckpt_every != 10) and not args.checkpoint_dir:
+        ap.error("--resume/--ckpt-every need --checkpoint-dir")
+    if args.ckpt_every < 1:
+        ap.error("--ckpt-every must be >= 1")
+    ckpt = (dict(checkpoint_dir=args.checkpoint_dir, ckpt_every=args.ckpt_every,
+                 resume=args.resume) if args.checkpoint_dir else None)
 
     if args.devices and not args.batch:
         ap.error("--devices shards the batch axis; combine it with --batch B")
@@ -329,40 +383,47 @@ def main(argv=None):
     gran = args.scale_granularity or "per_tensor"
     if args.sparsity_basis and not args.config.startswith("mri"):
         ap.error("--sparsity-basis selects the MRI recovery model; use an mri config")
-    if args.config.startswith("lofar"):
-        if gran == "per_band":
-            ap.error("per_band is the MRI observation granularity; use an mri config")
-        cs = {"lofar": LOFAR_CONFIG, "lofar-bench": LOFAR_BENCH,
-              "lofar-smoke": LOFAR_SMOKE}[args.config]
-        out = recover_lofar(cs, backend, args.bits_phi, args.bits_y, key,
-                            args.requantize, args.batch, gran, args.group_size,
-                            devices=args.devices)
-        label = ("32bit" if backend == "dense"
-                 else f"{args.bits_phi}&{args.bits_y}bit[{backend}]")
-    elif args.config.startswith("mri"):
-        if gran in ("per_channel", "per_block"):
-            ap.error("the MRI Φ is matrix-free (nothing packed to scale); "
-                     "use --scale-granularity per_band for the observations")
-        cs = {"mri": MRI_CONFIG, "mri-bench": MRI_BENCH,
-              "mri-smoke": MRI_SMOKE, "mri-wavelet": MRI_WAVELET,
-              "mri-wavelet-bench": MRI_WAVELET_BENCH,
-              "mri-wavelet-smoke": MRI_WAVELET_SMOKE}[args.config]
-        bits_y = None if backend == "dense" else args.bits_y
-        gran = args.scale_granularity or cs.scale_granularity
-        out = recover_mri(cs, bits_y, key, args.batch, gran, args.group_size,
-                          sparsity_basis=args.sparsity_basis, devices=args.devices)
-        basis = args.sparsity_basis or cs.sparsity_basis
-        label = ("32bit[matrix-free]" if bits_y is None
-                 else f"y@{bits_y}bit[{gran},matrix-free]") + f"[{basis}]"
-    else:
-        if gran == "per_band":
-            ap.error("per_band is the MRI observation granularity; use an mri config")
-        g = GAUSS_CONFIG if args.config == "gaussian" else GAUSS_SMOKE
-        out = recover_gaussian(g, backend, args.bits_phi, args.bits_y, key,
-                               args.requantize, args.batch, gran, args.group_size,
-                               devices=args.devices)
-        label = ("32bit" if backend == "dense"
-                 else f"{args.bits_phi}&{args.bits_y}bit[{backend}]")
+    from repro.launch.resilience import Preempted
+
+    try:
+        if args.config.startswith("lofar"):
+            if gran == "per_band":
+                ap.error("per_band is the MRI observation granularity; use an mri config")
+            cs = {"lofar": LOFAR_CONFIG, "lofar-bench": LOFAR_BENCH,
+                  "lofar-smoke": LOFAR_SMOKE}[args.config]
+            out = recover_lofar(cs, backend, args.bits_phi, args.bits_y, key,
+                                args.requantize, args.batch, gran, args.group_size,
+                                devices=args.devices, ckpt=ckpt)
+            label = ("32bit" if backend == "dense"
+                     else f"{args.bits_phi}&{args.bits_y}bit[{backend}]")
+        elif args.config.startswith("mri"):
+            if gran in ("per_channel", "per_block"):
+                ap.error("the MRI Φ is matrix-free (nothing packed to scale); "
+                         "use --scale-granularity per_band for the observations")
+            cs = {"mri": MRI_CONFIG, "mri-bench": MRI_BENCH,
+                  "mri-smoke": MRI_SMOKE, "mri-wavelet": MRI_WAVELET,
+                  "mri-wavelet-bench": MRI_WAVELET_BENCH,
+                  "mri-wavelet-smoke": MRI_WAVELET_SMOKE}[args.config]
+            bits_y = None if backend == "dense" else args.bits_y
+            gran = args.scale_granularity or cs.scale_granularity
+            out = recover_mri(cs, bits_y, key, args.batch, gran, args.group_size,
+                              sparsity_basis=args.sparsity_basis,
+                              devices=args.devices, ckpt=ckpt)
+            basis = args.sparsity_basis or cs.sparsity_basis
+            label = ("32bit[matrix-free]" if bits_y is None
+                     else f"y@{bits_y}bit[{gran},matrix-free]") + f"[{basis}]"
+        else:
+            if gran == "per_band":
+                ap.error("per_band is the MRI observation granularity; use an mri config")
+            g = GAUSS_CONFIG if args.config == "gaussian" else GAUSS_SMOKE
+            out = recover_gaussian(g, backend, args.bits_phi, args.bits_y, key,
+                                   args.requantize, args.batch, gran, args.group_size,
+                                   devices=args.devices, ckpt=ckpt)
+            label = ("32bit" if backend == "dense"
+                     else f"{args.bits_phi}&{args.bits_y}bit[{backend}]")
+    except Preempted as e:
+        print(f"[recover] {e}; restart with --resume to continue", flush=True)
+        return
     print(f"[recover] {args.config} {label}: " +
           " ".join(f"{k}={v if not isinstance(v, float) else round(v, 4)}"
                    for k, v in out.items()))

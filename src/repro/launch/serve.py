@@ -70,12 +70,25 @@ def build_stream(cfg, key):
     return base.phi, chunks, truths
 
 
-def serve(cfg, devices=None, chunks=None):
-    """Run the stream through a BatchServer; returns a metrics dict."""
+def serve(cfg, devices=None, chunks=None, journal_dir=None, resume=False):
+    """Run the stream through a BatchServer; returns a metrics dict.
+
+    With ``journal_dir``, each chunk is write-ahead journaled and the loop
+    runs under a :class:`~repro.train.fault.PreemptionGuard`: a SIGTERM/SIGINT
+    finishes (and journals) the in-flight chunk, then stops cleanly. A
+    restarted run with ``resume=True`` re-presents the same deterministic
+    stream, drains journaled results and solves the rest — the per-chunk
+    ``x_digest`` lines it prints are bit-identical to an uninterrupted run's
+    (the fault-injection tests assert exactly that).
+    """
+    import hashlib
+
     import jax
+    import numpy as np
 
     from repro.core import relative_error
     from repro.parallel import BatchServer, make_batch_mesh
+    from repro.train.fault import PreemptionGuard
 
     key = jax.random.PRNGKey(cfg.seed)
     if chunks is not None:
@@ -88,22 +101,35 @@ def serve(cfg, devices=None, chunks=None):
     elif cfg.bits_y:
         kw = dict(bits_y=cfg.bits_y)
     srv = BatchServer(phi, cfg.s, cfg.n_iters, mesh=mesh, key=key,
-                      exit_tol=cfg.exit_tol, **kw)
+                      exit_tol=cfg.exit_tol, journal_dir=journal_dir,
+                      resume=resume, **kw)
 
     walls, rels_easy, rels_hard = [], [], []
-    for ci, Y in enumerate(stream):
-        t0 = time.time()
-        res = srv.submit(Y, jax.random.fold_in(key, 1000 + ci))
-        jax.block_until_ready(res.x)
-        walls.append(time.time() - t0)
-        for b in range(cfg.chunk):
-            rel = float(relative_error(res.x[b], truths[ci][b]))
-            (rels_hard if b < cfg.n_hard else rels_easy).append(rel)
+    preempted = None
+    with PreemptionGuard() as guard:
+        for ci, Y in enumerate(stream):
+            t0 = time.time()
+            res = srv.submit(Y, jax.random.fold_in(key, 1000 + ci))
+            jax.block_until_ready(res.x)
+            walls.append(time.time() - t0)
+            digest = hashlib.sha256(np.asarray(res.x).tobytes()).hexdigest()[:16]
+            print(f"[serve] chunk {ci} x_digest={digest}", flush=True)
+            for b in range(cfg.chunk):
+                rel = float(relative_error(res.x[b], truths[ci][b]))
+                (rels_hard if b < cfg.n_hard else rels_easy).append(rel)
+            if guard.requested and ci + 1 < len(stream):
+                preempted = ci + 1
+                print(f"[serve] preempted after chunk {ci} "
+                      f"(journal has {ci + 1}/{len(stream)} chunks)", flush=True)
+                break
     steady = walls[1:] if len(walls) > 1 else walls
     items_per_s = cfg.chunk / (sum(steady) / len(steady))
     return {
         "devices": srv.n_shards,
         "chunks": len(stream),
+        "chunks_served": srv.n_chunks,
+        "chunks_drained": srv.n_drained,
+        "preempted_after": preempted,
         "chunk_rows": cfg.chunk,
         "compile_chunk_s": round(walls[0], 3),
         "steady_chunk_s": round(sum(steady) / len(steady), 3),
@@ -120,16 +146,26 @@ def main(argv=None):
                                  formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--config", default="serve-gaussian-smoke",
                     choices=["serve-gaussian", "serve-gaussian-packed",
-                             "serve-gaussian-smoke"])
+                             "serve-gaussian-smoke", "serve-gaussian-fault",
+                             "serve-gaussian-fault-packed"])
     ap.add_argument("--devices", type=int, default=None,
                     help="mesh width (default: all visible devices); on CPU "
                          "also forces that many host devices when set before "
                          "jax initializes")
     ap.add_argument("--chunks", type=int, default=None,
                     help="override the config's number of stream chunks")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="write-ahead journal directory: each chunk's inputs "
+                         "are journaled before its solve and the result after, "
+                         "and SIGTERM/SIGINT stops cleanly at a chunk boundary")
+    ap.add_argument("--resume", action="store_true",
+                    help="drain already-journaled chunk results from "
+                         "--checkpoint-dir instead of re-solving them")
     args = ap.parse_args(argv)
     if args.chunks is not None and args.chunks < 1:
         ap.error("--chunks must be >= 1")
+    if args.resume and not args.checkpoint_dir:
+        ap.error("--resume needs --checkpoint-dir")
 
     if args.devices:
         # must happen before the first jax call in this process
@@ -137,11 +173,13 @@ def main(argv=None):
 
         force_host_devices(args.devices)
 
-    from repro.configs.serve_batch import CONFIG, PACKED, SMOKE
+    from repro.configs.serve_batch import CONFIG, FAULT, FAULT_PACKED, PACKED, SMOKE
 
     cfg = {"serve-gaussian": CONFIG, "serve-gaussian-packed": PACKED,
-           "serve-gaussian-smoke": SMOKE}[args.config]
-    out = serve(cfg, args.devices, args.chunks)
+           "serve-gaussian-smoke": SMOKE, "serve-gaussian-fault": FAULT,
+           "serve-gaussian-fault-packed": FAULT_PACKED}[args.config]
+    out = serve(cfg, args.devices, args.chunks,
+                journal_dir=args.checkpoint_dir, resume=args.resume)
     print(f"[serve] {cfg.name}: " +
           " ".join(f"{k}={v}" for k, v in out.items()))
 

@@ -10,8 +10,13 @@ from repro.parallel.batch import (
     BatchServer,
     make_batch_mesh,
     pad_batch,
+    pad_state,
     sharded_qniht_run,
+    sharded_segment_run,
+    state_shardings,
+    strip_state,
 )
+from repro.parallel.journal import ChunkJournal
 from repro.parallel.collectives import (
     fake_grad_compression,
     make_qgrad_allreduce,
@@ -27,9 +32,14 @@ from repro.parallel.sharding import (
 
 __all__ = [
     "BatchServer",
+    "ChunkJournal",
     "make_batch_mesh",
     "pad_batch",
+    "pad_state",
     "sharded_qniht_run",
+    "sharded_segment_run",
+    "state_shardings",
+    "strip_state",
     "fake_grad_compression",
     "make_qgrad_allreduce",
     "quantized_allreduce_mean",

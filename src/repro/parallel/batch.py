@@ -46,15 +46,26 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 try:  # JAX ≤ 0.4.x ships shard_map under experimental
     from jax.experimental.shard_map import shard_map as _shard_map
 except ImportError:  # newer JAX promoted it to the top level
     _shard_map = jax.shard_map
 
-from repro.core.niht import _STATIC, IHTResult, IHTTrace, _qniht_core, _validate
+from repro.core.niht import (
+    _SEG_DEFAULTS,
+    _SEG_STATIC,
+    _STATIC,
+    IHTResult,
+    IHTTrace,
+    SolverState,
+    _qniht_core,
+    _segment_core,
+    _validate,
+)
 from repro.core.operators import PackedStreamingOperator
+from repro.parallel.journal import ChunkJournal
 from repro.quant.formats import as_granularity
 
 BATCH_AXIS = "batch"
@@ -163,6 +174,122 @@ def sharded_qniht_run(phi, Y, key, *, mesh=None, n_devices=None, **statics) -> I
     )
 
 
+# SolverState sharding: every per-row leaf splits by rows (trace second axis),
+# the iteration index and PRNG key are replicated — _segment_core guarantees k
+# lands on min(k + n_steps, n_iters) on every shard (early-exited shards FILL
+# their remaining trace rows), so the replicated out-spec is genuine.
+_SEG_SPECS = SolverState(
+    k=P(), X=P(BATCH_AXIS), done=P(BATCH_AXIS), streak=P(BATCH_AXIS),
+    last=IHTTrace(*([P(BATCH_AXIS)] * 5)),
+    trace=IHTTrace(*([P(None, BATCH_AXIS)] * 5)),
+    Y=P(BATCH_AXIS), key=P(),
+)
+
+
+def pad_state(state: SolverState, n_shards: int) -> tuple[SolverState, int]:
+    """Zero-pad a :class:`SolverState`'s rows up to a multiple of ``n_shards``.
+
+    Returns ``(state_padded, B)``. Pad rows are ``Y = 0, X = 0, done = True``:
+    x = 0 is a bitwise fixed point of the iteration map for y = 0, so a pad
+    row never changes, never delays a shard under ``early_exit``, and — the
+    elastic-resume property — padding a state to ANY width and stripping it
+    back is the identity on the real rows. A checkpoint is always saved
+    stripped (:func:`strip_state`), so it restores onto any mesh.
+    """
+    b = state.Y.shape[0]
+    b_pad = -(-b // n_shards) * n_shards
+    if b_pad == b:
+        return state, b
+    p = b_pad - b
+
+    def rows(a, fill=0):
+        pad = jnp.full((p,) + a.shape[1:], fill, a.dtype)
+        return jnp.concatenate([a, pad], axis=0)
+
+    return SolverState(
+        k=state.k,
+        X=rows(state.X),
+        done=rows(state.done, True),
+        streak=rows(state.streak),
+        last=jax.tree_util.tree_map(rows, state.last),
+        trace=jax.tree_util.tree_map(
+            lambda t: jnp.concatenate(
+                [t, jnp.zeros(t.shape[:1] + (p,) + t.shape[2:], t.dtype)], axis=1),
+            state.trace),
+        Y=rows(state.Y),
+        key=state.key,
+    ), b
+
+
+def strip_state(state: SolverState, b: int) -> SolverState:
+    """Drop pad rows again (inverse of :func:`pad_state` on the real rows)."""
+    if state.Y.shape[0] == b:
+        return state
+    return SolverState(
+        k=state.k, X=state.X[:b], done=state.done[:b], streak=state.streak[:b],
+        last=jax.tree_util.tree_map(lambda t: t[:b], state.last),
+        trace=jax.tree_util.tree_map(lambda t: t[:, :b], state.trace),
+        Y=state.Y[:b], key=state.key,
+    )
+
+
+def state_shardings(mesh: Mesh) -> SolverState:
+    """NamedSharding tree placing a (padded) :class:`SolverState` on ``mesh``
+    per ``_SEG_SPECS`` — the elastic re-placement step: a state computed on
+    (or restored from a checkpoint written under) one mesh is explicitly
+    re-sharded for the target mesh before the next segment."""
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), _SEG_SPECS,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+@partial(jax.jit, static_argnames=("mesh",) + _SEG_STATIC)
+def _sharded_segment_call(phi, state, *, mesh, n_steps, **statics):
+    fn = _shard_map(
+        lambda phi_, st: _segment_core(phi_, st, n_steps=n_steps, **statics),
+        mesh=mesh,
+        in_specs=(P(), _SEG_SPECS),
+        out_specs=_SEG_SPECS,
+        check_rep=False,  # lax.while_loop has no replication rule (JAX ≤ 0.4)
+    )
+    return fn(phi, state)
+
+
+def sharded_segment_run(phi, state: SolverState, n_steps: int, *, mesh=None,
+                        n_devices: Optional[int] = None, **statics) -> SolverState:
+    """:func:`repro.core.niht.solver_segment` with the state's rows split over
+    a ``("batch",)`` mesh — the segment engine of the preemption-safe driver
+    (:mod:`repro.launch.resilience`).
+
+    Pads the state to the mesh width, advances ``n_steps`` iterations under
+    ``shard_map``, and strips the padding again, so the returned (and
+    checkpointed) state never records the mesh it ran on: save at ``--devices
+    4``, resume at ``--devices 2`` — elastic by construction. Per-item
+    bit-identity vs the single-process :func:`solver_segment` carries the same
+    batching-invariance hedge as :func:`qniht_batch_sharded`, pinned bitwise
+    in the fault-injection tests.
+    """
+    if n_steps < 1:
+        raise ValueError(f"n_steps must be >= 1, got {n_steps}")
+    mesh = mesh if mesh is not None else make_batch_mesh(n_devices)
+    if set(mesh.axis_names) != {BATCH_AXIS}:
+        raise ValueError(
+            f"sharded_segment_run needs a 1-D ('{BATCH_AXIS}',) mesh, got axes "
+            f"{mesh.axis_names}; build one with repro.parallel.batch.make_batch_mesh")
+    statics = {**_SEG_DEFAULTS, **statics}
+    _validate(phi, statics["bits_phi"], statics["bits_y"], state.key,
+              statics["requantize"], statics["backend"], statics["threshold"],
+              statics["real_signal"], statics["scale_granularity"],
+              statics["group_size"], statics["early_exit"], statics["exit_tol"])
+    state_p, b = pad_state(state, mesh.devices.size)
+    # elastic: the incoming state may be committed to a different mesh width
+    # (a previous segment's placement, or a checkpoint restored as host
+    # arrays) — re-place it for THIS mesh before the sharded call
+    state_p = jax.device_put(state_p, state_shardings(mesh))
+    out = _sharded_segment_call(phi, state_p, mesh=mesh, n_steps=n_steps, **statics)
+    return strip_state(out, b)
+
+
 class BatchServer:
     """Multi-chunk sharded recovery service: the serving loop's driver.
 
@@ -186,6 +313,17 @@ class BatchServer:
     equals ``qniht_batch(phi, Y, ..., key=K)`` of the corresponding
     single-device backend configuration bit-for-bit (the parity test in
     ``tests/test_sharded_batch.py`` pins this).
+
+    Restartability: with ``journal_dir`` set, every chunk is write-ahead
+    journaled (:class:`repro.parallel.journal.ChunkJournal`) — inputs before
+    the solve, result after. A restarted server constructed with the same
+    ``journal_dir`` and ``resume=True``, fed the same deterministic stream,
+    **drains** already-completed chunks from disk (their solve is skipped;
+    ``n_drained`` counts them) and **replays** in-flight ones; the resulting
+    ``x`` stream is bit-identical to the uninterrupted run. Drained chunks
+    carry a NaN/zero placeholder trace (the journal persists ``x``, the
+    serving product — traces are diagnostics; re-run without a kill if you
+    need them).
     """
 
     def __init__(self, phi, s: int, n_iters: int = 50, *, mesh=None,
@@ -198,15 +336,21 @@ class BatchServer:
                  with_trace: bool = False,
                  scale_granularity: str = "per_tensor",
                  group_size: Optional[int] = None, early_exit: bool = True,
-                 exit_tol: float = 0.0, unroll: int = 1):
+                 exit_tol: float = 0.0, unroll: int = 1,
+                 journal_dir: Optional[str] = None, resume: bool = False):
         _validate(phi, bits_phi, bits_y, key, requantize, backend, threshold,
                   real_signal, scale_granularity, group_size, early_exit,
                   exit_tol, unroll)
+        if resume and journal_dir is None:
+            raise ValueError("resume=True needs a journal_dir to resume from")
         self.mesh = mesh if mesh is not None else make_batch_mesh(n_devices)
         self.key = key if key is not None else jax.random.PRNGKey(0)
         self.phi = phi
+        self.journal = ChunkJournal(journal_dir) if journal_dir is not None else None
+        self._resume = bool(resume)
         self.n_chunks = 0
         self.n_items = 0
+        self.n_drained = 0
         self._shapes: set = set()
         statics = dict(
             s=s, n_iters=n_iters, bits_phi=bits_phi, bits_y=bits_y,
@@ -228,14 +372,39 @@ class BatchServer:
         self._statics = statics
 
     def submit(self, Y: jax.Array, key: Optional[jax.Array] = None) -> IHTResult:
-        """Solve one (B, M) chunk; returns the usual :class:`IHTResult`."""
+        """Solve one (B, M) chunk; returns the usual :class:`IHTResult`.
+
+        With a journal: the chunk index is this server's submission count, the
+        inputs are journaled before the solve and the result after. Under
+        ``resume=True`` a chunk whose result is already journaled is drained
+        from disk instead of solved (see the class docstring).
+        """
         if Y.ndim != 2:
             raise ValueError(f"BatchServer.submit expects (B, M) chunks, got {Y.shape}")
-        self._shapes.add(Y.shape)
+        idx = self.n_chunks
         self.n_chunks += 1
         self.n_items += Y.shape[0]
-        return sharded_qniht_run(self.phi, Y, key if key is not None else self.key,
-                                 mesh=self.mesh, **self._statics)
+        k = key if key is not None else self.key
+        if self.journal is not None:
+            if self._resume and self.journal.is_complete(idx):
+                self.journal.verify_submit(idx, Y, k)
+                self.n_drained += 1
+                return IHTResult(x=jnp.asarray(self.journal.load_result(idx)),
+                                 trace=self._placeholder_trace(Y.shape[0]))
+            self.journal.record_submit(idx, Y, k)
+        self._shapes.add(Y.shape)
+        res = sharded_qniht_run(self.phi, Y, k, mesh=self.mesh, **self._statics)
+        if self.journal is not None:
+            self.journal.record_result(idx, res.x)
+        return res
+
+    def _placeholder_trace(self, b: int) -> IHTTrace:
+        """Trace shell for a drained chunk (the journal persists only x)."""
+        n_iters = self._statics["n_iters"]
+        nanbuf = jnp.full((n_iters, b), jnp.nan, jnp.float32)
+        return IHTTrace(resid_q=nanbuf, resid_true=nanbuf, mu=nanbuf,
+                        support_changed=jnp.zeros((n_iters, b), bool),
+                        backtracks=jnp.zeros((n_iters, b), jnp.int32))
 
     def serve(self, chunks, keys=None):
         """Drive a stream: yields one :class:`IHTResult` per chunk. ``keys``

@@ -1,0 +1,163 @@
+"""Write-ahead journal for chunked serving: restartable result streams.
+
+The serving loop (:class:`repro.parallel.batch.BatchServer`,
+``python -m repro.launch.serve``) consumes a deterministic stream of
+``(Y_chunk, key_chunk)`` pairs. To survive a kill mid-stream the server
+journals each chunk *before* solving it and each result *after*:
+
+Layout (one directory per serve run)::
+
+    <dir>/chunk_000003.y.npy      # submitted observations (written pre-solve)
+    <dir>/chunk_000003.key.npy    # the chunk's PRNG key (raw uint32 data)
+    <dir>/chunk_000003.meta.json  # shape/dtype + status=submitted (fsync'd)
+    <dir>/chunk_000003.x.npy      # solved iterate (atomic tmp -> rename)
+    <dir>/chunk_000003.done.json  # completion marker (fsync'd, written last)
+
+Chunk identity is **submission order**: the deterministic stream re-presents
+the same chunks in the same order on restart, and the journal's job is to
+classify each index as
+
+* **completed** — ``done.json`` present: the result is *drained* from disk
+  (the solve is skipped entirely; bit-identical by construction, the bytes
+  are literally the same).
+* **in-flight** — submitted but no ``done.json`` (the kill landed mid-solve):
+  the chunk is *replayed* — solved again from the journaled inputs, which the
+  deterministic solver maps to the identical result.
+* **unseen** — solved and journaled as normal.
+
+The submit record is verified against the re-presented chunk (bitwise Y and
+key equality) before draining or replaying: a stream that diverged from the
+journaled one is a configuration error, not a resume, and raises.
+
+Durability mirrors :mod:`repro.train.checkpoint`: metadata and markers are
+fsync'd and results are published by atomic rename, so a torn write can only
+lose the *marker* — which safely demotes a completed chunk to in-flight
+(it gets re-solved, to the same bytes) — never publish a torn result.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["ChunkJournal"]
+
+
+def _fsync_dir(path: str) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _write_json_durable(path: str, obj) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(tmp, path)
+    _fsync_dir(os.path.dirname(path))
+
+
+class ChunkJournal:
+    """Per-chunk write-ahead log under one directory (see module docstring)."""
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        os.makedirs(directory, exist_ok=True)
+
+    # -- paths ------------------------------------------------------------
+    def _p(self, index: int, suffix: str) -> str:
+        return os.path.join(self.directory, f"chunk_{index:06d}.{suffix}")
+
+    # -- write side -------------------------------------------------------
+    def record_submit(self, index: int, Y, key) -> None:
+        """WAL entry: journal a chunk's inputs before its solve starts.
+
+        Idempotent on replay: an existing record for ``index`` is verified
+        against the new inputs (bitwise) instead of rewritten — a mismatch
+        means the re-presented stream is not the journaled one, and raises.
+        """
+        if os.path.exists(self._p(index, "meta.json")):
+            self.verify_submit(index, Y, key)
+            return
+        Y = np.asarray(Y)
+        k = np.asarray(key)
+        np.save(self._p(index, "y.npy"), Y)
+        np.save(self._p(index, "key.npy"), k)
+        _write_json_durable(self._p(index, "meta.json"), {
+            "index": index, "status": "submitted",
+            "y_shape": list(Y.shape), "y_dtype": str(Y.dtype),
+            "key_dtype": str(k.dtype),
+        })
+
+    def record_result(self, index: int, x) -> None:
+        """Publish a chunk's result: atomic x write, then the done marker."""
+        x = np.asarray(x)
+        tmp = self._p(index, "x.npy.tmp")
+        with open(tmp, "wb") as f:  # np.save(path) would append another .npy
+            np.save(f, x)
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, self._p(index, "x.npy"))
+        _write_json_durable(self._p(index, "done.json"), {
+            "index": index, "status": "complete",
+            "x_shape": list(x.shape), "x_dtype": str(x.dtype),
+        })
+
+    # -- read side --------------------------------------------------------
+    def is_complete(self, index: int) -> bool:
+        done = self._p(index, "done.json")
+        if not os.path.exists(done):
+            return False
+        try:
+            with open(done) as f:
+                return json.load(f).get("status") == "complete"
+        except (json.JSONDecodeError, OSError):
+            return False
+
+    def completed(self) -> list:
+        """Indices with a published result, ascending."""
+        return [i for i in self._indices() if self.is_complete(i)]
+
+    def pending(self) -> list:
+        """Indices journaled as submitted but not completed (in-flight at the
+        kill) — these get replayed, ascending."""
+        return [i for i in self._indices() if not self.is_complete(i)]
+
+    def _indices(self) -> list:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("chunk_") and name.endswith(".meta.json"):
+                out.append(int(name[len("chunk_"):len("chunk_") + 6]))
+        return sorted(out)
+
+    def load_submit(self, index: int):
+        """(Y, key) as journaled for ``index``."""
+        return (np.load(self._p(index, "y.npy")),
+                np.load(self._p(index, "key.npy")))
+
+    def load_result(self, index: int):
+        return np.load(self._p(index, "x.npy"))
+
+    def verify_submit(self, index: int, Y, key) -> None:
+        """Raise unless the journaled inputs for ``index`` equal (Y, key)
+        bitwise — draining a result for DIFFERENT inputs would silently serve
+        the wrong answer."""
+        Yj, kj = self.load_submit(index)
+        if Yj.shape != tuple(np.asarray(Y).shape) or not np.array_equal(
+                Yj, np.asarray(Y)):
+            raise ValueError(
+                f"journal mismatch at chunk {index}: the re-presented Y differs "
+                "from the journaled one — this stream is not the journaled run")
+        if not np.array_equal(kj, np.asarray(key)):
+            raise ValueError(
+                f"journal mismatch at chunk {index}: the re-presented key "
+                "differs from the journaled one")

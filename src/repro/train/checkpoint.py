@@ -22,6 +22,7 @@ import json
 import os
 import shutil
 import threading
+from collections import defaultdict
 from typing import Any, Optional
 
 import jax
@@ -29,6 +30,30 @@ import jax.numpy as jnp
 import numpy as np
 
 _MANIFEST = "manifest.json"
+
+# One lock per checkpoint directory: concurrent async_=True saves (or an async
+# save racing a synchronous final one, the preemption path) must not interleave
+# their rmtree/rename/_prune sequences. The registry lock only guards the dict.
+_dir_locks: dict = defaultdict(threading.Lock)
+_dir_locks_guard = threading.Lock()
+
+
+def _dir_lock(directory: str) -> threading.Lock:
+    with _dir_locks_guard:
+        return _dir_locks[os.path.abspath(directory)]
+
+
+def _fsync_dir(path: str) -> None:
+    """Flush a directory entry itself (the rename's durability, not just the
+    file contents) — no-op on platforms that refuse O_RDONLY dir fds."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _leaf_paths(tree):
@@ -40,27 +65,39 @@ def save(directory: str, step: int, state, *, keep: int = 3,
          async_: bool = False) -> Optional[threading.Thread]:
     """Write a checkpoint. With async_=True the disk I/O happens on a
     background thread (device→host transfer is done synchronously first so
-    the training step can donate its buffers safely)."""
+    the training step can donate its buffers safely).
+
+    Durability: the manifest is fsync'd, and the parent directory entry is
+    fsync'd after the tmp→rename — a crash at ANY point leaves either the
+    complete new checkpoint or the previous one authoritative, never a
+    half-written directory that parses as complete. Concurrent saves to the
+    same directory (two async writers, or an async writer racing the final
+    synchronous preemption save) are serialized by a per-directory lock.
+    """
     host_leaves = [
         (name, np.asarray(jax.device_get(leaf)))
         for name, leaf in _leaf_paths(state)
     ]
 
     def write():
-        final = os.path.join(directory, f"step_{step:08d}")
-        tmp = final + ".tmp"
-        os.makedirs(tmp, exist_ok=True)
-        names = []
-        for i, (name, arr) in enumerate(host_leaves):
-            np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), arr)
-            names.append({"path": name, "file": f"leaf_{i:05d}.npy",
-                          "shape": list(arr.shape), "dtype": str(arr.dtype)})
-        with open(os.path.join(tmp, _MANIFEST), "w") as f:
-            json.dump({"step": step, "leaves": names, "status": "complete"}, f)
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)
-        _prune(directory, keep)
+        with _dir_lock(directory):
+            final = os.path.join(directory, f"step_{step:08d}")
+            tmp = final + ".tmp"
+            os.makedirs(tmp, exist_ok=True)
+            names = []
+            for i, (name, arr) in enumerate(host_leaves):
+                np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), arr)
+                names.append({"path": name, "file": f"leaf_{i:05d}.npy",
+                              "shape": list(arr.shape), "dtype": str(arr.dtype)})
+            with open(os.path.join(tmp, _MANIFEST), "w") as f:
+                json.dump({"step": step, "leaves": names, "status": "complete"}, f)
+                f.flush()
+                os.fsync(f.fileno())
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            _fsync_dir(directory)
+            _prune(directory, keep)
 
     if async_:
         t = threading.Thread(target=write, daemon=True)
@@ -120,6 +157,19 @@ def restore(directory: str, step: int, target, shardings=None):
         arr = np.load(os.path.join(final, entry["file"]))
         if tuple(arr.shape) != tuple(tgt.shape):
             raise ValueError(f"shape mismatch for {name}: ckpt {arr.shape} vs {tgt.shape}")
+        # dtype is part of the bit-identity contract: a float64 checkpoint
+        # silently loaded into a float32 slot (or vice versa) restores a
+        # DIFFERENT computation, not a resumed one — validate both that the
+        # manifest matches the file and that the file matches the target.
+        if str(arr.dtype) != entry["dtype"]:
+            raise ValueError(
+                f"manifest/file dtype mismatch for {name}: manifest says "
+                f"{entry['dtype']}, file holds {arr.dtype} (corrupt checkpoint)")
+        if np.dtype(arr.dtype) != np.dtype(tgt.dtype):
+            raise ValueError(
+                f"dtype mismatch for {name}: ckpt {arr.dtype} vs target "
+                f"{np.dtype(tgt.dtype)} — refusing a silent cast that would "
+                f"break bit-identical resume")
         if sh is not None:
             leaves.append(jax.device_put(arr, sh))
         else:

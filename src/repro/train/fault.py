@@ -33,7 +33,7 @@ class PreemptionGuard:
         self._prev = {}
 
     def __enter__(self):
-        for sig in (signal.SIGTERM,):
+        for sig in (signal.SIGTERM, signal.SIGINT):
             self._prev[sig] = signal.signal(sig, self._handler)
         return self
 
@@ -76,10 +76,20 @@ class StepTimer:
 
 
 def run_with_restarts(body: Callable[[int], object], max_restarts: int = 3,
-                      retry_on: tuple = (RuntimeError,)):
+                      retry_on: tuple = (RuntimeError,), *,
+                      backoff: float = 0.0, backoff_factor: float = 2.0,
+                      max_backoff: float = 30.0,
+                      sleep: Callable[[float], None] = time.sleep):
     """Supervise ``body(attempt)``; re-enter on failure (the in-process stand-in
-    for scheduler-level worker restarts). Returns body's result."""
+    for scheduler-level worker restarts). Returns body's result.
+
+    ``backoff`` seconds before the first retry, multiplied by
+    ``backoff_factor`` each subsequent retry and capped at ``max_backoff`` —
+    a crash-looping worker (bad node, poisoned input) should not hot-spin
+    through its restart budget. ``sleep`` is injectable for tests.
+    """
     attempt = 0
+    delay = backoff
     while True:
         try:
             return body(attempt)
@@ -87,3 +97,6 @@ def run_with_restarts(body: Callable[[int], object], max_restarts: int = 3,
             attempt += 1
             if attempt > max_restarts:
                 raise
+            if delay > 0:
+                sleep(min(delay, max_backoff))
+                delay = min(delay * backoff_factor, max_backoff)

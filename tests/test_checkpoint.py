@@ -48,6 +48,48 @@ class TestSaveRestore:
         with pytest.raises(ValueError):
             ckpt.restore(str(tmp_path), 1, bad)
 
+    def test_dtype_mismatch_raises(self, tmp_path):
+        """The manifest records dtypes and restore enforces them: loading a
+        float32 checkpoint into an int32 slot (or any silent cast) would break
+        bit-identical resume."""
+        s = _state()
+        ckpt.save(str(tmp_path), 1, s)
+        bad = jax.eval_shape(lambda: {
+            "step": s["step"],
+            "params": {"a": jnp.zeros((16, 8), jnp.int32),
+                       "nested": s["params"]["nested"]}})
+        with pytest.raises(ValueError, match="dtype"):
+            ckpt.restore(str(tmp_path), 1, bad)
+
+    def test_manifest_file_dtype_disagreement_raises(self, tmp_path):
+        """A leaf file whose dtype contradicts its own manifest entry is a
+        corrupt checkpoint, not a restorable one."""
+        s = _state()
+        ckpt.save(str(tmp_path), 1, s)
+        man = os.path.join(str(tmp_path), "step_00000001", "manifest.json")
+        with open(man) as f:
+            m = json.load(f)
+        entry = next(e for e in m["leaves"] if "float32" in e["dtype"])
+        entry["dtype"] = "float64"
+        with open(man, "w") as f:
+            json.dump(m, f)
+        with pytest.raises(ValueError, match="manifest/file dtype"):
+            ckpt.restore(str(tmp_path), 1, jax.eval_shape(lambda: s))
+
+    def test_concurrent_async_saves_serialized(self, tmp_path):
+        """Many async writers to one directory must interleave cleanly (the
+        per-directory lock): every step lands complete, retention holds."""
+        s = _state()
+        threads = [ckpt.save(str(tmp_path), step, s, keep=3, async_=True)
+                   for step in range(1, 9)]
+        for t in threads:
+            t.join()
+        steps = ckpt.available_steps(str(tmp_path))
+        assert len(steps) == 3 and steps[-1] == 8
+        restored = ckpt.restore(str(tmp_path), 8, jax.eval_shape(lambda: s))
+        for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
 
 class TestFaultTolerance:
     def test_corrupt_manifest_fallback(self, tmp_path):

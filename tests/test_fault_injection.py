@@ -1,0 +1,157 @@
+"""Fault-injection matrix (slow tier): real SIGTERM kills + restarts.
+
+Each test launches the actual CLIs as subprocesses, kills one mid-stream with
+``SIGTERM``, restarts with ``--resume``, and pins the acceptance criterion of
+the preemption-safe recovery path: the restarted run's output is
+**bit-identical** to an uninterrupted run — across dense and packed backends,
+single- and multi-device meshes, and a mesh-width change between save and
+resume (elastic). The in-process equivalents (simulated guards, torn
+checkpoints) run in the fast tier (``tests/test_resilience.py``).
+"""
+import os
+import re
+import signal
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.slow
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    return env
+
+
+def _digests(text):
+    return re.findall(r"chunk (\d+) x_digest=([0-9a-f]+)", text)
+
+
+def _run(cmd, timeout=600):
+    return subprocess.run(cmd, env=_env(), cwd=_REPO, capture_output=True,
+                          text=True, timeout=timeout)
+
+
+def _kill_after_first_digest(cmd, timeout=600):
+    """Start a serve run, SIGTERM it right after its first chunk digest line,
+    and return its full stdout (the guard finishes the in-flight chunk and
+    exits cleanly at the boundary)."""
+    p = subprocess.Popen(cmd, env=_env(), cwd=_REPO, stdout=subprocess.PIPE,
+                         stderr=subprocess.PIPE, text=True)
+    head = []
+    for line in p.stdout:
+        head.append(line)
+        if "x_digest=" in line:
+            p.send_signal(signal.SIGTERM)
+            break
+    rest, err = p.communicate(timeout=timeout)
+    assert p.returncode == 0, (p.returncode, err[-3000:])
+    return "".join(head) + rest
+
+
+@pytest.mark.parametrize("config,devices", [
+    ("serve-gaussian-fault", None),
+    ("serve-gaussian-fault", 2),
+    ("serve-gaussian-fault-packed", None),
+    ("serve-gaussian-fault-packed", 2),
+])
+def test_serve_kill_resume_stream_parity(tmp_path, config, devices):
+    """kill -TERM during chunk k of the n-chunk serve + restart --resume →
+    the full per-chunk result stream (sha256 of each chunk's x) is identical
+    to the uninterrupted run's."""
+    base = [sys.executable, "-m", "repro.launch.serve", "--config", config]
+    if devices:
+        base += ["--devices", str(devices)]
+    d_ref, d_kill = str(tmp_path / "ref"), str(tmp_path / "kill")
+
+    ref = _run(base + ["--checkpoint-dir", d_ref])
+    assert ref.returncode == 0, ref.stderr[-3000:]
+    ref_d = _digests(ref.stdout)
+    assert len(ref_d) == 5, ref.stdout
+
+    out = _kill_after_first_digest(base + ["--checkpoint-dir", d_kill])
+    assert "preempted after chunk" in out, out
+    killed = _digests(out)
+    assert 1 <= len(killed) < 5, killed
+    assert killed == ref_d[:len(killed)]  # journaled prefix already matches
+
+    res = _run(base + ["--checkpoint-dir", d_kill, "--resume"])
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert _digests(res.stdout) == ref_d
+    assert f"chunks_drained={len(killed)}" in res.stdout, res.stdout
+
+
+def _final_ckpt_leaves(d):
+    steps = sorted(s for s in os.listdir(d)
+                   if s.startswith("step_") and not s.endswith(".tmp"))
+    top = os.path.join(d, steps[-1])
+    return {f: np.load(os.path.join(top, f))
+            for f in sorted(os.listdir(top)) if f.endswith(".npy")}
+
+
+def test_recover_kill_elastic_resume_bitwise(tmp_path):
+    """Segmented recover killed mid-run at --devices 4 and resumed at
+    --devices 2 (elastic): final checkpointed SolverState is byte-identical to
+    the uninterrupted 4-device run's."""
+    base = [sys.executable, "-m", "repro.launch.recover", "--config",
+            "gaussian-smoke", "--backend", "packed", "--bits-phi", "4",
+            "--bits-y", "8", "--batch", "8", "--ckpt-every", "5"]
+    d_ref, d_kill = str(tmp_path / "ref"), str(tmp_path / "kill")
+
+    ref = _run(base + ["--devices", "4", "--checkpoint-dir", d_ref])
+    assert ref.returncode == 0, ref.stderr[-3000:]
+    assert "[recover]" in ref.stdout
+
+    p = subprocess.Popen(base + ["--devices", "4", "--checkpoint-dir", d_kill],
+                         env=_env(), cwd=_REPO, stdout=subprocess.PIPE,
+                         stderr=subprocess.PIPE, text=True)
+    for line in p.stdout:
+        if "checkpointed" in line:
+            p.send_signal(signal.SIGTERM)
+            break
+    rest, err = p.communicate(timeout=600)
+    assert p.returncode == 0, (p.returncode, err[-3000:])
+    assert "preempted at iteration" in rest, rest
+
+    res = _run(base + ["--devices", "2", "--checkpoint-dir", d_kill, "--resume"])
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "resumed from step" in res.stdout, res.stdout
+
+    a, b = _final_ckpt_leaves(d_ref), _final_ckpt_leaves(d_kill)
+    assert a.keys() == b.keys()
+    for name in a:
+        np.testing.assert_array_equal(a[name], b[name], err_msg=name)
+
+
+def test_recover_single_problem_resume(tmp_path):
+    """Single-observation path (no --batch): preempt + resume matches the
+    uninterrupted checkpointed run's reported metrics exactly."""
+    base = [sys.executable, "-m", "repro.launch.recover", "--config",
+            "gaussian-smoke", "--backend", "fake", "--bits-phi", "4",
+            "--bits-y", "8", "--ckpt-every", "4"]
+    d_ref, d_kill = str(tmp_path / "ref"), str(tmp_path / "kill")
+
+    ref = _run(base + ["--checkpoint-dir", d_ref])
+    assert ref.returncode == 0, ref.stderr[-3000:]
+    ref_line = [ln for ln in ref.stdout.splitlines() if "[recover]" in ln][-1]
+
+    p = subprocess.Popen(base + ["--checkpoint-dir", d_kill], env=_env(),
+                         cwd=_REPO, stdout=subprocess.PIPE,
+                         stderr=subprocess.PIPE, text=True)
+    for line in p.stdout:
+        if "checkpointed" in line:
+            p.send_signal(signal.SIGTERM)
+            break
+    rest, err = p.communicate(timeout=600)
+    assert p.returncode == 0, (p.returncode, err[-3000:])
+    assert "preempted at iteration" in rest
+
+    res = _run(base + ["--checkpoint-dir", d_kill, "--resume"])
+    assert res.returncode == 0, res.stderr[-3000:]
+    res_line = [ln for ln in res.stdout.splitlines() if "[recover]" in ln][-1]
+    assert res_line == ref_line
