@@ -44,12 +44,12 @@ def run(fast: bool = True):
             f"single_us={us1:.1f} amortized={usb / (batch * us1):.2f}x_of_{batch}_singles"
         ))
 
-    v = jax.random.normal(key, (512, 512), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 6), (512, 512), jnp.float32)
     us = time_fn(jax.jit(lambda vv: sqround(vv, 8, key, use_pallas=False)[0]), v,
                  warmup=2, iters=5)
     rows.append(row("kernels/sqround_ref", us, "elems=262144"))
 
-    xv = jax.random.normal(key, (65536,))
+    xv = jax.random.normal(jax.random.fold_in(key, 7), (65536,))
     us = time_fn(jax.jit(lambda a: hsthresh(a, 1024, use_pallas=False)), xv,
                  warmup=2, iters=5)
     rows.append(row("kernels/hsthresh_ref", us, "n=65536 s=1024"))

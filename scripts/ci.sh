@@ -1,28 +1,62 @@
 #!/usr/bin/env bash
 # Tier-1 test entry point with a quick pre-commit tier.
 #
-#   scripts/ci.sh        # fast: skip @slow tests (model-arch compiles, subprocess
-#                        # dry-run / multidevice, large-grid MRI acceptance, and the
-#                        # kill/restart fault-injection matrix) — <2 min; the
-#                        # in-process segment-resume parity smokes
-#                        # (tests/test_resilience.py) DO run in this tier
-#   scripts/ci.sh fast   # same
-#   scripts/ci.sh full   # everything — the driver's tier-1 command; includes the
-#                        # @slow SIGTERM kill + --resume subprocess matrix
-#                        # (tests/test_fault_injection.py)
-#   scripts/ci.sh lint   # byte-compile src/tests/benchmarks (+ ruff if installed)
-#   scripts/ci.sh docs   # docs gate: README/docs snippets execute, links resolve
+#   scripts/ci.sh          # fast: analyze tier first, then skip @slow tests
+#                          # (model-arch compiles, subprocess dry-run / multidevice,
+#                          # large-grid MRI acceptance, and the kill/restart
+#                          # fault-injection matrix) — <2 min; the in-process
+#                          # segment-resume parity smokes (tests/test_resilience.py)
+#                          # DO run in this tier
+#   scripts/ci.sh fast     # same
+#   scripts/ci.sh full     # everything — the driver's tier-1 command; includes the
+#                          # @slow SIGTERM kill + --resume subprocess matrix
+#                          # (tests/test_fault_injection.py)
+#   scripts/ci.sh analyze  # blocking static analysis: jaxlint (JL001-JL007) over
+#                          # src/tests/benchmarks/examples against the checked-in
+#                          # baseline, a self-check that every bad fixture still
+#                          # trips its rule, and ruff (pinned in pyproject.toml)
+#                          # when installed — see docs/static-analysis.md
+#   scripts/ci.sh lint     # byte-compile src/tests/benchmarks (+ ruff if installed)
+#   scripts/ci.sh docs     # docs gate: README/docs snippets execute, links resolve
 #
 # Extra args go straight to pytest: scripts/ci.sh fast -k mri
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+analyze() {
+  # 1. jaxlint over the repo against .jaxlint-baseline.json — always blocking
+  python -m repro.analysis
+  # 2. self-check: a rule that silently stopped firing is worse than no rule.
+  #    Every bad fixture must still trip (exit 1), every ok twin stay clean.
+  for rule in jl001 jl002 jl003 jl004 jl005 jl006 jl007; do
+    sub=""; [ "$rule" = jl007 ] && sub="launch/"
+    bad="tests/jaxlint_fixtures/${sub}${rule}_bad.py"
+    ok="tests/jaxlint_fixtures/${sub}${rule}_ok.py"
+    if python -m repro.analysis "$bad" --baseline none >/dev/null 2>&1; then
+      echo "[analyze] FIXTURE REGRESSION: $bad no longer trips ${rule^^}" >&2
+      exit 1
+    fi
+    if ! python -m repro.analysis "$ok" --baseline none >/dev/null 2>&1; then
+      echo "[analyze] FIXTURE REGRESSION: $ok false-positives" >&2
+      exit 1
+    fi
+  done
+  echo "[analyze] fixture self-check ok (7 rules trip on bad, clean on ok)"
+  # 3. ruff, config pinned in pyproject.toml; advisory-absent, blocking-present
+  if command -v ruff >/dev/null 2>&1; then
+    ruff check src tests benchmarks examples
+  else
+    echo "[analyze] ruff not installed; jaxlint + fixture self-check only"
+  fi
+}
+
 mode="${1:-fast}"
 [ $# -gt 0 ] && shift
 case "$mode" in
-  fast) exec python -m pytest -x -q -m "not slow" "$@" ;;
-  full) exec python -m pytest -x -q "$@" ;;
+  fast) analyze; exec python -m pytest -x -q -m "not slow" "$@" ;;
+  full) analyze; exec python -m pytest -x -q "$@" ;;
+  analyze) analyze ;;
   lint)
     python -m compileall -q src tests benchmarks
     if command -v ruff >/dev/null 2>&1; then
@@ -32,5 +66,5 @@ case "$mode" in
     fi
     ;;
   docs) exec python scripts/check_docs.py "$@" ;;
-  *) echo "usage: scripts/ci.sh [fast|full|lint|docs] [pytest args...]" >&2; exit 2 ;;
+  *) echo "usage: scripts/ci.sh [fast|full|analyze|lint|docs] [pytest args...]" >&2; exit 2 ;;
 esac

@@ -1,0 +1,42 @@
+"""repro.analysis — the repo's own static-analysis + runtime-sanitizer tier.
+
+Two halves, one contract: the arithmetic discipline the paper's guarantees
+rest on (no silent dtype narrowing, no PRNG reuse, no SPMD-unsafe control
+flow, no torn writes on durable paths) is enforced by machine instead of by
+post-hoc review.
+
+* **jaxlint** (:mod:`repro.analysis.engine` / ``python -m repro.analysis``) —
+  an AST pass over ``src/``, ``tests/``, ``benchmarks/``, ``examples/`` with
+  one rule per bug class this repo has actually shipped a fix for
+  (:mod:`repro.analysis.rules`, JL001–JL007). Suppressions are explicit:
+  inline ``# jaxlint: allow=JLxxx -- reason`` pragmas or vetted entries in
+  ``.jaxlint-baseline.json``. Wired as the blocking ``scripts/ci.sh analyze``
+  tier; see ``docs/static-analysis.md`` for the rule catalog.
+
+* **sanitize** (:mod:`repro.analysis.sanitize`) — a runtime context manager
+  wiring ``jax_debug_nans``/``jax_debug_infs`` plus a compile counter (backend
+  compiles observed via ``jax.monitoring``), so tests and the launchers'
+  ``--sanitize`` flags can assert "no NaN anywhere, no recompile after
+  warm-up" — the serving layer's pack-once/compile-once amortization as a
+  regression-guarded contract rather than a claim.
+
+This module intentionally does NOT import jax at package-import time: the
+lint half is pure stdlib (``ast``) so the CI tier and the CLI stay fast.
+``sanitize`` / ``CompileCounter`` are re-exported lazily.
+"""
+from __future__ import annotations
+
+from repro.analysis.engine import run_jaxlint  # noqa: F401  (pure stdlib)
+from repro.analysis.findings import Finding  # noqa: F401
+
+__all__ = ["run_jaxlint", "Finding", "sanitize", "CompileCounter"]
+
+
+def __getattr__(name):
+    # lazy: importing the runtime sanitizer pulls in jax, which the static
+    # analyzer must not pay for
+    if name in ("sanitize", "CompileCounter"):
+        from repro.analysis import sanitize as _s
+
+        return getattr(_s, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

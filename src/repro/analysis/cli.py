@@ -1,0 +1,95 @@
+"""jaxlint CLI — ``python -m repro.analysis [paths...]``.
+
+Exit status 0 = clean (every finding fixed, pragma'd, or baselined),
+1 = unsuppressed findings or parse errors. This is the blocking contract
+``scripts/ci.sh analyze`` enforces.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis.engine import BASELINE_NAME, find_repo_root, run_jaxlint
+from repro.analysis.findings import Baseline
+from repro.analysis.rules import RULE_SUMMARIES
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs to lint (default: src tests benchmarks "
+                         "examples under the repo root; naming a file "
+                         "bypasses the fixture-dir exclusion)")
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: auto-detected from cwd)")
+    ap.add_argument("--baseline", default=None,
+                    help=f"suppression file (default: <root>/{BASELINE_NAME} "
+                         "if present; pass 'none' to ignore)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--no-pragmas", action="store_true",
+                    help="ignore inline '# jaxlint: allow' pragmas")
+    ap.add_argument("--format", choices=["text", "json"], default="text")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="write all current findings to the baseline file "
+                         "with a placeholder reason (justify before merging)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid, summary in sorted(RULE_SUMMARIES.items()):
+            print(f"{rid}  {summary}")
+        return 0
+
+    rule_ids = ([r.strip().upper() for r in args.rules.split(",")]
+                if args.rules else None)
+    if rule_ids:
+        unknown = set(rule_ids) - set(RULE_SUMMARIES)
+        if unknown:
+            ap.error(f"unknown rule ids: {sorted(unknown)}")
+
+    root = find_repo_root(args.root)
+    report = run_jaxlint(
+        paths=args.paths or None, root=root,
+        baseline="none" if args.update_baseline else args.baseline,
+        rule_ids=rule_ids, respect_pragmas=not args.no_pragmas)
+
+    if args.update_baseline:
+        import os
+
+        out = args.baseline if args.baseline not in (None, "none") \
+            else os.path.join(root, BASELINE_NAME)
+        with open(out, "w") as f:
+            f.write(Baseline.dump_entries(
+                report.findings,
+                reason="TODO: justify this suppression before merging"))
+        print(f"[jaxlint] wrote {len(report.findings)} entries to {out}")
+        return 0
+
+    if args.format == "json":
+        print(json.dumps({
+            "files": report.files,
+            "findings": [f.to_json() for f in report.findings],
+            "suppressed": [{"how": how, **f.to_json()}
+                           for f, how in report.suppressed],
+            "parse_errors": [e for _, e in report.parse_errors],
+        }, indent=2))
+    else:
+        for f in report.findings:
+            print(f.format())
+        for _, err in report.parse_errors:
+            print(err)
+        tail = (f"[jaxlint] {report.files} files, "
+                f"{len(report.findings)} finding(s), "
+                f"{len(report.suppressed)} suppressed")
+        if report.parse_errors:
+            tail += f", {len(report.parse_errors)} parse error(s)"
+        print(tail)
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

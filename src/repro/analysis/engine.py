@@ -1,0 +1,151 @@
+"""jaxlint engine: file discovery, parsing, rule dispatch, suppression.
+
+Pure stdlib — parsing is ``ast``, no jax import — so ``python -m
+repro.analysis`` starts in milliseconds and runs anywhere (CI, pre-commit,
+a laptop without an accelerator stack).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+
+from repro.analysis import rules as _rules
+from repro.analysis.findings import Baseline, Finding, pragma_suppresses
+
+#: directories searched when no explicit paths are given (repo-relative)
+DEFAULT_DIRS = ("src", "tests", "benchmarks", "examples")
+
+#: directory names never descended into during discovery. ``jaxlint_fixtures``
+#: holds the deliberately-bad rule fixtures — they are linted only when named
+#: explicitly on the command line (which bypasses this exclusion).
+EXCLUDED_DIR_NAMES = {"__pycache__", ".git", "jaxlint_fixtures",
+                      ".pytest_cache", ".ruff_cache"}
+
+BASELINE_NAME = ".jaxlint-baseline.json"
+
+
+@dataclasses.dataclass
+class Report:
+    findings: list[Finding]
+    suppressed: list[tuple[Finding, str]]  # (finding, "pragma"|"baseline")
+    files: int
+    parse_errors: list[tuple[str, str]]
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings and not self.parse_errors
+
+
+def find_repo_root(start: str | None = None) -> str:
+    """Nearest ancestor containing a .git dir or pyproject.toml."""
+    cur = os.path.abspath(start or os.getcwd())
+    while True:
+        if os.path.isdir(os.path.join(cur, ".git")) \
+                or os.path.isfile(os.path.join(cur, "pyproject.toml")):
+            return cur
+        nxt = os.path.dirname(cur)
+        if nxt == cur:
+            return os.path.abspath(start or os.getcwd())
+        cur = nxt
+
+
+def iter_python_files(root: str, paths: list[str] | None = None):
+    """Yield absolute paths of .py files to lint.
+
+    Explicit ``paths`` entries (files or directories) are taken as given —
+    naming a file skips the EXCLUDED_DIR_NAMES filter, which is how the
+    self-tests and ``scripts/ci.sh`` lint the bad fixtures on purpose.
+    """
+    if paths:
+        roots = [p if os.path.isabs(p) else os.path.join(root, p)
+                 for p in paths]
+        for p in roots:
+            if os.path.isfile(p):
+                yield p
+            elif os.path.isdir(p):
+                yield from _walk_dir(p)
+    else:
+        for d in DEFAULT_DIRS:
+            full = os.path.join(root, d)
+            if os.path.isdir(full):
+                yield from _walk_dir(full)
+
+
+def _walk_dir(d: str):
+    for dirpath, dirnames, filenames in os.walk(d):
+        dirnames[:] = sorted(x for x in dirnames
+                             if x not in EXCLUDED_DIR_NAMES)
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                yield os.path.join(dirpath, fn)
+
+
+def _annotate_parents(tree: ast.AST) -> None:
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._jaxlint_parent = node
+
+
+def lint_file(abspath: str, relpath: str,
+              rule_ids: list[str] | None = None) -> tuple[list[Finding], str | None]:
+    """(raw findings, parse error) for one file. Suppression NOT applied."""
+    with open(abspath, encoding="utf-8") as f:
+        source = f.read()
+    try:
+        tree = ast.parse(source, filename=relpath)
+    except SyntaxError as e:
+        return [], f"{relpath}:{e.lineno}: syntax error: {e.msg}"
+    _annotate_parents(tree)
+    source_lines = source.splitlines()
+    findings = []
+    for rid, rule in _rules.ALL_RULES.items():
+        if rule_ids and rid not in rule_ids:
+            continue
+        findings.extend(rule(tree, relpath, source_lines))
+    findings.sort(key=lambda f: (f.line, f.rule))
+    return findings, None
+
+
+def run_jaxlint(paths: list[str] | None = None, root: str | None = None,
+                baseline: str | None = None,
+                rule_ids: list[str] | None = None,
+                respect_pragmas: bool = True) -> Report:
+    """Lint the repo (or explicit paths) and apply suppressions.
+
+    ``baseline`` — path to the suppression file; defaults to
+    ``<root>/.jaxlint-baseline.json`` when present. Pass ``baseline="none"``
+    to ignore it (used by --update-baseline and the self-tests).
+    """
+    root = find_repo_root(root)
+    bl = Baseline()
+    if baseline != "none":
+        bl_path = baseline or os.path.join(root, BASELINE_NAME)
+        if os.path.isfile(bl_path):
+            bl = Baseline.load(bl_path)
+
+    findings: list[Finding] = []
+    suppressed: list[tuple[Finding, str]] = []
+    parse_errors: list[tuple[str, str]] = []
+    n_files = 0
+    for abspath in iter_python_files(root, paths):
+        relpath = os.path.relpath(abspath, root).replace(os.sep, "/")
+        n_files += 1
+        raw, err = lint_file(abspath, relpath, rule_ids)
+        if err:
+            parse_errors.append((relpath, err))
+            continue
+        if not raw:
+            continue
+        with open(abspath, encoding="utf-8") as f:
+            source_lines = f.read().splitlines()
+        for finding in raw:
+            if respect_pragmas and pragma_suppresses(source_lines, finding):
+                suppressed.append((finding, "pragma"))
+            elif bl.matches(finding):
+                suppressed.append((finding, "baseline"))
+            else:
+                findings.append(finding)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return Report(findings=findings, suppressed=suppressed, files=n_files,
+                  parse_errors=parse_errors)

@@ -1,0 +1,105 @@
+"""Findings, inline pragmas, and the vetted-suppression baseline.
+
+A :class:`Finding` is one rule hit: ``rule`` id, repo-relative ``path``,
+1-based ``line``, human ``message``, and a ``hint`` that says what the fix
+looks like. ``snippet`` is the stripped source line — it is the identity used
+by the baseline so vetted suppressions survive unrelated line drift.
+
+Suppression is always explicit and always carries a reason:
+
+* inline — ``# jaxlint: allow=JL001 -- reason`` on the flagged line or the
+  line directly above. ``allow`` with no rule list allows every rule on that
+  line (discouraged; prefer naming the rule).
+* baseline — an entry in ``.jaxlint-baseline.json`` with a mandatory
+  ``reason`` field, keyed on ``(rule, path, snippet)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+PRAGMA_RE = re.compile(r"#\s*jaxlint:\s*allow(?:=([A-Za-z0-9_,\s]+))?")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+    hint: str
+    snippet: str = ""
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}: {self.rule} {self.message}\n"
+                f"    hint: {self.hint}")
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def pragma_rules_for_line(source_lines: list[str], line: int) -> set[str] | None:
+    """Rules allowed at 1-based ``line`` by an inline pragma.
+
+    Returns ``None`` when no pragma applies, the empty set for a bare
+    ``# jaxlint: allow`` (allow everything), else the set of rule ids named
+    on the flagged line or the line directly above it.
+    """
+    for ln in (line, line - 1):
+        if 1 <= ln <= len(source_lines):
+            m = PRAGMA_RE.search(source_lines[ln - 1])
+            if m:
+                if m.group(1) is None:
+                    return set()
+                return {r.strip().upper() for r in m.group(1).split(",")
+                        if r.strip()}
+    return None
+
+
+def pragma_suppresses(source_lines: list[str], finding: Finding) -> bool:
+    rules = pragma_rules_for_line(source_lines, finding.line)
+    if rules is None:
+        return False
+    return not rules or finding.rule in rules
+
+
+class Baseline:
+    """Checked-in vetted suppressions, keyed on (rule, path, snippet).
+
+    Keying on the stripped source line instead of the line number means a
+    baseline entry keeps matching when unrelated edits shift the file, and
+    stops matching (fails CI, forcing a re-review) the moment the flagged
+    code itself changes.
+    """
+
+    def __init__(self, entries: list[dict] | None = None):
+        self.entries = entries or []
+        self._index: dict[tuple[str, str, str], dict] = {
+            (e["rule"], e["path"], e["snippet"]): e for e in self.entries
+        }
+
+    @classmethod
+    def load(cls, path) -> "Baseline":
+        with open(path) as f:
+            data = json.load(f)
+        entries = data.get("entries", [])
+        for e in entries:
+            missing = {"rule", "path", "snippet", "reason"} - set(e)
+            if missing:
+                raise ValueError(
+                    f"baseline entry {e!r} missing {sorted(missing)} — every "
+                    "suppression must carry a justification")
+        return cls(entries)
+
+    def matches(self, finding: Finding) -> dict | None:
+        return self._index.get((finding.rule, finding.path, finding.snippet))
+
+    @staticmethod
+    def dump_entries(findings: list[Finding], reason: str) -> str:
+        entries = [
+            {"rule": f.rule, "path": f.path, "snippet": f.snippet,
+             "reason": reason}
+            for f in sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+        ]
+        return json.dumps({"version": 1, "entries": entries}, indent=2) + "\n"

@@ -1,0 +1,667 @@
+"""jaxlint rules JL001–JL007 — one per bug class this repo has shipped.
+
+Every rule is a pure-``ast`` function ``(tree, path, source_lines) ->
+list[Finding]``; the engine parses, annotates parent links
+(``node._jaxlint_parent``), and applies pragma/baseline suppression. None of
+this imports jax — rules reason about *names in source*, so they are fast and
+runnable anywhere, at the cost of being lexical approximations. Each rule's
+docstring names the historical bug it mechanizes; the calibration notes say
+what is deliberately NOT flagged, because a linter the repo routinely
+pragmas-around is worse than no linter.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+
+# ---------------------------------------------------------------- helpers
+
+
+def dotted(node: ast.AST) -> str | None:
+    """'jax.random.normal' for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def last_part(node: ast.AST) -> str | None:
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def snippet_at(source_lines: list[str], line: int) -> str:
+    if 1 <= line <= len(source_lines):
+        return source_lines[line - 1].strip()
+    return ""
+
+
+def _mk(rule, path, node, message, hint, source_lines) -> Finding:
+    return Finding(rule=rule, path=path, line=node.lineno, message=message,
+                   hint=hint, snippet=snippet_at(source_lines, node.lineno))
+
+
+def enclosing_functions(node: ast.AST):
+    """Lexical chain of enclosing FunctionDefs, innermost first."""
+    cur = getattr(node, "_jaxlint_parent", None)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield cur
+        cur = getattr(cur, "_jaxlint_parent", None)
+
+
+# ---------------------------------------------------------------- JL001
+
+# Narrow targets we flag in .astype()/casts. float32 is deliberately absent:
+# it is this repo's working precision and ~30 legitimate sites use it; the
+# shipped bug (PR 4) was complex128 observations silently demoted to
+# complex64 inside dequantize, destroying the f64 reference path.
+_NARROW_DTYPES = {"complex64", "float16", "bfloat16"}
+
+
+def check_jl001_dtype_narrowing(tree, path, source_lines):
+    """JL001 — casts that can silently demote c128/f64 operands.
+
+    The PR 4 bug: ``QTensor.dequantize`` hard-cast to ``complex64``, so the
+    complex128 reference pipeline quietly lost half its mantissa and the
+    "exact" baseline wasn't. Flags (a) ``.astype(complex64|float16|bfloat16)``
+    with a literal narrow dtype — a dtype derived from the operand
+    (``x.astype(y.dtype)``) is the fix and is never flagged; (b)
+    dtype-defaulting ``jnp.asarray(x)`` / ``jnp.array(x)`` on a bare variable,
+    which canonicalizes float64 inputs down to float32 under JAX's default
+    x64-disabled config (``np.asarray`` preserves dtype and is not flagged).
+    """
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        # (a) .astype(<narrow literal>)
+        if isinstance(fn, ast.Attribute) and fn.attr == "astype" and node.args:
+            arg = node.args[0]
+            name = last_part(arg)
+            target = None
+            if name in _NARROW_DTYPES:
+                target = name
+            elif isinstance(arg, ast.Constant) and arg.value in _NARROW_DTYPES:
+                target = arg.value
+            if target:
+                out.append(_mk(
+                    "JL001", path, node,
+                    f"cast to literal {target} can silently demote wider "
+                    "operands (the PR 4 c128->c64 dequantize bug)",
+                    "derive the dtype from the operand (e.g. "
+                    "`.astype(x.dtype)` or a dtype-promoting helper), or add "
+                    "`# jaxlint: allow=JL001 -- <why narrowing is intended>`",
+                    source_lines))
+            continue
+        # (b) dtype-defaulting jnp.asarray/jnp.array on a bare variable
+        d = dotted(fn)
+        if d in ("jnp.asarray", "jnp.array", "jax.numpy.asarray",
+                 "jax.numpy.array"):
+            # dtype may be the 2nd positional arg (jnp.asarray(x, jnp.f32))
+            has_dtype = (len(node.args) >= 2
+                         or any(kw.arg == "dtype" for kw in node.keywords))
+            if (not has_dtype and node.args
+                    and isinstance(node.args[0], ast.Name)):
+                out.append(_mk(
+                    "JL001", path, node,
+                    f"`{d}` without dtype= canonicalizes float64/complex128 "
+                    "input down to float32/complex64 under JAX's default "
+                    "x64-disabled config",
+                    "pass dtype= explicitly (e.g. `dtype=x.dtype`), or add "
+                    "`# jaxlint: allow=JL001 -- <why canonicalization is "
+                    "fine>`",
+                    source_lines))
+    return out
+
+
+# ---------------------------------------------------------------- JL002
+
+# jax.random attrs that DERIVE keys rather than consume them.
+_KEY_DERIVERS = {"split", "fold_in", "PRNGKey", "key", "wrap_key_data",
+                 "key_data", "clone", "key_impl"}
+# jax.random attrs that CONSUME a key (first positional arg). Explicit list:
+# matching any `*.random.*` attr would false-positive on numpy's np.random.
+_KEY_CONSUMERS = {
+    "normal", "uniform", "randint", "permutation", "rademacher", "bernoulli",
+    "choice", "gamma", "beta", "exponential", "truncated_normal",
+    "categorical", "bits", "laplace", "logistic", "gumbel", "dirichlet",
+    "poisson", "orthogonal", "ball", "cauchy", "maxwell",
+    "multivariate_normal", "t", "weibull_min", "binomial", "rayleigh",
+    "triangular", "loggamma", "chisquare", "f", "geometric",
+    "generalized_normal", "wald", "shuffle",
+}
+
+
+def _is_key_consumption(call: ast.Call) -> str | None:
+    """Variable name whose key this call consumes, or None."""
+    d = dotted(call.func)
+    if d is None:
+        return None
+    parts = d.split(".")
+    if len(parts) < 2 or parts[-2] != "random" or parts[0] in ("np", "numpy"):
+        return None
+    if parts[-1] in _KEY_DERIVERS or parts[-1] not in _KEY_CONSUMERS:
+        return None
+    if call.args and isinstance(call.args[0], ast.Name):
+        return call.args[0].id
+    return None
+
+
+class _KeyReuseScanner:
+    """Order-aware scan of one function (or module) body.
+
+    State maps variable name -> line of its first un-refreshed consumption.
+    A reassignment of the name (including ``k, sub = split(k)`` unpacking)
+    resets it. if/for/while/try branches are scanned on *copies* of the state
+    that are then discarded: a key consumed once in each of two mutually
+    exclusive branches (the ``sensing/gaussian.py`` kflux pattern) is NOT
+    reuse, and under-reporting across merges beats crying wolf.
+    """
+
+    def __init__(self, path, source_lines):
+        self.path = path
+        self.source_lines = source_lines
+        self.findings = []
+
+    def scan_block(self, stmts, state: dict):
+        for stmt in stmts:
+            self.scan_stmt(stmt, state)
+        return state
+
+    def scan_stmt(self, stmt, state):
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return  # fresh scope; the rule driver visits it separately
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            value = stmt.value
+            if value is not None:
+                self.scan_expr(value, state)
+            targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                       else [stmt.target])
+            for t in targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name):
+                        state.pop(n.id, None)
+            return
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self.scan_expr(stmt.iter, state)
+            branch = dict(state)
+            for n in ast.walk(stmt.target):
+                if isinstance(n, ast.Name):
+                    branch.pop(n.id, None)
+            self.scan_block(stmt.body, branch)
+            self.scan_block(stmt.orelse, dict(state))
+            return
+        if isinstance(stmt, ast.While):
+            self.scan_expr(stmt.test, state)
+            self.scan_block(stmt.body, dict(state))
+            self.scan_block(stmt.orelse, dict(state))
+            return
+        if isinstance(stmt, ast.If):
+            self.scan_expr(stmt.test, state)
+            self.scan_block(stmt.body, dict(state))
+            self.scan_block(stmt.orelse, dict(state))
+            return
+        if isinstance(stmt, ast.Try):
+            self.scan_block(stmt.body, dict(state))
+            for h in stmt.handlers:
+                self.scan_block(h.body, dict(state))
+            self.scan_block(stmt.orelse, dict(state))
+            self.scan_block(stmt.finalbody, dict(state))
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self.scan_expr(item.context_expr, state)
+            self.scan_block(stmt.body, state)
+            return
+        # Expr / Return / Assert / Raise / Delete / ...
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.expr):
+                self.scan_expr(child, state)
+
+    def scan_expr(self, expr, state):
+        # depth-first, left-to-right: source order within one expression
+        for node in ast.iter_child_nodes(expr):
+            if isinstance(node, (ast.Lambda, ast.FunctionDef,
+                                 ast.AsyncFunctionDef)):
+                continue
+            self.scan_expr(node, state)
+        if isinstance(expr, ast.Call):
+            name = _is_key_consumption(expr)
+            if name is not None:
+                if name in state:
+                    self.findings.append(Finding(
+                        rule="JL002", path=self.path, line=expr.lineno,
+                        message=(f"PRNG key `{name}` already consumed on line "
+                                 f"{state[name]} — reusing it makes the two "
+                                 "draws correlated"),
+                        hint=("`jax.random.split` the key (or `fold_in` a "
+                              "fresh stream id) between consumptions"),
+                        snippet=snippet_at(self.source_lines, expr.lineno)))
+                else:
+                    state[name] = expr.lineno
+
+
+def check_jl002_prng_key_reuse(tree, path, source_lines):
+    """JL002 — one key, two draws, no split in between.
+
+    A JAX PRNG key is a value, not a stateful generator: sampling twice with
+    the same key yields *correlated* streams (identical, for the same
+    primitive+shape), which silently degrades every randomized guarantee the
+    paper's recovery bounds rely on (Gaussian Φ RIP, noise draws, tie-break
+    jitter). Flags a bare variable passed as the key to two ``jax.random``
+    samplers in the same straight-line scope without an interleaving
+    reassignment/split.
+    """
+    out = []
+    scopes = [tree] + [n for n in ast.walk(tree)
+                       if isinstance(n, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef))]
+    for scope in scopes:
+        sc = _KeyReuseScanner(path, source_lines)
+        state = {}
+        if isinstance(scope, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            sc.scan_block(scope.body, state)
+        else:
+            sc.scan_block(scope.body, state)
+        out.extend(sc.findings)
+    return out
+
+
+# ---------------------------------------------------------------- JL003
+
+_VIEW_METHODS = {"ravel", "reshape", "flatten"}
+
+
+def _is_view_producer(node: ast.AST) -> str | None:
+    if isinstance(node, ast.Call):
+        lp = last_part(node.func)
+        if lp in _VIEW_METHODS:
+            return lp
+    return None
+
+
+def check_jl003_view_write(tree, path, source_lines):
+    """JL003 — assignment through ``.ravel()``/``.reshape()`` results.
+
+    The PR 4 ``cartesian_mask`` gamble: ``mask.ravel()[idx] = 1`` only
+    mutates ``mask`` when ravel happens to return a view — for
+    non-contiguous inputs (and always for ``.flatten()``, which copies) the
+    write lands in a temporary and is silently discarded. Flags subscript
+    assignment (plain or augmented) whose base is a fresh
+    ravel/reshape/flatten call.
+    """
+    out = []
+    for node in ast.walk(tree):
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AugAssign):
+            targets = [node.target]
+        for t in targets:
+            if isinstance(t, ast.Subscript):
+                producer = _is_view_producer(t.value)
+                if producer:
+                    verb = ("always copies" if producer == "flatten"
+                            else "may return a copy")
+                    out.append(_mk(
+                        "JL003", path, node,
+                        f"writing through `.{producer}()` — it {verb}, so "
+                        "the write can be silently discarded (the PR 4 "
+                        "cartesian_mask bug)",
+                        "index the original array (`a.flat[idx] = v`, or "
+                        "functional `a = a.at[...].set(v)` for jax arrays)",
+                        source_lines))
+    return out
+
+
+# ---------------------------------------------------------------- JL004
+
+_SPMD_WRAPPERS = {"shard_map", "vmap", "pmap", "smap"}
+_BRANCH_PRIMS = {"cond", "switch"}
+
+
+def _wrapper_from_decorator(dec: ast.AST) -> str | None:
+    """shard_map/vmap/... if this decorator marks an SPMD-traced function."""
+    lp = last_part(dec)
+    if lp in _SPMD_WRAPPERS:
+        return lp
+    if isinstance(dec, ast.Call):
+        lp = last_part(dec.func)
+        if lp in _SPMD_WRAPPERS:
+            return lp
+        if lp == "partial" and dec.args:
+            inner = last_part(dec.args[0])
+            if inner in _SPMD_WRAPPERS:
+                return inner
+    return None
+
+
+def check_jl004_cond_under_spmd(tree, path, source_lines):
+    """JL004 — ``lax.cond``/``lax.switch`` lexically inside shard_map/vmap.
+
+    PR 5's hard-won rule: under SPMD transforms (and batching), ``cond`` is
+    rewritten to ``select`` — BOTH branches execute on every element. A
+    branch that is expensive, has side effects (checkpoint IO), or is only
+    valid when its predicate holds (div-by-zero guard) breaks silently. The
+    repo's fix was a ``lax.while_loop`` over iterations; this rule flags the
+    pattern so the next author hits a lint, not a 3-day debug.
+
+    Lexical scope only: marks functions decorated with shard_map/vmap/pmap
+    (including ``partial(...)`` forms) or passed as the mapped callable to a
+    shard_map/vmap/pmap *call* (named local defs and lambdas), then flags
+    branch primitives inside their bodies.
+    """
+    # collect defs by name so `shard_map(f, ...)` can mark a local `def f`
+    defs: dict[str, list] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, []).append(node)
+
+    marked: dict[int, tuple[ast.AST, str]] = {}
+
+    def mark(fn_node, wrapper):
+        marked.setdefault(id(fn_node), (fn_node, wrapper))
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                w = _wrapper_from_decorator(dec)
+                if w:
+                    mark(node, w)
+        if isinstance(node, ast.Call):
+            w = last_part(node.func)
+            if w in _SPMD_WRAPPERS and node.args:
+                f = node.args[0]
+                if isinstance(f, ast.Lambda):
+                    mark(f, w)
+                elif isinstance(f, ast.Name):
+                    for d in defs.get(f.id, []):
+                        mark(d, w)
+
+    out = []
+    for fn_node, wrapper in marked.values():
+        body = fn_node.body if not isinstance(fn_node, ast.Lambda) \
+            else [ast.Expr(value=fn_node.body)]
+        for sub in body:
+            for node in ast.walk(sub):
+                if isinstance(node, ast.Call):
+                    lp = last_part(node.func)
+                    d = dotted(node.func) or ""
+                    if lp in _BRANCH_PRIMS and ("lax" in d.split(".")
+                                                or d == lp):
+                        out.append(_mk(
+                            "JL004", path, node,
+                            f"`{lp}` inside a {wrapper}-mapped function: "
+                            "SPMD/batching rewrites it to `select`, so BOTH "
+                            "branches execute on every element (PR 5's "
+                            "while_loop-not-scan-of-cond rule)",
+                            "restructure as `lax.while_loop` / masked "
+                            "`jnp.where` arithmetic that is valid for all "
+                            "elements, or hoist the branch outside the "
+                            "mapped region",
+                            source_lines))
+    return out
+
+
+# ---------------------------------------------------------------- JL005
+
+# dict/list fields are NOT here: containers are pytree nodes and flatten
+# fine. The hazard is hashable config riding along as a leaf — the PR 5
+# PackedWeights granularity string.
+_STATIC_ANNOTATIONS = {"str", "Granularity"}
+_ARRAY_ANNOTATIONS = {"Array", "ndarray", "ArrayLike"}
+_REGISTER_MARKERS = ("register_pytree_node", "register_pytree_node_class",
+                     "register_dataclass", "register_static")
+_JIT_MARKERS = {"jit", "shard_map", "pjit", "xmap"}
+
+
+def _annotation_names(ann: ast.AST) -> set[str]:
+    names = set()
+    for node in ast.walk(ann):
+        lp = last_part(node)
+        if lp:
+            names.add(lp)
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            names.add(node.value.rsplit(".", 1)[-1])
+    return names
+
+
+def check_jl005_unregistered_pytree(tree, path, source_lines):
+    """JL005 — containers crossing jit/shard_map without pytree registration.
+
+    The PR 5 bug: ``PackedWeights`` crossed the shard_map boundary as a
+    NamedTuple whose *static* config fields (granularity string, group size)
+    became pytree leaves — tracer errors at best, a silent retrace per config
+    at worst; the fix registered it with config in aux_data. In a module that
+    uses jit/shard_map/pjit and never mentions a ``register_pytree*`` helper,
+    flags (a) ``@dataclass`` classes with array-annotated fields (dataclasses
+    are not pytrees at all — jit treats the instance as one opaque leaf and
+    fails), and (b) NamedTuple classes mixing in static-typed fields
+    (str/bool/dict), which auto-pytree into leaves that cannot trace.
+    All-array NamedTuples (``SolverState``, ``IHTResult``) are fine as-is
+    and are not flagged.
+    """
+    src = "\n".join(source_lines)
+    if not any(m in src for m in _JIT_MARKERS):
+        return []
+    if any(m in src for m in _REGISTER_MARKERS):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        base_names = {last_part(b) for b in node.bases}
+        is_namedtuple = "NamedTuple" in base_names
+        is_dataclass = any(
+            last_part(d) == "dataclass"
+            or (isinstance(d, ast.Call) and last_part(d.func) == "dataclass")
+            for d in node.decorator_list)
+        if not (is_namedtuple or is_dataclass):
+            continue
+        field_anns = [
+            (stmt.target.id, _annotation_names(stmt.annotation))
+            for stmt in node.body
+            if isinstance(stmt, ast.AnnAssign)
+            and isinstance(stmt.target, ast.Name)
+        ]
+        if is_dataclass:
+            arrayish = [n for n, anns in field_anns
+                        if anns & _ARRAY_ANNOTATIONS]
+            if arrayish:
+                out.append(_mk(
+                    "JL005", path, node,
+                    f"dataclass `{node.name}` holds array fields "
+                    f"({', '.join(arrayish)}) in a module that jits, but is "
+                    "not a registered pytree — jit sees one opaque leaf",
+                    "decorate with @jax.tree_util.register_dataclass (or "
+                    "register_pytree_node_class) splitting array children "
+                    "from static metadata",
+                    source_lines))
+        elif is_namedtuple:
+            staticish = [n for n, anns in field_anns
+                         if anns & _STATIC_ANNOTATIONS
+                         and not anns & _ARRAY_ANNOTATIONS]
+            if staticish:
+                out.append(_mk(
+                    "JL005", path, node,
+                    f"NamedTuple `{node.name}` auto-pytrees its static "
+                    f"fields ({', '.join(staticish)}) into traced leaves "
+                    "(the PR 5 PackedWeights bug)",
+                    "register the class with register_pytree_node putting "
+                    "static config in aux_data, or move static fields out "
+                    "of the container",
+                    source_lines))
+    return out
+
+
+# ---------------------------------------------------------------- JL006
+
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    if last_part(dec) == "jit":
+        return True
+    if isinstance(dec, ast.Call):
+        lp = last_part(dec.func)
+        if lp == "jit":
+            return True
+        if lp == "partial" and dec.args and last_part(dec.args[0]) == "jit":
+            return True
+    return False
+
+
+def check_jl006_jit_static_hygiene(tree, path, source_lines):
+    """JL006 — recompile hazards on jitted functions.
+
+    Two patterns: (a) a jit-decorated function with a mutable/computed
+    default (``def f(x, opts={}):``) — unhashable when static, and a fresh
+    object identity per definition when not; (b) ``jax.jit(f)(x)`` called
+    immediately inside a function body — a fresh wrapper every invocation,
+    so the jit cache misses 100% of the time and the serving layer's
+    compile-once amortization silently becomes compile-always. Assigning the
+    wrapper (``g = jax.jit(f)``) or passing it to a timing harness is the
+    correct idiom and is not flagged.
+    """
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(_is_jit_decorator(d) for d in node.decorator_list):
+                all_defaults = (node.args.defaults
+                                + [d for d in node.args.kw_defaults if d])
+                for d in all_defaults:
+                    if isinstance(d, (ast.List, ast.Dict, ast.Set, ast.Call)):
+                        out.append(_mk(
+                            "JL006", path, d,
+                            f"jitted `{node.name}` has a non-literal default "
+                            "— unhashable as a static arg and a recompile "
+                            "hazard as a traced one",
+                            "use None + an in-body fallback, or a hashable "
+                            "frozen constant",
+                            source_lines))
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Call):
+            if last_part(node.func.func) == "jit" \
+                    and any(True for _ in enclosing_functions(node)):
+                out.append(_mk(
+                    "JL006", path, node,
+                    "`jit(...)(...)` builds a fresh wrapper per call — the "
+                    "compile cache misses every time",
+                    "hoist the jitted wrapper to module scope (or cache it) "
+                    "so repeated calls reuse the executable",
+                    source_lines))
+    return out
+
+
+# ---------------------------------------------------------------- JL007
+
+_DURABLE_SUFFIXES = ("parallel/journal.py", "train/checkpoint.py")
+
+
+def _in_durable_path(path: str) -> bool:
+    p = path.replace("\\", "/")
+    return "launch/" in p or any(p.endswith(s) for s in _DURABLE_SUFFIXES)
+
+
+def _writes_mode(call: ast.Call) -> str | None:
+    """The write-ish mode string if this is open(..., 'w'/'a'/'x'...)."""
+    lp = last_part(call.func)
+    if lp != "open":
+        return None
+    mode = None
+    if len(call.args) >= 2 and isinstance(call.args[1], ast.Constant):
+        mode = call.args[1].value
+    for kw in call.keywords:
+        if kw.arg == "mode" and isinstance(kw.value, ast.Constant):
+            mode = kw.value.value
+    if isinstance(mode, str) and any(c in mode for c in "wax"):
+        return mode
+    return None
+
+
+def _chain_has_rename(node: ast.AST) -> bool:
+    for fn in enclosing_functions(node):
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Call) \
+                    and last_part(sub.func) in ("rename", "replace") \
+                    and dotted(sub.func) in ("os.rename", "os.replace"):
+                return True
+    return False
+
+
+def check_jl007_non_atomic_write(tree, path, source_lines):
+    """JL007 — direct writes on durability-critical paths.
+
+    The PR 6 lesson: a preempted ``open(p, 'w')`` leaves a torn file that a
+    resumed run happily parses. On the paths whose whole job is surviving
+    kill -9 (``launch/``, ``parallel/journal.py``, ``train/checkpoint.py``),
+    every durable artifact must go tmp-file -> fsync -> ``os.replace``.
+    Flags ``open(..., 'w'/'a'/'x')`` and ``np.save``/``np.savez`` unless
+    some lexically-enclosing function also calls ``os.rename``/``os.replace``
+    (the atomic-commit shape — e.g. ``checkpoint.save`` writes into a tmp
+    dir it renames at the end).
+    """
+    if not _in_durable_path(path):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        mode = _writes_mode(node)
+        d = dotted(node.func)
+        is_npsave = d in ("np.save", "np.savez", "np.savez_compressed",
+                          "numpy.save", "numpy.savez",
+                          "numpy.savez_compressed")
+        if mode is None and not is_npsave:
+            continue
+        if _chain_has_rename(node):
+            continue
+        what = f"open(..., {mode!r})" if mode else d
+        out.append(_mk(
+            "JL007", path, node,
+            f"direct `{what}` on a durability-critical path — a preemption "
+            "mid-write leaves a torn file that resume will read (the PR 6 "
+            "checkpoint lesson)",
+            "write to a tmp path, fsync, then os.replace() into place "
+            "(see repro.parallel.journal.write_json_durable), or pragma "
+            "with the reason the write is not a commit point",
+            source_lines))
+    return out
+
+
+# ---------------------------------------------------------------- registry
+
+ALL_RULES = {
+    "JL001": check_jl001_dtype_narrowing,
+    "JL002": check_jl002_prng_key_reuse,
+    "JL003": check_jl003_view_write,
+    "JL004": check_jl004_cond_under_spmd,
+    "JL005": check_jl005_unregistered_pytree,
+    "JL006": check_jl006_jit_static_hygiene,
+    "JL007": check_jl007_non_atomic_write,
+}
+
+RULE_SUMMARIES = {
+    "JL001": "dtype narrowing: literal narrow casts / dtype-defaulting "
+             "jnp constructors (PR 4 c128->c64 dequantize)",
+    "JL002": "PRNG key reuse: one key consumed by two samplers without a "
+             "split/fold_in in between",
+    "JL003": "view write: subscript assignment through ravel()/reshape()/"
+             "flatten() results (PR 4 cartesian_mask)",
+    "JL004": "cond under SPMD: lax.cond/switch lexically inside "
+             "shard_map/vmap — both branches execute (PR 5)",
+    "JL005": "unregistered pytree: dataclass/static-field NamedTuple "
+             "crossing jit/shard_map (PR 5 PackedWeights)",
+    "JL006": "jit static hygiene: non-literal defaults on jitted fns; "
+             "jit(f)(x) fresh-wrapper-per-call",
+    "JL007": "non-atomic write: open('w')/np.save on durable paths without "
+             "an enclosing os.replace commit (PR 6)",
+}

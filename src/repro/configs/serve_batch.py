@@ -38,6 +38,9 @@ class ServeConfig:
     bits_y: Optional[int] = None
     backend: str = "dense"              # "dense" | "packed"
     seed: int = 0
+    # run under repro.analysis.sanitize: debug_nans/debug_infs tripwires plus
+    # the backend-compile counter (forces with_trace=True — see serve.py)
+    sanitize: bool = False
 
     @property
     def n_hard(self) -> int:
@@ -61,11 +64,13 @@ SMOKE = ServeConfig(name="serve-gaussian-smoke", m=64, n=128, s=8, chunk=8,
 # kill -TERM reliably lands mid-stream (tests/test_fault_injection.py kills
 # after the first chunk's progress line and the restarted run must drain the
 # journaled prefix and replay the rest bit-identically).
+# sanitize=True: resumed runs are NaN-checked too — a restart that drains a
+# torn or garbage journal entry should trip the sanitizer, not serve it.
 FAULT = ServeConfig(name="serve-gaussian-fault", m=48, n=96, s=5, chunk=8,
-                    n_chunks=5, n_iters=30)
+                    n_chunks=5, n_iters=30, sanitize=True)
 
 # Same stream through the packed-operator server (the restart must rebuild
 # the identical packed codes from the construction key).
 FAULT_PACKED = ServeConfig(name="serve-gaussian-fault-packed", m=48, n=96, s=5,
                            chunk=8, n_chunks=5, n_iters=30, bits_phi=4,
-                           bits_y=8, backend="packed")
+                           bits_y=8, backend="packed", sanitize=True)

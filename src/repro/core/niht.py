@@ -55,6 +55,7 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.operators import is_linear_operator, make_iteration_operators
 from repro.core.threshold import hard_threshold, top_s_mask
@@ -297,7 +298,9 @@ def _solver_setup(
         else:
             # skip the residual matvecs (one of them streams dense f32 Φ —
             # benchmarks disable the trace so the loop is pure algorithm traffic)
-            rq = rt = jnp.full((X.shape[0],), jnp.nan, jnp.float32)
+            # np-built so the intentional NaN marker is a transfer,
+            # not an op that trips jax_debug_nans (see analysis.sanitize)
+            rq = rt = jnp.asarray(np.full(X.shape[0], np.nan, np.float32))
         return X_new, (rq, rt, mu, changed, n_bt)
 
     return X0, iteration
@@ -402,7 +405,7 @@ def _qniht_core(
             k, _, done, _, _, _ = st
             return (k < n_iters) & ~jnp.all(done)
 
-        nanrow = jnp.full((B,), jnp.nan, jnp.float32)
+        nanrow = jnp.asarray(np.full(B, np.nan, np.float32))  # np-built: see sanitize note above
         prev0 = (nanrow, nanrow, jnp.zeros((B,), jnp.float32),
                  jnp.zeros((B,), bool), jnp.zeros((B,), jnp.int32))
         bufs0 = jax.tree_util.tree_map(
@@ -487,7 +490,9 @@ def solver_init(
         phi.dtype if jnp.issubdtype(jnp.dtype(phi.dtype), jnp.complexfloating)
         else jnp.float32
     )
-    nanrow = jnp.full((B,), jnp.nan, jnp.float32)
+    # np-built NaN marker: a transfer, not an op, so eager solver_init
+    # does not trip jax_debug_nans (repro.analysis.sanitize)
+    nanrow = jnp.asarray(np.full(B, np.nan, np.float32))
     last = IHTTrace(resid_q=nanrow, resid_true=nanrow,
                     mu=jnp.zeros((B,), jnp.float32),
                     support_changed=jnp.zeros((B,), bool),

@@ -296,15 +296,15 @@ class SubsampledFourierOperator:
     def mv(self, x: jax.Array) -> jax.Array:
         r = self.resolution
         img = x.reshape(*x.shape[:-1], r, r)
-        k = jnp.fft.fft2(img, norm="ortho").astype(jnp.complex64)
+        k = jnp.fft.fft2(img, norm="ortho").astype(self.dtype)
         return jnp.take(k.reshape(*x.shape[:-1], r * r), self.indices, axis=-1)
 
     def rmv(self, v: jax.Array) -> jax.Array:
         r = self.resolution
         full = jnp.zeros((*v.shape[:-1], r * r), jnp.complex64)
-        full = full.at[..., self.indices].set(v.astype(jnp.complex64))
+        full = full.at[..., self.indices].set(v.astype(self.dtype))
         img = jnp.fft.ifft2(full.reshape(*v.shape[:-1], r, r), norm="ortho")
-        return img.reshape(*v.shape[:-1], r * r).astype(jnp.complex64)
+        return img.reshape(*v.shape[:-1], r * r).astype(self.dtype)
 
     def tree_flatten(self):
         return (self.indices,), (self.resolution,)

@@ -423,8 +423,9 @@ def main(argv=None):
                    "status": "error", "error": f"{type(e).__name__}: {e}",
                    "traceback": traceback.format_exc()[-4000:]}
             failures += 1
-        with open(os.path.join(args.out, tag + ".json"), "w") as f:
-            json.dump(rec, f, indent=1)
+        from repro.parallel.journal import write_json_durable
+
+        write_json_durable(os.path.join(args.out, tag + ".json"), rec)
         print(f"[dryrun] {tag}: {rec['status']}"
               + (f" ({rec.get('error','')[:160]})" if rec["status"] == "error" else ""))
     if failures:

@@ -359,6 +359,10 @@ def main(argv=None):
                          "--checkpoint-dir; works across --devices widths "
                          "(elastic) and falls back to a fresh start when the "
                          "directory has no restorable checkpoint")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="run the solve under repro.analysis.sanitize: any "
+                         "NaN/Inf raises at the producing op, and a "
+                         "[sanitize] line reports backend compile counts")
     args = ap.parse_args(argv)
     if (args.resume or args.ckpt_every != 10) and not args.checkpoint_dir:
         ap.error("--resume/--ckpt-every need --checkpoint-dir")
@@ -385,45 +389,57 @@ def main(argv=None):
         ap.error("--sparsity-basis selects the MRI recovery model; use an mri config")
     from repro.launch.resilience import Preempted
 
+    if args.sanitize:
+        from repro.analysis.sanitize import sanitize as sanitize_ctx
+
+        ctx = sanitize_ctx()
+    else:
+        import contextlib
+
+        ctx = contextlib.nullcontext()
     try:
-        if args.config.startswith("lofar"):
-            if gran == "per_band":
-                ap.error("per_band is the MRI observation granularity; use an mri config")
-            cs = {"lofar": LOFAR_CONFIG, "lofar-bench": LOFAR_BENCH,
-                  "lofar-smoke": LOFAR_SMOKE}[args.config]
-            out = recover_lofar(cs, backend, args.bits_phi, args.bits_y, key,
-                                args.requantize, args.batch, gran, args.group_size,
-                                devices=args.devices, ckpt=ckpt)
-            label = ("32bit" if backend == "dense"
-                     else f"{args.bits_phi}&{args.bits_y}bit[{backend}]")
-        elif args.config.startswith("mri"):
-            if gran in ("per_channel", "per_block"):
-                ap.error("the MRI Φ is matrix-free (nothing packed to scale); "
-                         "use --scale-granularity per_band for the observations")
-            cs = {"mri": MRI_CONFIG, "mri-bench": MRI_BENCH,
-                  "mri-smoke": MRI_SMOKE, "mri-wavelet": MRI_WAVELET,
-                  "mri-wavelet-bench": MRI_WAVELET_BENCH,
-                  "mri-wavelet-smoke": MRI_WAVELET_SMOKE}[args.config]
-            bits_y = None if backend == "dense" else args.bits_y
-            gran = args.scale_granularity or cs.scale_granularity
-            out = recover_mri(cs, bits_y, key, args.batch, gran, args.group_size,
-                              sparsity_basis=args.sparsity_basis,
-                              devices=args.devices, ckpt=ckpt)
-            basis = args.sparsity_basis or cs.sparsity_basis
-            label = ("32bit[matrix-free]" if bits_y is None
-                     else f"y@{bits_y}bit[{gran},matrix-free]") + f"[{basis}]"
-        else:
-            if gran == "per_band":
-                ap.error("per_band is the MRI observation granularity; use an mri config")
-            g = GAUSS_CONFIG if args.config == "gaussian" else GAUSS_SMOKE
-            out = recover_gaussian(g, backend, args.bits_phi, args.bits_y, key,
-                                   args.requantize, args.batch, gran, args.group_size,
-                                   devices=args.devices, ckpt=ckpt)
-            label = ("32bit" if backend == "dense"
-                     else f"{args.bits_phi}&{args.bits_y}bit[{backend}]")
+        with ctx as counter:
+            if args.config.startswith("lofar"):
+                if gran == "per_band":
+                    ap.error("per_band is the MRI observation granularity; use an mri config")
+                cs = {"lofar": LOFAR_CONFIG, "lofar-bench": LOFAR_BENCH,
+                      "lofar-smoke": LOFAR_SMOKE}[args.config]
+                out = recover_lofar(cs, backend, args.bits_phi, args.bits_y, key,
+                                    args.requantize, args.batch, gran, args.group_size,
+                                    devices=args.devices, ckpt=ckpt)
+                label = ("32bit" if backend == "dense"
+                         else f"{args.bits_phi}&{args.bits_y}bit[{backend}]")
+            elif args.config.startswith("mri"):
+                if gran in ("per_channel", "per_block"):
+                    ap.error("the MRI Φ is matrix-free (nothing packed to scale); "
+                             "use --scale-granularity per_band for the observations")
+                cs = {"mri": MRI_CONFIG, "mri-bench": MRI_BENCH,
+                      "mri-smoke": MRI_SMOKE, "mri-wavelet": MRI_WAVELET,
+                      "mri-wavelet-bench": MRI_WAVELET_BENCH,
+                      "mri-wavelet-smoke": MRI_WAVELET_SMOKE}[args.config]
+                bits_y = None if backend == "dense" else args.bits_y
+                gran = args.scale_granularity or cs.scale_granularity
+                out = recover_mri(cs, bits_y, key, args.batch, gran, args.group_size,
+                                  sparsity_basis=args.sparsity_basis,
+                                  devices=args.devices, ckpt=ckpt)
+                basis = args.sparsity_basis or cs.sparsity_basis
+                label = ("32bit[matrix-free]" if bits_y is None
+                         else f"y@{bits_y}bit[{gran},matrix-free]") + f"[{basis}]"
+            else:
+                if gran == "per_band":
+                    ap.error("per_band is the MRI observation granularity; use an mri config")
+                g = GAUSS_CONFIG if args.config == "gaussian" else GAUSS_SMOKE
+                out = recover_gaussian(g, backend, args.bits_phi, args.bits_y, key,
+                                       args.requantize, args.batch, gran, args.group_size,
+                                       devices=args.devices, ckpt=ckpt)
+                label = ("32bit" if backend == "dense"
+                         else f"{args.bits_phi}&{args.bits_y}bit[{backend}]")
     except Preempted as e:
         print(f"[recover] {e}; restart with --resume to continue", flush=True)
         return
+    if counter is not None:
+        print(f"[sanitize] ok {counter.summary()} debug_nans=on "
+              "debug_infs=on", flush=True)
     print(f"[recover] {args.config} {label}: " +
           " ".join(f"{k}={v if not isinstance(v, float) else round(v, 4)}"
                    for k, v in out.items()))

@@ -70,7 +70,8 @@ def build_stream(cfg, key):
     return base.phi, chunks, truths
 
 
-def serve(cfg, devices=None, chunks=None, journal_dir=None, resume=False):
+def serve(cfg, devices=None, chunks=None, journal_dir=None, resume=False,
+          sanitize=None):
     """Run the stream through a BatchServer; returns a metrics dict.
 
     With ``journal_dir``, each chunk is write-ahead journaled and the loop
@@ -80,7 +81,14 @@ def serve(cfg, devices=None, chunks=None, journal_dir=None, resume=False):
     stream, drains journaled results and solves the rest — the per-chunk
     ``x_digest`` lines it prints are bit-identical to an uninterrupted run's
     (the fault-injection tests assert exactly that).
+
+    ``sanitize`` (default: ``cfg.sanitize``) runs the whole loop under
+    :func:`repro.analysis.sanitize.sanitize`: any NaN/Inf anywhere raises at
+    the producing op, and a compile counter is marked warm after the first
+    chunk — the ``[sanitize]`` summary line and the ``compiles*`` metrics
+    fields report whether the compile-once contract held.
     """
+    import contextlib
     import hashlib
 
     import jax
@@ -90,6 +98,8 @@ def serve(cfg, devices=None, chunks=None, journal_dir=None, resume=False):
     from repro.parallel import BatchServer, make_batch_mesh
     from repro.train.fault import PreemptionGuard
 
+    if sanitize is None:
+        sanitize = getattr(cfg, "sanitize", False)
     key = jax.random.PRNGKey(cfg.seed)
     if chunks is not None:
         cfg = __import__("dataclasses").replace(cfg, n_chunks=chunks)
@@ -100,13 +110,24 @@ def serve(cfg, devices=None, chunks=None, journal_dir=None, resume=False):
         kw = dict(bits_phi=cfg.bits_phi, bits_y=cfg.bits_y, backend="packed")
     elif cfg.bits_y:
         kw = dict(bits_y=cfg.bits_y)
-    srv = BatchServer(phi, cfg.s, cfg.n_iters, mesh=mesh, key=key,
-                      exit_tol=cfg.exit_tol, journal_dir=journal_dir,
-                      resume=resume, **kw)
+    if sanitize:
+        # with_trace=False fills the trace outputs with NaN markers, which
+        # debug_nans would (correctly) refuse — sanitized runs pay for the
+        # real residual trace instead
+        kw["with_trace"] = True
+        from repro.analysis.sanitize import sanitize as sanitize_ctx
+
+        ctx = sanitize_ctx()
+    else:
+        ctx = contextlib.nullcontext()
 
     walls, rels_easy, rels_hard = [], [], []
     preempted = None
-    with PreemptionGuard() as guard:
+    counter = None
+    with ctx as counter, PreemptionGuard() as guard:
+        srv = BatchServer(phi, cfg.s, cfg.n_iters, mesh=mesh, key=key,
+                          exit_tol=cfg.exit_tol, journal_dir=journal_dir,
+                          resume=resume, **kw)
         for ci, Y in enumerate(stream):
             t0 = time.time()
             res = srv.submit(Y, jax.random.fold_in(key, 1000 + ci))
@@ -117,14 +138,27 @@ def serve(cfg, devices=None, chunks=None, journal_dir=None, resume=False):
             for b in range(cfg.chunk):
                 rel = float(relative_error(res.x[b], truths[ci][b]))
                 (rels_hard if b < cfg.n_hard else rels_easy).append(rel)
+            if counter is not None and ci == 0:
+                # warm-up = chunk 0 end to end, metrics included: later
+                # chunks must reuse both the sharded solve executable and
+                # the small eager metric programs
+                counter.mark_warm()
             if guard.requested and ci + 1 < len(stream):
                 preempted = ci + 1
                 print(f"[serve] preempted after chunk {ci} "
                       f"(journal has {ci + 1}/{len(stream)} chunks)", flush=True)
                 break
+    if counter is not None:
+        print(f"[sanitize] ok {counter.summary()} debug_nans=on debug_infs=on",
+              flush=True)
     steady = walls[1:] if len(walls) > 1 else walls
     items_per_s = cfg.chunk / (sum(steady) / len(steady))
+    sanitize_fields = {} if counter is None else {
+        "sanitize_compiles": counter.compiles,
+        "sanitize_compiles_after_warmup": counter.compiles_since_warm,
+    }
     return {
+        **sanitize_fields,
         "devices": srv.n_shards,
         "chunks": len(stream),
         "chunks_served": srv.n_chunks,
@@ -161,6 +195,10 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true",
                     help="drain already-journaled chunk results from "
                          "--checkpoint-dir instead of re-solving them")
+    ap.add_argument("--sanitize", action="store_true", default=None,
+                    help="run under repro.analysis.sanitize: raise on any "
+                         "NaN/Inf and report backend compiles after warm-up "
+                         "(default: the config's sanitize flag)")
     args = ap.parse_args(argv)
     if args.chunks is not None and args.chunks < 1:
         ap.error("--chunks must be >= 1")
@@ -179,7 +217,8 @@ def main(argv=None):
            "serve-gaussian-smoke": SMOKE, "serve-gaussian-fault": FAULT,
            "serve-gaussian-fault-packed": FAULT_PACKED}[args.config]
     out = serve(cfg, args.devices, args.chunks,
-                journal_dir=args.checkpoint_dir, resume=args.resume)
+                journal_dir=args.checkpoint_dir, resume=args.resume,
+                sanitize=args.sanitize)
     print(f"[serve] {cfg.name}: " +
           " ".join(f"{k}={v}" for k, v in out.items()))
 

@@ -401,7 +401,9 @@ class BatchServer:
     def _placeholder_trace(self, b: int) -> IHTTrace:
         """Trace shell for a drained chunk (the journal persists only x)."""
         n_iters = self._statics["n_iters"]
-        nanbuf = jnp.full((n_iters, b), jnp.nan, jnp.float32)
+        # np-built: an eager jnp.full(nan) would trip jax_debug_nans
+        # under --sanitize even though this NaN means "not recorded"
+        nanbuf = jnp.asarray(np.full((n_iters, b), np.nan, np.float32))
         return IHTTrace(resid_q=nanbuf, resid_true=nanbuf, mu=nanbuf,
                         support_changed=jnp.zeros((n_iters, b), bool),
                         backtracks=jnp.zeros((n_iters, b), jnp.int32))

@@ -323,7 +323,7 @@ def mri_observations(
     kr, ki = jax.random.split(key)
     e = (sigma * (jax.random.normal(kr, clean.shape, jnp.float32)
                   + 1j * jax.random.normal(ki, clean.shape, jnp.float32))
-         ).astype(jnp.complex64)
+         ).astype(clean.dtype)
     return clean + e, e
 
 

@@ -173,6 +173,7 @@ def restore(directory: str, step: int, target, shardings=None):
         if sh is not None:
             leaves.append(jax.device_put(arr, sh))
         else:
+            # jaxlint: allow=JL001 -- dtype validated vs manifest+target above
             leaves.append(jnp.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 

@@ -1,0 +1,9 @@
+"""Deliberately-buggy fixtures for the jaxlint self-tests.
+
+Each ``jlNNN_bad.py`` distills the historical bug its rule mechanizes (see
+``docs/static-analysis.md``); each ``jlNNN_ok.py`` is the shipped fix in the
+same shape. The engine's default walk skips this directory
+(``repro.analysis.engine.EXCLUDED_DIR_NAMES``) — the files are only linted
+when named explicitly, which is exactly what ``tests/test_jaxlint.py`` and
+``scripts/ci.sh analyze``'s self-check do. They are parsed, never imported.
+"""

@@ -1,0 +1,14 @@
+"""JL001 fixture: the PR 4 dequantize bug — a hard-coded complex64 cast
+demotes complex128 reference data, and a dtype-defaulting jnp.asarray
+canonicalizes f64 down to f32."""
+import jax.numpy as jnp
+
+
+def dequantize(codes, scale, v):
+    # BUG: a c128 `codes * scale` is silently demoted to c64
+    return (codes * scale).astype(jnp.complex64)
+
+
+def to_device(x_f64):
+    # BUG: default canonicalization narrows float64 -> float32
+    return jnp.asarray(x_f64)

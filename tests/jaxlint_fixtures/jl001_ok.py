@@ -1,0 +1,15 @@
+"""JL001 fixture (clean): dtype derived from the operand, explicit dtype=."""
+import jax.numpy as jnp
+
+
+def dequantize(codes, scale, v):
+    return (codes * scale).astype(v.dtype)
+
+
+def to_device(x_f64):
+    return jnp.asarray(x_f64, dtype=x_f64.dtype)
+
+
+def working_precision(x):
+    # float32 is the repo's working precision, deliberately not flagged
+    return x.astype(jnp.float32)

@@ -1,0 +1,9 @@
+"""JL002 fixture: one key, two draws — Φ and the noise become correlated."""
+import jax
+
+
+def make_problem(key, m, n):
+    phi = jax.random.normal(key, (m, n))
+    # BUG: same key — the noise is a deterministic function of Φ's draw
+    noise = jax.random.normal(key, (m,))
+    return phi, noise

@@ -1,0 +1,18 @@
+"""JL002 fixture (clean): split between draws; branch-exclusive reuse."""
+import jax
+
+
+def make_problem(key, m, n):
+    kphi, knoise = jax.random.split(key)
+    phi = jax.random.normal(kphi, (m, n))
+    noise = jax.random.normal(knoise, (m,))
+    return phi, noise
+
+
+def branchy(key, flat):
+    # one draw per mutually exclusive branch is NOT reuse (gaussian.py kflux)
+    if flat:
+        amps = jax.random.uniform(key, (8,))
+    else:
+        amps = jax.random.normal(key, (8,))
+    return amps

@@ -1,0 +1,16 @@
+"""JL003 fixture: the PR 4 cartesian_mask gamble — writing through a ravel()
+result only works when numpy happens to hand back a view."""
+import numpy as np
+
+
+def cartesian_mask(resolution, picks):
+    mask = np.zeros((resolution, resolution), bool)
+    # BUG: ravel() may copy; the write would land in the temporary
+    mask.ravel()[picks] = True
+    return mask
+
+
+def reshape_write(a, idx, v):
+    # BUG: same gamble through reshape
+    a.reshape(-1)[idx] = v
+    return a

@@ -1,0 +1,19 @@
+"""JL003 fixture (clean): .flat (a guaranteed-aliasing view) or functional
+updates — the PR 4 fix."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def cartesian_mask(resolution, picks):
+    mask = np.zeros((resolution, resolution), bool)
+    mask.flat[picks] = True
+    return mask
+
+
+def functional_write(a, idx, v):
+    return a.at[idx].set(v)
+
+
+def read_through_view(a, idx):
+    # reading through ravel() is fine; only writes are the gamble
+    return a.ravel()[idx] + jnp.ones(())

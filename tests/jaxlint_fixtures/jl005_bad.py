@@ -1,0 +1,24 @@
+"""JL005 fixture: the PR 5 PackedWeights bug — containers crossing jit with
+static config riding along as pytree leaves (or, for dataclasses, not being
+pytrees at all)."""
+import dataclasses
+from typing import NamedTuple
+
+import jax
+
+
+class PackedCodes(NamedTuple):
+    codes: jax.Array
+    scale: jax.Array
+    granularity: str  # BUG: auto-pytree makes this str a traced leaf
+
+
+@dataclasses.dataclass
+class Weights:
+    w: jax.Array  # BUG: a plain dataclass is one opaque leaf to jit
+    b: jax.Array
+
+
+@jax.jit
+def apply(pw: PackedCodes, x):
+    return pw.codes * pw.scale * x

@@ -1,0 +1,29 @@
+"""JL005 fixture (clean): the PR 5 fix — register the container, static
+config in aux_data. All-array NamedTuples are fine as-is."""
+from typing import NamedTuple
+
+import jax
+
+
+class PackedCodes(NamedTuple):
+    codes: jax.Array
+    scale: jax.Array
+    granularity: str
+
+
+jax.tree_util.register_pytree_node(
+    PackedCodes,
+    lambda pw: ((pw.codes, pw.scale), pw.granularity),
+    lambda gran, kids: PackedCodes(*kids, granularity=gran),
+)
+
+
+class SolverState(NamedTuple):
+    # all-array NamedTuple: auto-pytree is exactly right, never flagged
+    x: jax.Array
+    resid: jax.Array
+
+
+@jax.jit
+def apply(pw: PackedCodes, x):
+    return pw.codes * pw.scale * x

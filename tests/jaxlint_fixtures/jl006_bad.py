@@ -1,0 +1,17 @@
+"""JL006 fixture: jit hygiene — mutable defaults on jitted functions, and
+fresh-wrapper-per-call jits that can never hit the compile cache."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def solve(y, opts={}):  # BUG: unhashable default on a jitted function
+    return y * opts.get("scale", 1.0)
+
+
+def hot_loop(xs):
+    out = []
+    for x in xs:
+        # BUG: a fresh jit wrapper every iteration — 100% cache misses
+        out.append(jax.jit(lambda v: jnp.dot(v, v))(x))
+    return out

@@ -1,0 +1,22 @@
+"""JL006 fixture (clean): hashable defaults; wrappers hoisted or assigned so
+the compile cache can work — the kernels_micro timing idiom."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def solve(y, scale=1.0):
+    return y * scale
+
+
+_dot = jax.jit(lambda v: jnp.dot(v, v))
+
+
+def hot_loop(xs):
+    return [_dot(x) for x in xs]
+
+
+def timed(time_fn, x):
+    # assigning / passing the wrapper (not calling it inline) is the idiom
+    fn = jax.jit(lambda v: v * 2.0)
+    return time_fn(fn, x)

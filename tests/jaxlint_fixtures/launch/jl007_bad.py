@@ -1,0 +1,13 @@
+"""JL007 fixture: the PR 6 lesson — direct writes on a durability-critical
+path (this fixture lives under launch/) with no atomic-rename commit."""
+import json
+
+import numpy as np
+
+
+def checkpoint(path, state, meta):
+    # BUG: a preemption mid-dump leaves torn JSON that resume will parse
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+    # BUG: torn .npy with no commit marker
+    np.save(path + ".npy", state)

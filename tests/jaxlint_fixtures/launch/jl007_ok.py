@@ -1,0 +1,21 @@
+"""JL007 fixture (clean): tmp write + fsync + os.replace — the atomic-commit
+shape of repro.parallel.journal / repro.train.checkpoint."""
+import json
+import os
+
+import numpy as np
+
+
+def checkpoint(path, state, meta):
+    tmp = path + ".json.tmp"
+    with open(tmp, "w") as f:
+        json.dump(meta, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path + ".json")
+    npy_tmp = path + ".npy.tmp"
+    with open(npy_tmp, "wb") as f:
+        np.save(f, state)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(npy_tmp, path + ".npy")

@@ -1,0 +1,212 @@
+"""jaxlint self-tests: per-rule fixtures, suppression mechanics, and the
+end-to-end "this repo is clean against its baseline" contract.
+
+The fixtures under ``tests/jaxlint_fixtures/`` are parsed, never imported —
+each ``*_bad.py`` distills the historical bug its rule mechanizes and each
+``*_ok.py`` is the shipped fix in the same shape, so a rule that stops
+firing on its bug (or starts firing on the fix) fails here before it lies
+in CI.
+"""
+import json
+import os
+
+import pytest
+
+from repro.analysis.cli import main as cli_main
+from repro.analysis.engine import (
+    find_repo_root,
+    iter_python_files,
+    lint_file,
+    run_jaxlint,
+)
+from repro.analysis.findings import Baseline, Finding, pragma_suppresses
+from repro.analysis.rules import ALL_RULES, RULE_SUMMARIES
+
+REPO = find_repo_root(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+FIXTURES = os.path.join(REPO, "tests", "jaxlint_fixtures")
+
+RULES = ["JL001", "JL002", "JL003", "JL004", "JL005", "JL006", "JL007"]
+
+
+def _fixture(rule, kind):
+    sub = "launch" if rule == "JL007" else ""
+    return os.path.join(FIXTURES, sub, f"{rule.lower()}_{kind}.py")
+
+
+def _lint(path):
+    findings, err = lint_file(path, os.path.relpath(path, REPO).replace(os.sep, "/"))
+    assert err is None, err
+    return findings
+
+
+# ---------------------------------------------------------------- fixtures
+
+
+@pytest.mark.parametrize("rule", RULES)
+def test_bad_fixture_trips_its_rule(rule):
+    findings = _lint(_fixture(rule, "bad"))
+    fired = {f.rule for f in findings}
+    assert rule in fired, f"{rule} did not fire on its own bug fixture"
+    # the bad fixture is a distilled single-bug file: no OTHER rule may
+    # false-positive on it
+    assert fired == {rule}, f"unexpected extra rules on {rule} fixture: {fired}"
+
+
+@pytest.mark.parametrize("rule", RULES)
+def test_ok_fixture_is_clean(rule):
+    findings = _lint(_fixture(rule, "ok"))
+    assert findings == [], [f.format() for f in findings]
+
+
+@pytest.mark.parametrize("rule", RULES)
+def test_bad_fixture_fails_cli_and_ok_passes(rule):
+    assert cli_main([_fixture(rule, "bad"), "--baseline", "none"]) == 1
+    assert cli_main([_fixture(rule, "ok"), "--baseline", "none"]) == 0
+
+
+def test_bad_fixtures_report_multiple_sites():
+    # each bad fixture carries >= 2 seeded bugs except where one suffices
+    multi = {"JL001": 2, "JL003": 2, "JL004": 2, "JL005": 2, "JL006": 2,
+             "JL007": 2}
+    for rule, n in multi.items():
+        findings = _lint(_fixture(rule, "bad"))
+        assert len(findings) >= n, (rule, [f.format() for f in findings])
+
+
+# ---------------------------------------------------------------- engine
+
+
+def test_fixture_dir_excluded_from_default_walk():
+    files = list(iter_python_files(REPO))
+    assert not any("jaxlint_fixtures" in p for p in files)
+    # but explicit paths bypass the exclusion (how CI lints the fixtures)
+    explicit = list(iter_python_files(REPO, [_fixture("JL001", "bad")]))
+    assert len(explicit) == 1
+
+
+def test_findings_carry_location_and_hint():
+    f = _lint(_fixture("JL003", "bad"))[0]
+    assert f.path.endswith("jl003_bad.py")
+    assert f.line > 0
+    assert f.snippet and f.hint
+    assert f"{f.path}:{f.line}" in f.format()
+    assert "hint:" in f.format()
+
+
+def test_rule_registry_consistent():
+    assert set(ALL_RULES) == set(RULE_SUMMARIES) == set(RULES)
+
+
+# ---------------------------------------------------------------- pragmas
+
+
+def test_pragma_same_line_and_line_above(tmp_path):
+    src = (
+        "import jax.numpy as jnp\n"
+        "def f(x, y):\n"
+        "    a = x.astype(jnp.complex64)  # jaxlint: allow=JL001 -- widening\n"
+        "    # jaxlint: allow=JL001 -- also fine\n"
+        "    b = y.astype(jnp.complex64)\n"
+        "    c = y.astype(jnp.complex64)\n"
+        "    return a, b, c\n"
+    )
+    p = tmp_path / "prag.py"
+    p.write_text(src)
+    findings, _ = lint_file(str(p), "prag.py")
+    assert len(findings) == 3
+    lines = src.splitlines()
+    kept = [f for f in findings if not pragma_suppresses(lines, f)]
+    assert [f.line for f in kept] == [6]  # only the unpragma'd cast survives
+
+
+def test_pragma_names_must_match_rule(tmp_path):
+    src = (
+        "import jax.numpy as jnp\n"
+        "def f(x):\n"
+        "    # jaxlint: allow=JL002 -- wrong rule named\n"
+        "    return x.astype(jnp.complex64)\n"
+    )
+    p = tmp_path / "prag2.py"
+    p.write_text(src)
+    findings, _ = lint_file(str(p), "prag2.py")
+    assert len(findings) == 1
+    assert not pragma_suppresses(src.splitlines(), findings[0])
+
+
+def test_bare_pragma_allows_everything(tmp_path):
+    src = (
+        "import jax.numpy as jnp\n"
+        "def f(x):\n"
+        "    return x.astype(jnp.complex64)  # jaxlint: allow\n"
+    )
+    p = tmp_path / "prag3.py"
+    p.write_text(src)
+    findings, _ = lint_file(str(p), "prag3.py")
+    assert len(findings) == 1
+    assert pragma_suppresses(src.splitlines(), findings[0])
+
+
+# ---------------------------------------------------------------- baseline
+
+
+def test_baseline_matches_on_snippet_not_line():
+    f = Finding(rule="JL001", path="a.py", line=10, message="m", hint="h",
+                snippet="x = y.astype(jnp.complex64)")
+    bl = Baseline([{"rule": "JL001", "path": "a.py",
+                    "snippet": "x = y.astype(jnp.complex64)", "reason": "r"}])
+    assert bl.matches(f)
+    # unrelated line drift keeps matching
+    assert bl.matches(Finding(rule="JL001", path="a.py", line=99, message="m",
+                              hint="h", snippet="x = y.astype(jnp.complex64)"))
+    # but editing the flagged code breaks the match (forces re-review)
+    assert not bl.matches(Finding(rule="JL001", path="a.py", line=10,
+                                  message="m", hint="h",
+                                  snippet="x = z.astype(jnp.complex64)"))
+
+
+def test_baseline_entries_require_reason(tmp_path):
+    p = tmp_path / "bl.json"
+    p.write_text(json.dumps({"version": 1, "entries": [
+        {"rule": "JL001", "path": "a.py", "snippet": "s"}]}))
+    with pytest.raises(ValueError, match="justification"):
+        Baseline.load(str(p))
+
+
+def test_checked_in_baseline_is_well_formed():
+    bl = Baseline.load(os.path.join(REPO, ".jaxlint-baseline.json"))
+    assert bl.entries, "baseline exists but is empty — drop the file instead"
+    for e in bl.entries:
+        assert e["rule"] in ALL_RULES
+        assert len(e["reason"]) > 10, f"throwaway reason on {e}"
+        assert os.path.exists(os.path.join(REPO, e["path"])), e["path"]
+
+
+# ---------------------------------------------------------------- repo e2e
+
+
+def test_repo_is_clean_against_baseline():
+    """The blocking CI contract: src/tests/benchmarks/examples lint clean
+    modulo the checked-in baseline + inline pragmas."""
+    report = run_jaxlint(root=REPO)
+    assert report.files > 100  # sanity: the walk actually covered the repo
+    assert report.parse_errors == []
+    assert report.findings == [], "\n".join(f.format() for f in report.findings)
+
+
+def test_repo_baseline_has_no_stale_entries():
+    """Every baseline entry must still match a live finding — stale entries
+    are suppressions waiting to hide a future bug."""
+    report = run_jaxlint(root=REPO)
+    matched = {(f.rule, f.path, f.snippet) for f, how in report.suppressed
+               if how == "baseline"}
+    bl = Baseline.load(os.path.join(REPO, ".jaxlint-baseline.json"))
+    stale = [e for e in bl.entries
+             if (e["rule"], e["path"], e["snippet"]) not in matched]
+    assert stale == [], f"stale baseline entries: {stale}"
+
+
+def test_cli_list_rules(capsys):
+    assert cli_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in RULES:
+        assert rule in out

@@ -38,9 +38,11 @@ def _batch(cfg, b=2, s=16, with_mem=True):
     tokens = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
     memory = None
     if with_mem and cfg.family == "encdec":
+        # jaxlint: allow=JL002 -- deterministic fixture: tokens/memory feed
         memory = jax.random.normal(KEY, (b, cfg.encoder_seq, cfg.d_model))
     elif with_mem and cfg.family == "vlm":
-        memory = jax.random.normal(KEY, (b, cfg.n_image_tokens, cfg.d_model))
+        # jaxlint: allow=JL002 -- different samplers; the consistency checks
+        memory = jax.random.normal(KEY, (b, cfg.n_image_tokens, cfg.d_model))  # do not rely on draw independence
     return tokens, memory
 
 
@@ -78,16 +80,18 @@ class TestArchSmoke:
         tokens = jax.random.randint(KEY, (b, s + 1), 0, cfg.vocab_size)
         memory = None
         if cfg.family == "encdec":
+            # jaxlint: allow=JL002 -- deterministic fixture reuse (see _batch)
             frames = jax.random.normal(KEY, (b, cfg.encoder_seq, cfg.d_model))
             memory = encode(cfg, params, frames, POL)
         elif cfg.family == "vlm":
+            # jaxlint: allow=JL002 -- deterministic fixture reuse (see _batch)
             memory = jax.random.normal(KEY, (b, cfg.n_image_tokens, cfg.d_model))
         logits_full, _ = forward(cfg, params, tokens, memory=memory)
         mem_len = memory.shape[1] if memory is not None else 0
         cache = init_cache(cfg, b, s + 8, POL, mem_len=mem_len)
         lp, cache = prefill(cfg, params, tokens[:, :s], cache, memory=memory, policy=POL)
         ld, _ = decode_step(cfg, params, tokens[:, s], cache, policy=POL,
-                            position=jnp.asarray(s))
+                            position=jnp.asarray(s, jnp.int32))
         scale = float(jnp.max(jnp.abs(logits_full))) + 1e-9
         assert float(jnp.max(jnp.abs(lp - logits_full[:, s - 1]))) / scale < 2e-2
         assert float(jnp.max(jnp.abs(ld - logits_full[:, s]))) / scale < 2e-2

@@ -95,6 +95,7 @@ class TestSubsampledFourierOperator:
         key = jax.random.PRNGKey(4)
         n = op.shape[1]
         x = jnp.zeros((n,)).at[jax.random.choice(key, n, (6,), replace=False)].set(
+            # jaxlint: allow=JL002 -- fixture: support/amplitude correlation is harmless
             jax.random.uniform(key, (6,), minval=0.5, maxval=1.0))
         y = op.mv(x)
         kw = dict(real_signal=True, nonneg=True)

@@ -339,6 +339,7 @@ class TestComposedOperator:
     def test_pytree_crosses_jit(self):
         comp, _, _ = self._dense_pair(jax.random.PRNGKey(56))
         x = jax.random.normal(jax.random.PRNGKey(57), (28,), jnp.float32)
+        # jaxlint: allow=JL006 -- one-shot jit: the test IS the trace-through
         out = jax.jit(lambda o, v: o.mv(v))(comp, x)
         np.testing.assert_allclose(np.asarray(out), np.asarray(comp.mv(x)),
                                    rtol=1e-6, atol=1e-6)

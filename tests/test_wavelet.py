@@ -158,6 +158,7 @@ class TestWaveletSynthesisOperator:
         leaves, treedef = jax.tree_util.tree_flatten(op)
         op2 = jax.tree_util.tree_unflatten(treedef, leaves)
         c = jax.random.normal(jax.random.PRNGKey(2), (256,), jnp.float32)
+        # jaxlint: allow=JL006 -- one-shot jit: the test IS the trace-through
         out = jax.jit(lambda o, v: o.mv(v))(op2, c)
         np.testing.assert_allclose(np.asarray(out), np.asarray(op.mv(c)),
                                    rtol=1e-6, atol=1e-7)
