@@ -31,6 +31,23 @@ def measure(fn):
     return time_fn(fn, warmup=0, iters=3), res
 
 
+def roofline_fields(measured_us: float, predicted_us) -> dict:
+    """The measured-vs-model triple every BENCH row carries.
+
+    ``measured_us`` duplicates ``us_per_call`` under its roofline name;
+    ``predicted_us`` is the machine-roofline floor for the same work
+    (:mod:`benchmarks.roofline`'s measured-peak model — None when no model
+    applies); ``roofline_frac`` = predicted/measured — the fraction of the
+    attainable ceiling actually achieved (1.0 = at the roofline; >1 flags a
+    model undercount, deliberately not clamped)."""
+    out = {"measured_us": round(measured_us, 1), "predicted_us": None,
+           "roofline_frac": None}
+    if predicted_us and predicted_us > 0:
+        out["predicted_us"] = round(predicted_us, 1)
+        out["roofline_frac"] = round(predicted_us / measured_us, 4)
+    return out
+
+
 def write_json(records: list, path: str) -> None:
     """Timestamp + write one suite's record dicts to its BENCH_*.json file."""
     stamp = time.strftime("%Y-%m-%dT%H:%M:%S")

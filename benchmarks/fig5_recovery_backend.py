@@ -3,11 +3,27 @@
 The paper's headline systems claim is that recovery time is bound by
 ``size(Φ̂)/bandwidth`` (suppl. §8.1), so streaming packed 2/4/8-bit codes
 instead of f32 should cut the hot loop's traffic by 32/bits×. This suite times
-the three solver backends end-to-end (traces disabled — the loop is pure
-algorithm traffic) and reports the streamed-bytes model alongside wall time;
-wall-clock speedups require the Pallas kernels on real TPU HBM, the bytes
-column is the hardware-independent law. A batched run (B observations of one
-Φ̂) shows the amortization of the heavy-traffic serving mode.
+the solver backends end-to-end (traces disabled — the loop is pure algorithm
+traffic) in the paper's **serving scenario**: B observations of one Φ̂
+recovered per call (``qniht_batch``, the deployed heavy-traffic mode). That is
+where the bandwidth law pays on wall clock — every backend streams its
+operator once per application for all B rows, so the packed backends' 32/bits×
+byte advantage survives while the per-row compute is amortized; the fused CPU
+path additionally runs the batch as canonical-layout gemms on the shared
+transposed codes. The primary ``recover_*`` rows are this batched mode;
+``recover_*_single`` rows report the same solvers on one observation for
+transparency — and honestly lose to dense there at bench scale: a 256×512 f32
+Φ is cache-resident, so the single-vector gemv pays no memory-traffic cost
+for the packed path's unpack arithmetic to buy back. The bandwidth law needs
+either a Φ̂ that doesn't fit in cache or a batch to amortize the unpack over;
+the batched rows show the latter.
+
+Every row carries ``extra: "speedup=…"`` **measured** against the dense-f32
+row of the same mode, plus the model numbers kept deliberately separate:
+``predicted_speedup`` (machine-roofline model ratio), ``bytes_vs_f32`` (the
+pure stream ratio), and the ``measured_us`` / ``predicted_us`` /
+``roofline_frac`` triple from ``benchmarks.roofline``'s measured machine
+peaks.
 
 Rows double as the perf trajectory: every run rewrites ``BENCH_recovery.json``
 (list of row dicts for THIS run; override the path with the
@@ -21,7 +37,8 @@ import os
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import measure, row, write_json
+from benchmarks.common import measure, roofline_fields, row, write_json
+from benchmarks.roofline import machine_peaks, predict_recovery_us
 from repro.configs.gaussian_toy import CONFIG, SMOKE
 from repro.core import qniht, qniht_batch, relative_error
 from repro.sensing import make_gaussian_problem
@@ -43,60 +60,88 @@ def run(fast: bool = True):
     prob = make_gaussian_problem(g.m, g.n, g.s, 20.0, key)
     Y = jnp.stack([prob.y] * BATCH)
     f32_bytes = _streamed_bytes_per_iter(g.m, g.n, None)
+    peaks = machine_peaks()
     rows, records = [], []
+    us_dense = {}          # per batch-size: the measured dense-f32 reference
+    pred_dense = {}
 
-    def add(name, us, stream_bits, rel_err, extra="", bits_phi=None):
+    def add(name, us, stream_bits, rel_err, batch, extra="", bits_phi=None):
         # stream_bits: width of the bytes actually streamed (None → f32; the
         # fake backend quantizes VALUES but still streams f32). bits_phi: the
         # quantization level of Φ̂'s values, recorded separately.
         streamed = _streamed_bytes_per_iter(g.m, g.n, stream_bits)
         ratio = f32_bytes / streamed
-        derived = (f"streamed_bytes={streamed} vs_f32={ratio:.1f}x_fewer "
-                   f"rel_error={rel_err:.4f}" + (f" {extra}" if extra else ""))
+        pred = predict_recovery_us(g.m, g.n, g.n_iters, stream_bits, batch, peaks)
+        speedup = us_dense[batch] / us if batch in us_dense else 1.0
+        pred_speedup = pred_dense[batch] / pred if batch in pred_dense else 1.0
+        derived = (f"speedup={speedup:.2f}x streamed_bytes={streamed} "
+                   f"vs_f32={ratio:.1f}x_fewer rel_error={rel_err:.4f}"
+                   + (f" {extra}" if extra else ""))
         rows.append(row(name, us, derived))
         records.append({
             "name": name, "us_per_call": round(us, 1), "bits_phi": bits_phi,
             "stream_bits": stream_bits, "streamed_bytes": streamed,
             "bytes_vs_f32": round(ratio, 2), "rel_error": round(rel_err, 5),
+            "measured_speedup": round(speedup, 3),
+            "predicted_speedup": round(pred_speedup, 3),
+            "batch": batch,
             "m": g.m, "n": g.n, "s": g.s, "n_iters": g.n_iters, "extra": extra,
+            **roofline_fields(us, pred),
         })
+        return us
 
-    # dense f32 baseline
-    us_dense, res = measure(
-        lambda: qniht(prob.phi, prob.y, g.s, g.n_iters, with_trace=False))
-    rel = float(relative_error(res.x, prob.x_true))
-    add("fig5b/recover_dense_f32", us_dense, None, rel, "speedup=1.00x")
+    # ---- primary rows: batched serving (B observations of one Φ̂) ----------
+    us, res = measure(
+        lambda: qniht_batch(prob.phi, Y, g.s, g.n_iters, with_trace=False))
+    us_dense[BATCH] = us
+    pred_dense[BATCH] = predict_recovery_us(g.m, g.n, g.n_iters, None, BATCH, peaks)
+    rel = float(relative_error(res.x[0], prob.x_true))
+    add("fig5b/recover_dense_f32", us, None, rel, BATCH, f"batch={BATCH}")
 
-    us_single_packed = {}
+    us_batch_packed = {}
     for bits in (8, 4, 2):
-        # fake: quantized values, dense f32 compute + traffic
+        us, res = measure(
+            lambda b=bits: qniht_batch(prob.phi, Y, g.s, g.n_iters, bits_phi=b,
+                                       bits_y=8, key=key, requantize="fixed",
+                                       with_trace=False))
+        rel = float(relative_error(res.x[0], prob.x_true))
+        add(f"fig5b/recover_fake_int{bits}", us, None, rel, BATCH,
+            f"batch={BATCH}", bits_phi=bits)
+
+        us, res = measure(
+            lambda b=bits: qniht_batch(prob.phi, Y, g.s, g.n_iters, bits_phi=b,
+                                       bits_y=8, key=key, requantize="fixed",
+                                       backend="packed", with_trace=False))
+        us_batch_packed[bits] = us
+        rel = float(relative_error(res.x[0], prob.x_true))
+        add(f"fig5b/recover_packed_int{bits}", us, bits, rel, BATCH,
+            f"batch={BATCH}", bits_phi=bits)
+
+    # ---- single-observation rows (transparency: the one-vector gemv mode) --
+    us, res = measure(
+        lambda: qniht(prob.phi, prob.y, g.s, g.n_iters, with_trace=False))
+    us_dense[1] = us
+    pred_dense[1] = predict_recovery_us(g.m, g.n, g.n_iters, None, 1, peaks)
+    rel = float(relative_error(res.x, prob.x_true))
+    add("fig5b/recover_dense_f32_single", us, None, rel, 1)
+
+    for bits in (8, 4, 2):
         us, res = measure(
             lambda b=bits: qniht(prob.phi, prob.y, g.s, g.n_iters, bits_phi=b,
                                  bits_y=8, key=key, requantize="fixed",
                                  with_trace=False))
         rel = float(relative_error(res.x, prob.x_true))
-        add(f"fig5b/recover_fake_int{bits}", us, None, rel, bits_phi=bits)
+        add(f"fig5b/recover_fake_int{bits}_single", us, None, rel, 1,
+            bits_phi=bits)
 
-        # packed: stream uint8 codes through the qmm kernels
         us, res = measure(
             lambda b=bits: qniht(prob.phi, prob.y, g.s, g.n_iters, bits_phi=b,
                                  bits_y=8, key=key, requantize="fixed",
                                  backend="packed", with_trace=False))
-        us_single_packed[bits] = us
         rel = float(relative_error(res.x, prob.x_true))
-        add(f"fig5b/recover_packed_int{bits}", us, bits, rel,
-            f"bw_model_speedup={32 / bits:.2f}x", bits_phi=bits)
-
-    # batched serving: B observations amortize one packed Φ̂ stream
-    for bits in (8, 2):
-        us, res = measure(
-            lambda b=bits: qniht_batch(prob.phi, Y, g.s, g.n_iters, bits_phi=b,
-                                       bits_y=8, key=key, requantize="fixed",
-                                       backend="packed", with_trace=False))
-        rel = float(relative_error(res.x[0], prob.x_true))
-        amort = us / (BATCH * us_single_packed[bits])
-        add(f"fig5b/recover_packed_int{bits}_batch{BATCH}", us, bits, rel,
-            f"batch={BATCH} vs_{BATCH}_singles={amort:.2f}x", bits_phi=bits)
+        amort = us_batch_packed[bits] / (BATCH * us)
+        add(f"fig5b/recover_packed_int{bits}_single", us, bits, rel, 1,
+            f"batch_vs_{BATCH}_singles={amort:.2f}x", bits_phi=bits)
 
     write_json(records, JSON_PATH)
     return rows

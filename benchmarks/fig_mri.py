@@ -36,7 +36,8 @@ import os
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import measure, row, write_json
+from benchmarks.common import measure, roofline_fields, row, write_json
+from benchmarks.roofline import predict_fft_recovery_us
 from repro.configs.mri_brain import BENCH, SMOKE, WAVELET_BENCH, WAVELET_SMOKE
 from repro.core import psnr, qniht, qniht_batch, relative_error
 from repro.sensing import (
@@ -75,7 +76,9 @@ def _sweep(fast: bool, per_tensor: bool, per_band: bool):
             "psnr_db": round(ps, 2), "rel_error": round(rel, 5),
             "resolution": r, "m": prob.op.shape[0], "s": cfg.n_sparse,
             "n_iters": cfg.n_iters, "phi_nbytes": prob.op.nbytes,
-            "dense_phi_bytes": dense_phi_bytes, "extra": extra, **fields,
+            "dense_phi_bytes": dense_phi_bytes, "extra": extra,
+            **roofline_fields(us, predict_fft_recovery_us(r, cfg.n_iters)),
+            **fields,
         })
 
     def solve(bits_y, granularity="per_tensor"):
@@ -138,6 +141,7 @@ def _sweep(fast: bool, per_tensor: bool, per_band: bool):
             "resolution": r, "m": prob.op.shape[0], "s": cfg.n_sparse,
             "n_iters": cfg.n_iters, "phi_nbytes": prob.op.nbytes,
             "dense_phi_bytes": dense_phi_bytes, "extra": f"batch={BATCH}",
+            **roofline_fields(us, predict_fft_recovery_us(r, cfg.n_iters, BATCH)),
         })
     return rows, records
 
@@ -187,7 +191,8 @@ def _full_image_sweep(fast: bool):
                    "basis": basis, "resolution": r, "m": prob.op.shape[0],
                    "s": cfg.n_sparse, "n_iters": cfg.n_iters,
                    "phi_nbytes": ops[basis].nbytes,
-                   "extra": f"granularity={gran} full_image=True"}
+                   "extra": f"granularity={gran} full_image=True",
+                   **roofline_fields(us, predict_fft_recovery_us(r, cfg.n_iters))}
             if gran == "per_band":
                 rec["y_scale_bytes"] = 4 * N_BANDS
             records.append(rec)

@@ -1,7 +1,16 @@
 """Kernel microbenchmarks: the packed-qmm streamed-bytes law (the paper's
 central systems claim) measured at the kernel-contract level, plus interpret-
-mode sanity timings for the other kernels."""
+mode sanity timings for the other kernels.
+
+``perf_smoke()`` is the CI guard (``scripts/ci.sh perf``): it times the fused
+packed batched matvec against the dense-f32 gemm on one tiny serving shape and
+fails if the packed-vs-dense us/call ratio regresses past the threshold pinned
+in ``BENCH_thresholds.json`` (updated deliberately, never automatically)."""
 from __future__ import annotations
+
+import json
+import os
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -9,6 +18,9 @@ import jax.numpy as jnp
 from benchmarks.common import row, time_fn
 from repro.kernels import hsthresh, pack_operator, pack_weights, packed_matvec, qmm, sqround
 from repro.kernels.qmm.ref import qmm_ref
+
+THRESHOLDS_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                               "BENCH_thresholds.json")
 
 
 def run(fast: bool = True):
@@ -36,7 +48,10 @@ def run(fast: bool = True):
     vb = jax.random.normal(jax.random.fold_in(key, 4), (batch, k), jnp.float32)
     for bits in (8, 2):
         op = pack_operator(phi, bits, jax.random.fold_in(key, 5), shared=True)
-        f1 = jax.jit(lambda v, oo=op: packed_matvec(oo, v, use_pallas=False))
+        # shared=True routes the batched call through the canonical-layout
+        # gemm on the transposed codes (the same path the solver takes)
+        f1 = jax.jit(
+            lambda v, oo=op: packed_matvec(oo, v, shared=True, use_pallas=False))
         us1 = time_fn(f1, v1, warmup=2, iters=5)
         usb = time_fn(f1, vb, warmup=2, iters=5)
         rows.append(row(
@@ -54,3 +69,54 @@ def run(fast: bool = True):
                  warmup=2, iters=5)
     rows.append(row("kernels/hsthresh_ref", us, "n=65536 s=1024"))
     return rows
+
+
+def perf_smoke(bits: int = 8):
+    """Tiny-shape packed-vs-dense ratio on the fig5 serving geometry.
+
+    Returns ``{"packed_us", "dense_us", "ratio", ...}``; ratio < 1 means the
+    fused packed batched matvec beats the dense-f32 gemm. Shape is the fig5
+    CONFIG operator (256×512) at the serving batch (B=8) — small enough for a
+    sub-second CI check, big enough that the stream-bytes advantage is real.
+    """
+    key = jax.random.PRNGKey(0)
+    m, k, batch = 256, 512, 8  # Φ is (m, k); packed operator rows = m
+    phi = jax.random.normal(key, (m, k), jnp.float32)
+    vb = jax.random.normal(jax.random.fold_in(key, 1), (batch, k), jnp.float32)
+    op = pack_operator(phi, bits, jax.random.fold_in(key, 2), shared=True)
+    f_packed = jax.jit(
+        lambda v: packed_matvec(op, v, shared=True, use_pallas=False))
+    f_dense = jax.jit(lambda v: jax.lax.dot_general(
+        v, phi, (((1,), (1,)), ((), ()))))
+    us_p = time_fn(f_packed, vb, warmup=3, iters=9)
+    us_d = time_fn(f_dense, vb, warmup=3, iters=9)
+    return {"name": f"kernels/perf_smoke_int{bits}_batch{batch}",
+            "packed_us": round(us_p, 1), "dense_us": round(us_d, 1),
+            "ratio": round(us_p / us_d, 3),
+            "m": m, "k": k, "batch": batch, "bits": bits}
+
+
+def check_perf_smoke(thresholds_path: str = THRESHOLDS_PATH) -> int:
+    """CI entry: fail (exit 1) if packed-vs-dense ratio exceeds the pinned
+    threshold. The threshold lives in ``BENCH_thresholds.json`` next to
+    ``BENCH_recovery.json`` and is updated deliberately, never by CI."""
+    with open(thresholds_path) as f:
+        thresholds = json.load(f)
+    status = 0
+    for entry in thresholds["perf_smoke"]:
+        res = perf_smoke(bits=entry["bits"])
+        limit = entry["max_ratio"]
+        ok = res["ratio"] <= limit
+        status |= 0 if ok else 1
+        print(f"[perf-smoke] {res['name']}: packed={res['packed_us']}us "
+              f"dense={res['dense_us']}us ratio={res['ratio']} "
+              f"max_ratio={limit} {'ok' if ok else 'REGRESSION'}")
+    return status
+
+
+if __name__ == "__main__":
+    if "--perf-smoke" in sys.argv:
+        sys.exit(check_perf_smoke())
+    print("name,us_per_call,derived")
+    for r in run(fast="--full" not in sys.argv):
+        print(r)

@@ -1,0 +1,113 @@
+"""Per-op profiling driver for the recovery hot loop (the tentpole's step 1).
+
+Times each component of a QNIHT iteration on the fig5 geometry — operator
+forward (``mv``), adjoint (``rmv``), the threshold kernel, and the end-to-end
+solve — for the dense and packed backends, and reports the share of an
+iteration each accounts for (model: 3 forwards + 1 adjoint + 1 threshold per
+no-backtrack iteration). ``accounted`` is model-iteration-time / measured
+per-iteration solve time: well below 1.0 means the loop is losing time
+*between* kernels (dispatch, requantize, fan-out) rather than in them — that
+gap, not the kernels, is then the optimization target. Well above 1.0 (small
+shapes) means in-loop fusion makes components cheaper than their standalone
+dispatch cost — the loop is dispatch-bound, not kernel-bound.
+
+    PYTHONPATH=src:. python -m benchmarks.profile_recovery [--full]
+        [--batch B] [--bits 8] [--profile-dir DIR]
+
+``--profile-dir`` additionally captures a JAX profiler trace of one warm
+end-to-end solve per backend (open with TensorBoard / Perfetto; see
+docs/performance.md). The same flag exists on ``repro.launch.recover`` and
+``repro.launch.serve`` for tracing full driver runs.
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.configs.gaussian_toy import CONFIG, SMOKE
+from repro.core import qniht_batch
+from repro.core.operators import DenseOperator, PackedStreamingOperator
+from repro.kernels import hsthresh
+from repro.sensing import make_gaussian_problem
+
+
+def profile_backend(name, op, Y, X, s, n_iters, solve, profile_dir=None):
+    """Rows of per-op µs + share-of-iteration for one backend's operators."""
+    rows = []
+    mv = jax.jit(op.mv)
+    rmv = jax.jit(op.rmv)
+    thresh = jax.jit(jax.vmap(lambda u: hsthresh(jnp.abs(u), s, use_pallas=False)))
+    us_mv = time_fn(mv, X, warmup=2, iters=5)
+    us_rmv = time_fn(rmv, Y, warmup=2, iters=5)
+    us_th = time_fn(thresh, X, warmup=2, iters=5)
+    us_solve = time_fn(solve, warmup=1, iters=3)
+    us_iter = us_solve / n_iters
+    model = 3 * us_mv + us_rmv + us_th
+    for comp, us, mult in (("mv", us_mv, 3), ("rmv", us_rmv, 1),
+                           ("threshold", us_th, 1)):
+        rows.append(row(f"profile/{name}/{comp}", us,
+                        f"share_of_iter={mult * us / us_iter:.2f} x{mult}/iter"))
+    rows.append(row(f"profile/{name}/solve", us_solve,
+                    f"per_iter={us_iter:.1f}us accounted={model / us_iter:.2f}"))
+    if profile_dir:
+        with jax.profiler.trace(f"{profile_dir}/{name}"):
+            jax.block_until_ready(solve())
+        rows.append(row(f"profile/{name}/trace", 0.0,
+                        f"written={profile_dir}/{name}"))
+    return rows
+
+
+def run(fast: bool = True, batch: int = 8, bits: int = 8, profile_dir=None):
+    g = SMOKE if fast else CONFIG
+    key = jax.random.PRNGKey(0)
+    prob = make_gaussian_problem(g.m, g.n, g.s, 20.0, key)
+    Y = jnp.stack([prob.y] * batch)
+    X = jnp.stack([prob.x_true] * batch)
+    rows = []
+
+    dense = DenseOperator(prob.phi)
+    rows += profile_backend(
+        "dense_f32", dense, Y, X, g.s, g.n_iters,
+        lambda: qniht_batch(prob.phi, Y, g.s, g.n_iters, with_trace=False),
+        profile_dir)
+
+    packed = PackedStreamingOperator.pack(prob.phi, bits, key)
+    rows += profile_backend(
+        f"packed_int{bits}", packed, Y, X, g.s, g.n_iters,
+        lambda: qniht_batch(prob.phi, Y, g.s, g.n_iters, bits_phi=bits,
+                            bits_y=8, key=key, requantize="fixed",
+                            backend="packed", with_trace=False),
+        profile_dir)
+
+    # one-time pack cost, for amortization context (not part of the loop)
+    us_pack = time_fn(
+        lambda: jax.block_until_ready(
+            PackedStreamingOperator.pack(prob.phi, bits, key).packed.fwd_re.packed),
+        warmup=1, iters=3)
+    rows.append(row(f"profile/pack_int{bits}", us_pack,
+                    f"one_time amortized_over={g.n_iters}_iters"))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="CONFIG geometry instead of SMOKE")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--bits", type=int, default=8, choices=[2, 4, 8])
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a JAX profiler trace of one warm solve per "
+                         "backend under this directory")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    for r in run(fast=not args.full, batch=args.batch, bits=args.bits,
+                 profile_dir=args.profile_dir):
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,8 @@
-"""Roofline analysis: aggregate the dry-run JSONs into per-cell terms.
+"""Roofline analysis: dry-run TPU projections + the measured machine model.
 
-Per (arch × shape × mesh), from the compiled artifact:
+**Dry-run path** (the original): aggregate the dry-run JSONs into per-cell
+terms against TPU v5e constants. Per (arch × shape × mesh), from the compiled
+artifact:
 
     compute term    = HLO_FLOPs_per_device / peak_FLOP/s
     memory term     = HLO_bytes_per_device / HBM_bw
@@ -11,12 +13,29 @@ analytic sharded matmul; scan-body undercounting is fixed by the dry-run's
 depth-extrapolated probes.) Dominant term = the bottleneck; roofline fraction
 = MODEL_FLOPS / (devices · peak · max_term) — how close the cell is to the
 hardware ceiling given its bottleneck.
+
+**Machine path** (this machine, whatever it is): :func:`machine_peaks` times
+a large streaming reduction and an f32 gemm once per process to measure the
+*attainable* bandwidth and FLOP ceilings of the backend actually running,
+and :func:`predict_recovery_us` / :func:`predict_fft_recovery_us` turn a
+recovery configuration into a per-solve roofline floor
+
+    predicted_us = n_iters · max(bytes_per_iter / BW, flops_per_iter / F)
+
+(no-backtrack iteration: 3 forward + 1 adjoint operator applications — the
+bytes term is the paper's ``size(Φ̂)/BW`` law, which batching amortizes:
+B problems share one codes stream, while the FLOPs term grows with B).
+``benchmarks/common.roofline_fields`` threads the prediction into every
+BENCH_recovery / BENCH_mri row as ``predicted_us`` / ``roofline_frac``.
 """
 from __future__ import annotations
 
+import functools
 import glob
 import json
+import math
 import os
+import time
 
 from benchmarks.common import row
 
@@ -24,6 +43,76 @@ from benchmarks.common import row
 PEAK_FLOPS = 197e12        # bf16
 HBM_BW = 819e9             # B/s
 ICI_BW = 50e9              # B/s per link
+
+
+# ---------------------------------------------------------------------------
+# Measured machine peaks + recovery-iteration model
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=1)
+def machine_peaks() -> dict:
+    """Attainable (not datasheet) ceilings of the running backend, measured
+    once per process: ``bw`` from a 64 MB f32 streaming reduction (read-bound,
+    the shape of a packed-codes pass) and ``flops`` from a 512³ f32 matmul."""
+    import jax
+    import jax.numpy as jnp
+
+    def best_seconds(fn, *args, reps: int = 5) -> float:
+        jax.block_until_ready(fn(*args))        # compile + warm
+        best = math.inf
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    a = jnp.ones((16 * 1024 * 1024,), jnp.float32)          # 64 MB
+    t_sum = best_seconds(jax.jit(jnp.sum), a)
+    bw = a.size * 4 / t_sum
+
+    d = 512
+    w = jnp.ones((d, d), jnp.float32)
+    t_mm = best_seconds(jax.jit(lambda u, v: u @ v), w, w)
+    flops = 2.0 * d**3 / t_mm
+    return {"bw_bytes_per_s": bw, "flops_per_s": flops,
+            "backend": jax.default_backend()}
+
+
+def recovery_iteration_model(m: int, n: int, stream_bits, batch: int = 1) -> dict:
+    """Bytes + FLOPs one no-backtrack QNIHT iteration moves for a dense/packed
+    (M, N) operator: 3 forward + 1 adjoint applications. The operator stream
+    (``stream_bits=None`` → f32) is paid once per application regardless of B;
+    the mat-vec FLOPs and the (B,·) vector traffic scale with B."""
+    phi_bytes = m * n * 4 if stream_bits is None else m * ((n * stream_bits + 7) // 8)
+    vec_bytes = 4 * batch * 2 * (m + n)      # per application: operand + result rows
+    return {
+        "bytes_per_iter": 4 * (phi_bytes + vec_bytes),
+        "flops_per_iter": 4 * 2 * m * n * batch,
+    }
+
+
+def predict_recovery_us(m: int, n: int, n_iters: int, stream_bits,
+                        batch: int = 1, peaks: dict | None = None) -> float:
+    """Roofline floor (µs) for a full dense/packed recovery solve."""
+    p = peaks or machine_peaks()
+    it = recovery_iteration_model(m, n, stream_bits, batch)
+    t_iter = max(it["bytes_per_iter"] / p["bw_bytes_per_s"],
+                 it["flops_per_iter"] / p["flops_per_s"])
+    return n_iters * t_iter * 1e6
+
+
+def predict_fft_recovery_us(resolution: int, n_iters: int, batch: int = 1,
+                            peaks: dict | None = None) -> float:
+    """Roofline floor (µs) for a matrix-free MRI solve: 4 FFT-based operator
+    applications per iteration over an r×r complex grid (≈ 5·N·log2 N flops and
+    ~3 complex-array passes each — a deliberately coarse model; its point is a
+    stable floor for ``roofline_frac`` trendlines, not an exact simulator)."""
+    p = peaks or machine_peaks()
+    n_pix = resolution * resolution
+    flops = 4 * 5.0 * n_pix * math.log2(max(n_pix, 2)) * batch
+    byts = 4 * 3 * n_pix * 8 * batch
+    t_iter = max(byts / p["bw_bytes_per_s"], flops / p["flops_per_s"])
+    return n_iters * t_iter * 1e6
 
 
 def load_cells(dry_dir: str = "experiments/dryrun", policy: str = "fp"):
@@ -66,10 +155,24 @@ def analyze(rec: dict) -> dict:
 
 def run(fast: bool = True, dry_dir: str = "experiments/dryrun"):
     rows = []
+    p = machine_peaks()
+    rows.append(row(
+        "roofline/machine_peaks", 0.0,
+        f"backend={p['backend']} bw={p['bw_bytes_per_s'] / 1e9:.1f}GB/s "
+        f"flops={p['flops_per_s'] / 1e9:.1f}GFLOP/s (measured, attainable)"))
+    for bits, batch in ((None, 1), (8, 1), (8, 8), (2, 8)):
+        pred = predict_recovery_us(256, 512, 50, bits, batch, p)
+        tag = "f32" if bits is None else f"int{bits}"
+        it = recovery_iteration_model(256, 512, bits, batch)
+        rows.append(row(
+            f"roofline/predict_recover_{tag}_b{batch}", pred,
+            f"bytes/iter={it['bytes_per_iter']} flops/iter={it['flops_per_iter']} "
+            f"(floor for fig5b CONFIG m=256 n=512 iters=50)"))
     cells = load_cells(dry_dir)
     if not cells:
-        return [row("roofline/no_dryrun_data", 0.0,
-                    "run scripts/run_dryruns.py first")]
+        rows.append(row("roofline/no_dryrun_data", 0.0,
+                        "run scripts/run_dryruns.py first"))
+        return rows
     for rec in cells:
         tag = f"{rec['arch']}.{rec['shape']}.{rec['mesh']}"
         if rec.get("status") == "skipped":

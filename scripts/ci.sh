@@ -18,6 +18,11 @@
 #                          # when installed — see docs/static-analysis.md
 #   scripts/ci.sh lint     # byte-compile src/tests/benchmarks (+ ruff if installed)
 #   scripts/ci.sh docs     # docs gate: README/docs snippets execute, links resolve
+#   scripts/ci.sh perf     # perf smoke: benchmarks/kernels_micro.py --perf-smoke
+#                          # times the fused packed batched matvec vs dense f32
+#                          # on a tiny serving shape and fails if the ratio
+#                          # regresses past BENCH_thresholds.json (pinned
+#                          # deliberately; see docs/performance.md)
 #
 # Extra args go straight to pytest: scripts/ci.sh fast -k mri
 set -euo pipefail
@@ -66,5 +71,6 @@ case "$mode" in
     fi
     ;;
   docs) exec python scripts/check_docs.py "$@" ;;
-  *) echo "usage: scripts/ci.sh [fast|full|analyze|lint|docs] [pytest args...]" >&2; exit 2 ;;
+  perf) exec python -m benchmarks.kernels_micro --perf-smoke ;;
+  *) echo "usage: scripts/ci.sh [fast|full|analyze|lint|docs|perf] [pytest args...]" >&2; exit 2 ;;
 esac

@@ -100,7 +100,15 @@ class DenseOperator:
         return self.mat.size * self.mat.dtype.itemsize
 
     def mv(self, x: jax.Array) -> jax.Array:
-        return x @ self.mat.T
+        # Contract x's minor axis against mat's minor axis directly: `x @ mat.T`
+        # makes XLA:CPU materialize the transpose as a physical copy of Φ every
+        # application (~100× at serving shapes).
+        m = self.mat
+        dt = jnp.result_type(x.dtype, m.dtype)
+        return jax.lax.dot_general(
+            x.astype(dt), m.astype(dt),
+            (((x.ndim - 1,), (1,)), ((), ())),
+        )
 
     def rmv(self, r: jax.Array) -> jax.Array:
         m = self.mat
@@ -176,10 +184,14 @@ class PackedStreamingOperator:
     """
 
     def __init__(self, packed: PackedOperator, use_pallas: Optional[bool] = None,
-                 interpret: bool = False):
+                 interpret: bool = False, shared: bool = False):
         self.packed = packed
         self.use_pallas = use_pallas
         self.interpret = bool(interpret)
+        # True iff `packed` came from pack_operator(shared=True): the adjoint's
+        # bytes are then the forward codes transposed, which the fused CPU path
+        # exploits as a pre-transposed canonical layout for batched calls.
+        self.shared = bool(shared)
 
     @classmethod
     def pack(cls, phi: jax.Array, bits: int, key: Optional[jax.Array] = None,
@@ -189,7 +201,7 @@ class PackedStreamingOperator:
         key)`` bit-for-bit); group granularities quantize per orientation."""
         gran = as_granularity(granularity)
         if gran.is_per_tensor:
-            return cls(pack_operator(phi, bits, key, shared=True), **kw)
+            return cls(pack_operator(phi, bits, key, shared=True), shared=True, **kw)
         return cls(pack_operator(phi, bits, key, shared=False, granularity=gran), **kw)
 
     @property
@@ -224,15 +236,15 @@ class PackedStreamingOperator:
         return n
 
     def mv(self, x: jax.Array) -> jax.Array:
-        return packed_matvec(self.packed, x, use_pallas=self.use_pallas,
-                             interpret=self.interpret)
+        return packed_matvec(self.packed, x, shared=self.shared,
+                             use_pallas=self.use_pallas, interpret=self.interpret)
 
     def rmv(self, r: jax.Array) -> jax.Array:
-        return packed_rmatvec(self.packed, r, use_pallas=self.use_pallas,
-                              interpret=self.interpret)
+        return packed_rmatvec(self.packed, r, shared=self.shared,
+                              use_pallas=self.use_pallas, interpret=self.interpret)
 
     def tree_flatten(self):
-        return (self.packed,), (self.use_pallas, self.interpret)
+        return (self.packed,), (self.use_pallas, self.interpret, self.shared)
 
     @classmethod
     def tree_unflatten(cls, aux, children):

@@ -12,8 +12,13 @@ packed along K (minor-most axis → contiguous packed words).
 
 Grid: ``(M/bm, N/bn, K/bk)``; K is the fastest-varying (sequential on TPU), and
 the output block (bm, bn) is revisited across the K steps and accumulated in
-place (initialized at k==0). Block shapes default to MXU-aligned
-``bm=128, bn=128, bk=512`` (packed K-block = bk/vpb bytes per row).
+place (initialized at k==0). Block shapes are chosen by
+:func:`select_block_config`: MXU-aligned ``bm=128, bn=128, bk=512`` for large
+problems, clamped down to the aligned problem size for small ones so tiny
+shapes (the recovery benchmarks run m=64, n=128) are not dwarfed by padding.
+Explicitly passed block shapes are validated strictly — misalignment or a
+block that pads the problem more than the hardware minima require raises
+instead of silently burning bandwidth on padding.
 
 Two scale layouts, two kernels:
 
@@ -29,12 +34,98 @@ Two scale layouts, two kernels:
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.quant.formats import BY_BITS
+
+# Hardware minima the tiles must respect regardless of problem size: 8
+# sublanes (M), 128 lanes (N), and a K step that is whole packed bytes on
+# 128 lanes (128·vpb values). Defaults below are the MXU sweet spot for
+# large problems; select_block_config clamps them to the aligned problem.
+_MIN_BM = 8
+_MIN_BN = 128
+_DEFAULT_BM = 128
+_DEFAULT_BN = 128
+_DEFAULT_BK = 512
+
+
+def _round_up(value: int, multiple: int) -> int:
+    return -(-value // multiple) * multiple
+
+
+def select_block_config(
+    m: int,
+    n: int,
+    k_dim: int,
+    bits: int,
+    *,
+    group_size: int | None = None,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
+) -> tuple[int, int, int]:
+    """Choose (bm, bn, bk) for a packed matmul of logical shape (m, k)×(n, k).
+
+    Auto mode (a block dim left ``None``): start from the MXU defaults and
+    clamp each tile to the problem dimension rounded up to its hardware
+    minimum, so small problems (the fig5 bench runs m=64, n=128) pay only the
+    unavoidable alignment padding instead of a full 128×128×512 tile.
+
+    Explicit mode (a block dim passed): validate strictly — misaligned blocks,
+    ``g ∤ bk``, or a block that exceeds the aligned problem size (pure padding)
+    raise ``ValueError`` instead of silently blowing up the padded footprint.
+    """
+    k_unit = 128 * BY_BITS[bits].values_per_byte
+    if group_size is not None:
+        k_unit = math.lcm(k_unit, group_size)
+
+    m_cap = _round_up(max(m, 1), _MIN_BM)
+    n_cap = _round_up(max(n, 1), _MIN_BN)
+    k_cap = _round_up(max(k_dim, 1), k_unit)
+
+    if block_m is None:
+        bm = min(_DEFAULT_BM, m_cap)
+    else:
+        bm = block_m
+        if bm % _MIN_BM:
+            raise ValueError(f"block_m={bm} must be a multiple of {_MIN_BM}")
+        if bm > m_cap:
+            raise ValueError(
+                f"block_m={bm} exceeds aligned problem size {m_cap} (m={m}): "
+                "the tile would be mostly padding; shrink it or leave it unset"
+            )
+    if block_n is None:
+        bn = min(_DEFAULT_BN, n_cap)
+    else:
+        bn = block_n
+        if bn % _MIN_BN:
+            raise ValueError(f"block_n={bn} must be a multiple of {_MIN_BN}")
+        if bn > n_cap:
+            raise ValueError(
+                f"block_n={bn} exceeds aligned problem size {n_cap} (n={n}): "
+                "the tile would be mostly padding; shrink it or leave it unset"
+            )
+    if block_k is None:
+        bk = min(_round_up(_DEFAULT_BK, k_unit), k_cap)
+    else:
+        bk = block_k
+        if bk % k_unit:
+            raise ValueError(
+                f"block_k={bk} must be a multiple of {k_unit} "
+                f"(128 lanes × values/byte at {bits} bits"
+                + (f", lcm group_size={group_size}" if group_size else "")
+                + ")"
+            )
+        if bk > k_cap:
+            raise ValueError(
+                f"block_k={bk} exceeds aligned problem size {k_cap} (k={k_dim}): "
+                "the tile would be mostly padding; shrink it or leave it unset"
+            )
+    return bm, bn, bk
 
 
 def _unpack_block(w_packed_blk: jnp.ndarray, bits: int) -> jnp.ndarray:

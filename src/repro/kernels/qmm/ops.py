@@ -1,7 +1,8 @@
 """Jit'd public wrappers around the packed low-precision matmul.
 
 * :func:`pack_weights` — quantize + pack a weight/measurement matrix for qmm.
-* :func:`qmm` — padded dispatch: Pallas kernel on TPU, oracle elsewhere.
+* :func:`qmm` — padded dispatch: Pallas kernel on TPU, fused blocked
+  pipeline (:func:`qmm_fused`) elsewhere.
 * :func:`qmm_complex` — complex Φ̂ × real/complex vectors via real matmuls.
 * :class:`PackedOperator` / :func:`pack_operator` — both orientations of a CS
   measurement matrix (Φ̂ and Φ̂†), the pair QNIHT streams every iteration;
@@ -11,14 +12,12 @@
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.qmm.kernel import qmm_group_pallas, qmm_pallas
-from repro.kernels.qmm.ref import qmm_group_ref, qmm_ref
+from repro.kernels.qmm.kernel import qmm_group_pallas, qmm_pallas, select_block_config
 from repro.quant.formats import (
     BY_BITS,
     PER_CHANNEL,
@@ -27,7 +26,7 @@ from repro.quant.formats import (
     as_granularity,
 )
 from repro.quant.pack import pack_codes, validate_group_packing
-from repro.quant.quantize import quantize, quantize_codes
+from repro.quant.quantize import expand_block_scale, quantize, quantize_codes
 
 
 def _round_up(v: int, mult: int) -> int:
@@ -130,33 +129,40 @@ def qmm(
     x: jax.Array,
     w: PackedWeights,
     *,
+    w_t: Optional[PackedWeights] = None,
     use_pallas: Optional[bool] = None,
     interpret: bool = False,
-    block_m: int = 128,
-    block_n: int = 128,
-    block_k: int = 512,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
 ) -> jax.Array:
     """y = x @ dequant(w)ᵀ with padding to kernel block multiples.
 
-    ``use_pallas=None`` auto-dispatches: the Mosaic kernel on TPU, the pure-jnp
-    oracle otherwise (interpret=True forces the kernel body on CPU for tests).
-    Group-scaled weights (``granularity=per_block``) route to the group kernel,
-    whose K blocks are additionally aligned to the scale group size.
+    ``use_pallas=None`` auto-dispatches: the Mosaic kernel on TPU, the fused
+    blocked jnp pipeline (:func:`qmm_fused`) elsewhere (interpret=True forces
+    the kernel body on CPU for tests). Group-scaled weights
+    (``granularity=per_block``) route to the group kernel, whose K blocks are
+    additionally aligned to the scale group size. Block shapes default to
+    :func:`select_block_config`'s problem-sized choice; explicit values are
+    validated strictly (misalignment or pure-padding tiles raise).
+
+    ``w_t`` optionally carries the same quantization packed in the transposed
+    orientation (``pack_operator(shared=True)`` stores the pair anyway); the
+    fused CPU path uses it to run batched calls as canonical-layout gemms.
     """
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu" or interpret
+    if not use_pallas:
+        return qmm_fused(x, w, w_t)
     m, k = x.shape
     n = w.packed.shape[0]
     if w.granularity.kind == "per_block":
-        return _qmm_group(x, w, use_pallas, interpret, block_m, block_n, block_k)
-    if not use_pallas:
-        return qmm_ref(x, w.packed, w.scale, w.bits, w.k_dim)
+        return _qmm_group(x, w, interpret, block_m, block_n, block_k)
 
     vpb = BY_BITS[w.bits].values_per_byte
-    # shrink blocks for small problems, keeping MXU-friendly minima
-    bm = min(block_m, _round_up(m, 8))
-    bn = min(block_n, _round_up(n, 128))
-    bk = min(block_k, _round_up(w.k_dim, 128 * vpb))
+    bm, bn, bk = select_block_config(m, n, w.k_dim, w.bits,
+                                     block_m=block_m, block_n=block_n,
+                                     block_k=block_k)
     mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(w.k_dim, bk)
     x_p = jnp.pad(x, ((0, mp - m), (0, kp - k)))
     packed_k = kp // vpb
@@ -168,21 +174,17 @@ def qmm(
     return y[:m, :n]
 
 
-def _qmm_group(x, w: PackedWeights, use_pallas, interpret, block_m, block_n, block_k):
+def _qmm_group(x, w: PackedWeights, interpret, block_m, block_n, block_k):
     """Group-scaled qmm dispatch: pad to blocks whose K size the scale groups
     tile exactly (padded codes are biased-zero, padded scale groups are 1.0 —
     both contribute nothing to the sliced-out output)."""
     g = w.granularity.group_size
-    if not use_pallas:
-        return qmm_group_ref(x, w.packed, w.scale, w.bits, w.k_dim, g)
     m, k = x.shape
     n = w.packed.shape[0]
     vpb = BY_BITS[w.bits].values_per_byte
-    bm = min(block_m, _round_up(m, 8))
-    bn = min(block_n, _round_up(n, 128))
-    # K blocks must tile BOTH the 128-lane packed layout and the scale groups
-    unit = math.lcm(g, 128 * vpb)
-    bk = min(_round_up(block_k, unit), _round_up(w.k_dim, unit))
+    bm, bn, bk = select_block_config(m, n, w.k_dim, w.bits, group_size=g,
+                                     block_m=block_m, block_n=block_n,
+                                     block_k=block_k)
     mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(w.k_dim, bk)
     x_p = jnp.pad(x, ((0, mp - m), (0, kp - k)))
     w_p = jnp.pad(w.packed, ((0, np_ - n), (0, kp // vpb - w.packed.shape[1])),
@@ -192,6 +194,220 @@ def _qmm_group(x, w: PackedWeights, use_pallas, interpret, block_m, block_n, blo
     y = qmm_group_pallas(x_p, w_p, s_p, bits=w.bits, k_dim=kp, group_size=g,
                          block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
     return y[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Fused blocked pipeline for backends without Mosaic (CPU/GPU fallback).
+#
+# Two XLA:CPU pathologies make the naive oracle (unpack whole matrix → dot
+# against wᵀ) slow: (a) a full-matrix uint8→f32 convert is write-bound on the
+# (N, K) f32 temporary; (b) any matmul that is not a plain gemv / canonical
+# row-major gemm falls off the fast library path (an `x @ w.T` transpose is a
+# physical copy of Φ per application, ~100× at serving shapes). The fused
+# path streams the *packed* codes block-by-block, unpacking each tile into a
+# cache-resident f32 buffer, so the bytes that move from memory are the
+# packed codes — the paper's bandwidth law. Three formulations, chosen
+# statically from the problem shape:
+#
+# * M == 1  — multiply+reduce over N blocks (the only matvec formulation
+#   XLA:CPU keeps vectorized when the matrix operand is an internal value).
+# * M > 1 with shared transposed codes (``w_t``) — the batch-serving fast
+#   path: the *other* orientation's packed array is the weight matrix already
+#   transposed in memory, so each K-slab unpacks into a canonical row-major
+#   (bk, N) tile and the contraction is an ordinary gemm accumulation. One
+#   codes-stream serves all B rows per call.
+# * M > 1 without ``w_t`` — minor×minor dot per N block (no transposes).
+# ---------------------------------------------------------------------------
+
+_FUSED_TILE_BYTES = 1 << 20    # target f32 dequant-tile footprint (cache-resident)
+
+
+def _fused_tile_rows(rows: int, row_values: int) -> int:
+    """Largest power-of-two row block whose f32 tile fits the target bytes."""
+    cap = max(1, _FUSED_TILE_BYTES // max(4 * row_values, 1))
+    b = 1
+    while b * 2 <= cap:
+        b *= 2
+    return min(b, rows)
+
+
+def _unpack_parts_f32(packed: jax.Array, bits: int) -> list[jax.Array]:
+    """uint8 (..., Kp) → vpb arrays of f32 unit-scale codes, part-major.
+
+    ``parts[i][..., j]`` is code ``j·vpb + i``; callers either interleave the
+    parts (stack on a minor axis) or slice their x operand with the same
+    stride so no interleave copy is needed."""
+    fmt = BY_BITS[bits]
+    k_half = jnp.float32(fmt.half_steps)
+    if fmt.values_per_byte == 1:
+        return [packed.astype(jnp.float32) - k_half]
+    mask = jnp.uint8((1 << bits) - 1)
+    return [((packed >> jnp.uint8(bits * i)) & mask).astype(jnp.float32) - k_half
+            for i in range(fmt.values_per_byte)]
+
+
+def _unpack_interleaved_f32(packed: jax.Array, bits: int) -> jax.Array:
+    """uint8 (..., Kp) → (..., Kp·vpb) f32 unit-scale codes in storage order."""
+    parts = _unpack_parts_f32(packed, bits)
+    if len(parts) == 1:
+        return parts[0]
+    return jnp.stack(parts, axis=-1).reshape(
+        *packed.shape[:-1], packed.shape[-1] * len(parts))
+
+
+def _x_parts(x32: jax.Array, vpb: int, kp: int) -> list[jax.Array]:
+    """Slice x (M, K) into the per-part operands matching _unpack_parts_f32:
+    part i pairs with x columns i, i+vpb, …, zero-padded to length kp."""
+    if vpb == 1:
+        return [x32]
+    m = x32.shape[0]
+    return [jnp.pad(x32[:, i::vpb], ((0, 0), (0, kp - x32[:, i::vpb].shape[1])))
+            for i in range(vpb)]
+
+
+def _fused_matvec(x32: jax.Array, packed: jax.Array, bits: int, n: int) -> jax.Array:
+    """M == 1: multiply+reduce over N blocks. Returns unit-scale (1, N)."""
+    n_rows, kp = packed.shape
+    vpb = BY_BITS[bits].values_per_byte
+    xs = [xp[0] for xp in _x_parts(x32, vpb, kp)]
+    bn = _fused_tile_rows(n_rows, kp * vpb)
+    nb = _round_up(n_rows, bn) // bn
+    if nb * bn != n_rows:
+        packed = jnp.pad(packed, ((0, nb * bn - n_rows), (0, 0)),
+                         constant_values=_zero_byte(bits))
+
+    def block_y(p_blk):
+        parts = _unpack_parts_f32(p_blk, bits)
+        acc = jnp.sum(parts[0] * xs[0], axis=-1)
+        for part, xv in zip(parts[1:], xs[1:]):
+            acc = acc + jnp.sum(part * xv, axis=-1)
+        return acc
+
+    if nb == 1:
+        return block_y(packed).reshape(1, nb * bn)[:, :n]
+    _, ys = jax.lax.scan(lambda c, p_blk: (c, block_y(p_blk)), None,
+                         packed.reshape(nb, bn, kp))
+    return ys.reshape(1, nb * bn)[:, :n]
+
+
+def _fused_batch_minor(x32: jax.Array, packed: jax.Array, bits: int, n: int) -> jax.Array:
+    """M > 1, no transposed codes: minor×minor dot per N block. Unit scale."""
+    m = x32.shape[0]
+    n_rows, kp = packed.shape
+    vpb = BY_BITS[bits].values_per_byte
+    xps = _x_parts(x32, vpb, kp)
+    bn = _fused_tile_rows(n_rows, kp * vpb)
+    nb = _round_up(n_rows, bn) // bn
+    if nb * bn != n_rows:
+        packed = jnp.pad(packed, ((0, nb * bn - n_rows), (0, 0)),
+                         constant_values=_zero_byte(bits))
+
+    def block_y(p_blk):
+        parts = _unpack_parts_f32(p_blk, bits)
+        acc = jax.lax.dot_general(xps[0], parts[0], (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        for part, xp in zip(parts[1:], xps[1:]):
+            acc = acc + jax.lax.dot_general(xp, part, (((1,), (1,)), ((), ())),
+                                            preferred_element_type=jnp.float32)
+        return acc
+
+    if nb == 1:
+        return block_y(packed)[:, :n]
+    _, ys = jax.lax.scan(lambda c, p_blk: (c, block_y(p_blk)), None,
+                         packed.reshape(nb, bn, kp))
+    return jnp.moveaxis(ys, 0, 1).reshape(m, nb * bn)[:, :n]
+
+
+def _fused_batch_canonical(x32: jax.Array, w_t: PackedWeights, n: int) -> jax.Array:
+    """M > 1 with shared codes: ``w_t`` stores wᵀ's bytes, so each row slab
+    unpacks straight into a canonical (bk, N) tile — gemm accumulation over
+    K slabs, one packed stream amortized across the whole batch. Unit scale."""
+    m, k = x32.shape
+    k_rows, np_bytes = w_t.packed.shape
+    bits = w_t.bits
+    vpb = BY_BITS[bits].values_per_byte
+    bk = _fused_tile_rows(k_rows, np_bytes * vpb)
+    nbk = _round_up(k_rows, bk) // bk
+    packed = w_t.packed
+    if nbk * bk != k_rows:
+        # padded K rows pair with zero-padded x columns: no contribution
+        packed = jnp.pad(packed, ((0, nbk * bk - k_rows), (0, 0)),
+                         constant_values=_zero_byte(bits))
+        x32 = jnp.pad(x32, ((0, 0), (0, nbk * bk - k)))
+
+    def tile(p_blk):
+        return _unpack_interleaved_f32(p_blk, bits)     # (bk, N_padded) canonical
+
+    if nbk == 1:
+        return jax.lax.dot_general(x32, tile(packed), (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)[:, :n]
+    x_blocks = jnp.moveaxis(x32.reshape(m, nbk, bk), 1, 0)  # (nbk, m, bk)
+
+    def step(acc, blk):
+        p_blk, x_blk = blk
+        return acc + jax.lax.dot_general(x_blk, tile(p_blk), (((1,), (0,)), ((), ())),
+                                         preferred_element_type=jnp.float32), None
+
+    acc0 = jnp.zeros((m, np_bytes * vpb), jnp.float32)
+    y, _ = jax.lax.scan(step, acc0, (packed.reshape(nbk, bk, np_bytes), x_blocks))
+    return y[:, :n]
+
+
+def _fused_per_block(x32: jax.Array, w: PackedWeights) -> jax.Array:
+    """Group-scaled fused path: the scale varies along K, so each tile is
+    dequantized in full (codes × expanded scale) before its dot."""
+    m, k = x32.shape
+    n, kp = w.packed.shape
+    g = w.granularity.group_size
+    inv_half = 1.0 / BY_BITS[w.bits].half_steps
+    bn = _fused_tile_rows(n, kp * BY_BITS[w.bits].values_per_byte)
+    nb = _round_up(n, bn) // bn
+    packed, scale = w.packed, w.scale
+    if nb * bn != n:
+        packed = jnp.pad(packed, ((0, nb * bn - n), (0, 0)),
+                         constant_values=_zero_byte(w.bits))
+        scale = jnp.pad(scale, ((0, nb * bn - n), (0, 0)), constant_values=1.0)
+
+    def block_y(p_blk, s_blk):
+        wt = (_unpack_interleaved_f32(p_blk, w.bits)[:, :k]
+              * (expand_block_scale(s_blk, g, k) * inv_half))
+        return jax.lax.dot_general(x32, wt, (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+
+    if nb == 1:
+        return block_y(packed, scale)[:, :n]
+    _, ys = jax.lax.scan(lambda c, blk: (c, block_y(*blk)), None,
+                         (packed.reshape(nb, bn, kp),
+                          scale.reshape(nb, bn, scale.shape[1])))
+    return jnp.moveaxis(ys, 0, 1).reshape(m, nb * bn)[:, :n]
+
+
+def qmm_fused(
+    x: jax.Array,
+    w: PackedWeights,
+    w_t: Optional[PackedWeights] = None,
+) -> jax.Array:
+    """Fused unpack→dequant→dot on cache-resident tiles. Returns (M, N) f32.
+
+    ``w_t``, when given, must hold the SAME quantization's codes packed in the
+    transposed orientation (``pack_operator(shared=True)`` stores exactly that
+    pair); it unlocks the canonical-layout batch gemm. Handles every scale
+    granularity and batched x — B rows share one pass over the packed codes,
+    which is what amortizes the stream across a batch."""
+    m, k = x.shape
+    n = w.packed.shape[0]
+    if k != w.k_dim:
+        raise ValueError(f"x K dim {k} != packed k_dim {w.k_dim}")
+    x32 = x.astype(jnp.float32)
+    if w.granularity.kind == "per_block":
+        return _fused_per_block(x32, w)
+    if m == 1:
+        y = _fused_matvec(x32, w.packed, w.bits, n)
+    elif w_t is not None and w.granularity.is_per_tensor:
+        y = _fused_batch_canonical(x32, w_t, n)
+    else:
+        y = _fused_batch_minor(x32, w.packed, w.bits, n)
+    return y * (w.scale.reshape(1, -1) / BY_BITS[w.bits].half_steps)
 
 
 def _zero_byte(bits: int) -> int:
@@ -317,20 +533,25 @@ def pack_operator(
     )
 
 
-def packed_matvec(op: PackedOperator, x: jax.Array, **kw) -> jax.Array:
+def packed_matvec(op: PackedOperator, x: jax.Array, shared: bool = False, **kw) -> jax.Array:
     """Φ̂ x for real or complex Φ̂ (x may be real or complex).
 
     ``x`` is a single vector (N,) or a batch (B, N); a batch is served by ONE
     kernel invocation per real matmul, amortizing the packed Φ̂ stream over B.
+    ``shared=True`` asserts the operator was built with
+    ``pack_operator(shared=True)`` (adjoint bytes == forward bytes transposed),
+    letting batched calls borrow the other orientation as a pre-transposed
+    canonical layout. Never pass it for independently quantized orientations.
     """
     single = x.ndim == 1
     xb = x[None, :] if single else x
     if not op.is_complex:
-        out = qmm(xb.astype(jnp.float32), op.fwd_re, **kw)
+        out = qmm(xb.astype(jnp.float32), op.fwd_re,
+                  w_t=op.adj_re if shared else None, **kw)
         return out[0] if single else out
     xr = jnp.real(xb).astype(jnp.float32)
-    rr = qmm(xr, op.fwd_re, **kw)
-    ir = qmm(xr, op.fwd_im, **kw)
+    rr = qmm(xr, op.fwd_re, w_t=op.adj_re if shared else None, **kw)
+    ir = qmm(xr, op.fwd_im, w_t=op.adj_im if shared else None, **kw)
     if not jnp.iscomplexobj(x):
         # real input (e.g. a real sky through complex Φ̂): the imaginary-part
         # products are identically zero — skip their kernel calls so the packed
@@ -338,28 +559,32 @@ def packed_matvec(op: PackedOperator, x: jax.Array, **kw) -> jax.Array:
         out = jax.lax.complex(rr, ir)
         return out[0] if single else out
     xi = jnp.imag(xb).astype(jnp.float32)
-    ri = qmm(xi, op.fwd_re, **kw)
-    ii = qmm(xi, op.fwd_im, **kw)
+    ri = qmm(xi, op.fwd_re, w_t=op.adj_re if shared else None, **kw)
+    ii = qmm(xi, op.fwd_im, w_t=op.adj_im if shared else None, **kw)
     out = jax.lax.complex(rr - ii, ri + ir)
     return out[0] if single else out
 
 
-def packed_rmatvec(op: PackedOperator, r: jax.Array, **kw) -> jax.Array:
-    """Φ̂† r (conjugate transpose) for real or complex Φ̂; (M,) or batched (B, M)."""
+def packed_rmatvec(op: PackedOperator, r: jax.Array, shared: bool = False, **kw) -> jax.Array:
+    """Φ̂† r (conjugate transpose) for real or complex Φ̂; (M,) or batched (B, M).
+
+    ``shared`` as in :func:`packed_matvec` (here the *forward* bytes serve as
+    the adjoint's pre-transposed canonical layout)."""
     single = r.ndim == 1
     rb = r[None, :] if single else r
     if not op.is_complex:
-        out = qmm(rb.astype(jnp.float32), op.adj_re, **kw)
+        out = qmm(rb.astype(jnp.float32), op.adj_re,
+                  w_t=op.fwd_re if shared else None, **kw)
         return out[0] if single else out
     # Φ† = (Re − j·Im)ᵀ ; (Φ† r) = (Reᵀ r_re + Imᵀ r_im) + j(Reᵀ r_im − Imᵀ r_re)
     rr_ = jnp.real(rb).astype(jnp.float32)
-    t1 = qmm(rr_, op.adj_re, **kw)
-    t4 = qmm(rr_, op.adj_im, **kw)
+    t1 = qmm(rr_, op.adj_re, w_t=op.fwd_re if shared else None, **kw)
+    t4 = qmm(rr_, op.adj_im, w_t=op.fwd_im if shared else None, **kw)
     if not jnp.iscomplexobj(r):
         out = jax.lax.complex(t1, -t4)
         return out[0] if single else out
     ri_ = jnp.imag(rb).astype(jnp.float32)
-    t2 = qmm(ri_, op.adj_im, **kw)
-    t3 = qmm(ri_, op.adj_re, **kw)
+    t2 = qmm(ri_, op.adj_im, w_t=op.fwd_im if shared else None, **kw)
+    t3 = qmm(ri_, op.adj_re, w_t=op.fwd_re if shared else None, **kw)
     out = jax.lax.complex(t1 + t2, t3 - t4)
     return out[0] if single else out

@@ -363,6 +363,10 @@ def main(argv=None):
                     help="run the solve under repro.analysis.sanitize: any "
                          "NaN/Inf raises at the producing op, and a "
                          "[sanitize] line reports backend compile counts")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a JAX profiler trace of the whole solve "
+                         "under this directory (TensorBoard/Perfetto format; "
+                         "see docs/performance.md)")
     args = ap.parse_args(argv)
     if (args.resume or args.ckpt_every != 10) and not args.checkpoint_dir:
         ap.error("--resume/--ckpt-every need --checkpoint-dir")
@@ -389,16 +393,18 @@ def main(argv=None):
         ap.error("--sparsity-basis selects the MRI recovery model; use an mri config")
     from repro.launch.resilience import Preempted
 
+    import contextlib
+
     if args.sanitize:
         from repro.analysis.sanitize import sanitize as sanitize_ctx
 
         ctx = sanitize_ctx()
     else:
-        import contextlib
-
         ctx = contextlib.nullcontext()
+    prof = (jax.profiler.trace(args.profile_dir) if args.profile_dir
+            else contextlib.nullcontext())
     try:
-        with ctx as counter:
+        with prof, ctx as counter:
             if args.config.startswith("lofar"):
                 if gran == "per_band":
                     ap.error("per_band is the MRI observation granularity; use an mri config")

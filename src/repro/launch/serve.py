@@ -71,7 +71,7 @@ def build_stream(cfg, key):
 
 
 def serve(cfg, devices=None, chunks=None, journal_dir=None, resume=False,
-          sanitize=None):
+          sanitize=None, profile_dir=None):
     """Run the stream through a BatchServer; returns a metrics dict.
 
     With ``journal_dir``, each chunk is write-ahead journaled and the loop
@@ -81,6 +81,10 @@ def serve(cfg, devices=None, chunks=None, journal_dir=None, resume=False,
     stream, drains journaled results and solves the rest — the per-chunk
     ``x_digest`` lines it prints are bit-identical to an uninterrupted run's
     (the fault-injection tests assert exactly that).
+
+    ``profile_dir`` captures a JAX profiler trace of the whole serving loop
+    (compile chunk included — filter by the steady-state chunks when reading;
+    see docs/performance.md).
 
     ``sanitize`` (default: ``cfg.sanitize``) runs the whole loop under
     :func:`repro.analysis.sanitize.sanitize`: any NaN/Inf anywhere raises at
@@ -121,10 +125,12 @@ def serve(cfg, devices=None, chunks=None, journal_dir=None, resume=False,
     else:
         ctx = contextlib.nullcontext()
 
+    prof = (jax.profiler.trace(profile_dir) if profile_dir
+            else contextlib.nullcontext())
     walls, rels_easy, rels_hard = [], [], []
     preempted = None
     counter = None
-    with ctx as counter, PreemptionGuard() as guard:
+    with prof, ctx as counter, PreemptionGuard() as guard:
         srv = BatchServer(phi, cfg.s, cfg.n_iters, mesh=mesh, key=key,
                           exit_tol=cfg.exit_tol, journal_dir=journal_dir,
                           resume=resume, **kw)
@@ -199,6 +205,9 @@ def main(argv=None):
                     help="run under repro.analysis.sanitize: raise on any "
                          "NaN/Inf and report backend compiles after warm-up "
                          "(default: the config's sanitize flag)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a JAX profiler trace of the serving loop "
+                         "under this directory (see docs/performance.md)")
     args = ap.parse_args(argv)
     if args.chunks is not None and args.chunks < 1:
         ap.error("--chunks must be >= 1")
@@ -218,7 +227,7 @@ def main(argv=None):
            "serve-gaussian-fault-packed": FAULT_PACKED}[args.config]
     out = serve(cfg, args.devices, args.chunks,
                 journal_dir=args.checkpoint_dir, resume=args.resume,
-                sanitize=args.sanitize)
+                sanitize=args.sanitize, profile_dir=args.profile_dir)
     print(f"[serve] {cfg.name}: " +
           " ".join(f"{k}={v}" for k, v in out.items()))
 

@@ -1,10 +1,12 @@
-"""Pallas qmm kernel: interpret-mode allclose sweeps against the ref.py oracle."""
+"""Pallas qmm kernel: interpret-mode allclose sweeps against the ref.py oracle,
+plus the fused CPU path's parity sweep and the block-config selector rules."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis_shim import given, settings, st
 
+from repro.kernels.qmm.kernel import select_block_config
 from repro.kernels.qmm.ops import (
     pack_operator,
     pack_weights,
@@ -12,7 +14,7 @@ from repro.kernels.qmm.ops import (
     packed_rmatvec,
     qmm,
 )
-from repro.kernels.qmm.ref import qmm_ref
+from repro.kernels.qmm.ref import qmm_group_ref, qmm_ref
 from repro.quant import fake_quantize
 
 BITS = [2, 4, 8]
@@ -127,3 +129,108 @@ class TestPackedOperator:
         a = packed_matvec(op, x, use_pallas=True, interpret=True)
         b = packed_matvec(op, x, use_pallas=False)
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+class TestFusedDispatch:
+    """The CPU fused path (``use_pallas=False``): every dispatch branch —
+    matvec (m=1), batched minor, batched canonical (shared transposed codes),
+    per-block — must match the unpack-everything oracle bit-for-bit up to f32
+    accumulation order."""
+
+    @pytest.mark.parametrize("gran", ["per_tensor", "per_channel"])
+    @pytest.mark.parametrize("m", [1, 8])
+    @pytest.mark.parametrize("bits", BITS)
+    def test_fused_matches_ref(self, bits, m, gran):
+        key = jax.random.PRNGKey(7)
+        k, n = 129, 67  # deliberately unaligned: exercises padding in every branch
+        x = jax.random.normal(key, (m, k), jnp.float32)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (n, k), jnp.float32)
+        pw = pack_weights(w, bits, jax.random.fold_in(key, 2), granularity=gran)
+        ref = qmm_ref(x, pw.packed, pw.scale, bits, k)
+        out = qmm(x, pw, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-4)
+
+    @pytest.mark.parametrize("m", [1, 8])
+    @pytest.mark.parametrize("bits", BITS)
+    def test_fused_per_block_matches_group_ref(self, bits, m):
+        key = jax.random.PRNGKey(8)
+        k, n, g = 160, 33, 32
+        x = jax.random.normal(key, (m, k), jnp.float32)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (n, k), jnp.float32)
+        pw = pack_weights(w, bits, jax.random.fold_in(key, 2),
+                          granularity=f"per_block:{g}")
+        ref = qmm_group_ref(x, pw.packed, pw.scale, bits, k, g)
+        out = qmm(x, pw, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-4)
+
+    @pytest.mark.parametrize("batch", [2, 8])
+    @pytest.mark.parametrize("bits", BITS)
+    def test_canonical_shared_path_matches_minor(self, bits, batch):
+        """shared=True (gemm over the shared transposed codes — the solver's
+        batched route) must equal shared=False (per-part minor dot) exactly:
+        same codes, different contraction order."""
+        key = jax.random.PRNGKey(9)
+        phi = jax.random.normal(key, (48, 96), jnp.float32)
+        op = pack_operator(phi, bits, jax.random.fold_in(key, 1), shared=True)
+        xb = jax.random.normal(jax.random.fold_in(key, 2), (batch, 96), jnp.float32)
+        rb = jax.random.normal(jax.random.fold_in(key, 3), (batch, 48), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(packed_matvec(op, xb, shared=True, use_pallas=False)),
+            np.asarray(packed_matvec(op, xb, shared=False, use_pallas=False)),
+            rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(packed_rmatvec(op, rb, shared=True, use_pallas=False)),
+            np.asarray(packed_rmatvec(op, rb, shared=False, use_pallas=False)),
+            rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("batch", [2, 8])
+    def test_canonical_shared_path_complex(self, batch):
+        key = jax.random.PRNGKey(10)
+        # jaxlint: allow=JL001 -- test builds a c64 operator on purpose
+        phi = (jax.random.normal(key, (24, 56))
+               + 1j * jax.random.normal(jax.random.fold_in(key, 1), (24, 56))
+               ).astype(jnp.complex64)
+        op = pack_operator(phi, 8, jax.random.fold_in(key, 2), shared=True)
+        xb = jax.random.normal(jax.random.fold_in(key, 3), (batch, 56), jnp.float32)
+        # jaxlint: allow=JL001 -- test builds c64 observations on purpose
+        rb = (jax.random.normal(jax.random.fold_in(key, 4), (batch, 24))
+              + 1j * jax.random.normal(jax.random.fold_in(key, 5), (batch, 24))
+              ).astype(jnp.complex64)
+        np.testing.assert_allclose(
+            np.asarray(packed_matvec(op, xb, shared=True, use_pallas=False)),
+            np.asarray(packed_matvec(op, xb, shared=False, use_pallas=False)),
+            rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(packed_rmatvec(op, rb, shared=True, use_pallas=False)),
+            np.asarray(packed_rmatvec(op, rb, shared=False, use_pallas=False)),
+            rtol=1e-5, atol=1e-5)
+
+
+class TestSelectBlockConfig:
+    def test_auto_clamps_to_small_problem(self):
+        # fig5 smoke geometry: m=64, n=128, k=128 at 8 bits (k_unit=128)
+        bm, bn, bk = select_block_config(64, 128, 128, 8)
+        assert (bm, bn, bk) == (64, 128, 128)
+
+    def test_auto_rounds_tiny_dims_to_hardware_minima(self):
+        bm, bn, bk = select_block_config(3, 40, 100, 8)
+        assert (bm, bn, bk) == (8, 128, 128)  # 8 sublanes, 128 lanes, 1 k-unit
+
+    def test_auto_respects_group_size_lcm(self):
+        # bits=2 → k_unit = 128·4 = 512; group 96 → lcm 1536 caps bk
+        bm, bn, bk = select_block_config(128, 256, 4096, 2, group_size=96)
+        assert bk % 1536 == 0
+
+    def test_explicit_oversized_block_raises(self):
+        with pytest.raises(ValueError, match="mostly padding"):
+            select_block_config(4, 64, 256, 8, block_m=128)
+
+    def test_explicit_misaligned_block_raises(self):
+        with pytest.raises(ValueError, match="multiple of"):
+            select_block_config(64, 256, 1024, 8, block_k=100)
+
+    def test_explicit_aligned_block_accepted(self):
+        assert select_block_config(128, 256, 1024, 8, block_m=64,
+                                   block_n=128, block_k=512) == (64, 128, 512)

@@ -122,3 +122,49 @@ class TestQNIHT:
         res = niht(prob.phi, prob.y, prob.s, n_iters=20, real_signal=True, nonneg=True)
         assert res.x.dtype == jnp.float32
         assert float(jnp.min(res.x)) >= 0.0
+
+
+class TestBatchedPackedStreaming:
+    """Regression guard for the serving amortization: ``qniht_batch`` with the
+    packed backend must hand the WHOLE (B, ·) block to every packed operator
+    application — one codes stream per iteration step, never one per row."""
+
+    @staticmethod
+    def _traced_batch_dims(batch):
+        import repro.core.operators as op_mod
+        from repro.core import qniht_batch
+
+        real_mv, real_rmv = op_mod.packed_matvec, op_mod.packed_rmatvec
+        mv_dims, rmv_dims = [], []
+
+        def spy_mv(op, x, **kw):
+            mv_dims.append(x.shape[0] if x.ndim == 2 else 1)
+            return real_mv(op, x, **kw)
+
+        def spy_rmv(op, r, **kw):
+            rmv_dims.append(r.shape[0] if r.ndim == 2 else 1)
+            return real_rmv(op, r, **kw)
+
+        op_mod.packed_matvec, op_mod.packed_rmatvec = spy_mv, spy_rmv
+        try:
+            # odd shape so no earlier test's jit cache hides the trace
+            prob = make_gaussian_problem(37, 74, 4, snr_db=20.0,
+                                         key=jax.random.PRNGKey(21))
+            Y = jnp.stack([prob.y] * batch)
+            qniht_batch(prob.phi, Y, 4, 3, bits_phi=8, bits_y=8,
+                        key=jax.random.PRNGKey(22), requantize="fixed",
+                        backend="packed", with_trace=False)
+        finally:
+            op_mod.packed_matvec, op_mod.packed_rmatvec = real_mv, real_rmv
+        return mv_dims, rmv_dims
+
+    def test_streams_codes_once_per_application(self):
+        mv_dims, rmv_dims = self._traced_batch_dims(5)
+        assert mv_dims and rmv_dims
+        assert all(b == 5 for b in mv_dims), mv_dims
+        assert all(b == 5 for b in rmv_dims), rmv_dims
+
+    def test_application_count_independent_of_batch(self):
+        mv3, rmv3 = self._traced_batch_dims(3)
+        mv6, rmv6 = self._traced_batch_dims(6)
+        assert (len(mv3), len(rmv3)) == (len(mv6), len(rmv6))
