@@ -11,11 +11,13 @@
 #   scripts/ci.sh full     # everything — the driver's tier-1 command; includes the
 #                          # @slow SIGTERM kill + --resume subprocess matrix
 #                          # (tests/test_fault_injection.py)
-#   scripts/ci.sh analyze  # blocking static analysis: jaxlint (JL001-JL007) over
-#                          # src/tests/benchmarks/examples against the checked-in
-#                          # baseline, a self-check that every bad fixture still
-#                          # trips its rule, and ruff (pinned in pyproject.toml)
-#                          # when installed — see docs/static-analysis.md
+#   scripts/ci.sh analyze  # blocking static analysis, both tiers: jaxlint
+#                          # (JL001-JL007) over src/tests/benchmarks/examples
+#                          # plus the jaxpr IR tier (JX101-JX106) tracing the
+#                          # entry-point registry, both against the checked-in
+#                          # baseline; fixture self-checks per rule; ruff
+#                          # (pinned in pyproject.toml) when installed — see
+#                          # docs/static-analysis.md
 #   scripts/ci.sh lint     # byte-compile src/tests/benchmarks (+ ruff if installed)
 #   scripts/ci.sh docs     # docs gate: README/docs snippets execute, links resolve
 #   scripts/ci.sh perf     # perf smoke: benchmarks/kernels_micro.py --perf-smoke
@@ -30,8 +32,13 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 analyze() {
-  # 1. jaxlint over the repo against .jaxlint-baseline.json — always blocking
-  python -m repro.analysis
+  fmt=()
+  [ -n "${GITHUB_ACTIONS:-}" ] && fmt=(--format github)  # PR annotations
+  # 1. both tiers over the repo against .jaxlint-baseline.json — always
+  #    blocking. The jaxpr tier traces the full entry-point registry and
+  #    prints per-rule counts; --budget fails the gate if tracing slows past
+  #    60 s (it must stay cheap enough to block every PR).
+  python -m repro.analysis --tier both --budget 60 "${fmt[@]}"
   # 2. self-check: a rule that silently stopped firing is worse than no rule.
   #    Every bad fixture must still trip (exit 1), every ok twin stay clean.
   for rule in jl001 jl002 jl003 jl004 jl005 jl006 jl007; do
@@ -48,7 +55,16 @@ analyze() {
     fi
   done
   echo "[analyze] fixture self-check ok (7 rules trip on bad, clean on ok)"
-  # 3. ruff, config pinned in pyproject.toml; advisory-absent, blocking-present
+  # 3. jaxpr fixture self-check: the deliberately broken registry (one entry
+  #    per JX rule, incl. the JX106 broken-adjoint operator) must keep failing
+  if python -m repro.analysis --tier jaxpr \
+      --registry tests/jaxlint_fixtures/jaxpr_bad.py --baseline none \
+      >/dev/null 2>&1; then
+    echo "[analyze] FIXTURE REGRESSION: jaxpr_bad.py no longer trips the JX rules" >&2
+    exit 1
+  fi
+  echo "[analyze] jaxpr fixture self-check ok (broken registry trips)"
+  # 4. ruff, config pinned in pyproject.toml; advisory-absent, blocking-present
   if command -v ruff >/dev/null 2>&1; then
     ruff check src tests benchmarks examples
   else

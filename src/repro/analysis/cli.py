@@ -1,18 +1,70 @@
-"""jaxlint CLI — ``python -m repro.analysis [paths...]``.
+"""Analysis CLI — ``python -m repro.analysis [--tier ast|jaxpr|both]``.
 
 Exit status 0 = clean (every finding fixed, pragma'd, or baselined),
-1 = unsuppressed findings or parse errors. This is the blocking contract
-``scripts/ci.sh analyze`` enforces.
+1 = unsuppressed findings, trace/parse errors, stale baseline entries, or a
+blown ``--budget``. This is the blocking contract ``scripts/ci.sh analyze``
+enforces for BOTH tiers.
+
+The default tier is ``ast`` (pure stdlib, millisecond start-up — safe for
+pre-commit hooks); ``jaxpr`` imports jax and traces the entry-point
+registry; ``both`` is what CI runs.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
+import time
 
 from repro.analysis.engine import BASELINE_NAME, find_repo_root, run_jaxlint
 from repro.analysis.findings import Baseline
 from repro.analysis.rules import RULE_SUMMARIES
+
+_PLACEHOLDER = "TODO: justify this suppression before merging"
+
+
+def _jaxpr_summaries():
+    from repro.analysis.jaxpr.rules import JAXPR_RULE_SUMMARIES
+
+    return JAXPR_RULE_SUMMARIES
+
+
+def _entry_key(e: dict) -> tuple:
+    return (e["rule"], e["path"], e["snippet"])
+
+
+def _emit(report, tier_name, fmt, extra_tail=""):
+    """Print one tier's findings in the chosen format; return its tail line."""
+    if fmt == "github":
+        for f in report.findings:
+            # '::error' annotation syntax: one line per finding, shown inline
+            # on the PR diff by GitHub's checks UI
+            msg = f"{f.message} | hint: {f.hint}"
+            print(f"::error file={f.path},line={f.line},"
+                  f"title={f.rule}::{msg}")
+        for _, err in report.parse_errors:
+            print(f"::error title={tier_name}::{err}")
+    elif fmt == "text":
+        for f in report.findings:
+            print(f.format())
+        for _, err in report.parse_errors:
+            print(err)
+    unit = "files" if tier_name == "jaxlint" else "entries traced"
+    tail = (f"[{tier_name}] {report.files} {unit}, "
+            f"{len(report.findings)} finding(s), "
+            f"{len(report.suppressed)} suppressed")
+    if report.parse_errors:
+        noun = "parse" if tier_name == "jaxlint" else "trace"
+        tail += f", {len(report.parse_errors)} {noun} error(s)"
+    return tail + extra_tail
+
+
+def _rule_counts(report, summaries) -> str:
+    counts = {rid: 0 for rid in sorted(summaries)}
+    for f in report.findings:
+        counts[f.rule] = counts.get(f.rule, 0) + 1
+    return " ".join(f"{rid}:{n}" for rid, n in counts.items())
 
 
 def main(argv=None) -> int:
@@ -20,75 +72,180 @@ def main(argv=None) -> int:
         prog="python -m repro.analysis", description=__doc__,
         formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("paths", nargs="*",
-                    help="files/dirs to lint (default: src tests benchmarks "
-                         "examples under the repo root; naming a file "
-                         "bypasses the fixture-dir exclusion)")
+                    help="files/dirs for the AST tier (default: src tests "
+                         "benchmarks examples under the repo root; naming a "
+                         "file bypasses the fixture-dir exclusion). The "
+                         "jaxpr tier always traces its registry.")
+    ap.add_argument("--tier", choices=["ast", "jaxpr", "both"], default="ast",
+                    help="which analysis tier(s) to run (default: ast)")
     ap.add_argument("--root", default=None,
                     help="repo root (default: auto-detected from cwd)")
     ap.add_argument("--baseline", default=None,
                     help=f"suppression file (default: <root>/{BASELINE_NAME} "
                          "if present; pass 'none' to ignore)")
     ap.add_argument("--rules", default=None,
-                    help="comma-separated rule ids to run (default: all)")
+                    help="comma-separated rule ids to run, JLxxx and/or "
+                         "JXxxx (default: all)")
     ap.add_argument("--no-pragmas", action="store_true",
                     help="ignore inline '# jaxlint: allow' pragmas")
-    ap.add_argument("--format", choices=["text", "json"], default="text")
+    ap.add_argument("--format", choices=["text", "json", "github"],
+                    default="text")
+    ap.add_argument("--budget", type=float, default=None, metavar="SECONDS",
+                    help="fail if the jaxpr tier (trace + rules) exceeds "
+                         "this wall-clock budget")
+    ap.add_argument("--registry", default=None, metavar="FILE",
+                    help="python file defining ENTRIES: replaces the "
+                         "built-in jaxpr entry-point registry (fixture "
+                         "self-checks)")
     ap.add_argument("--update-baseline", action="store_true",
-                    help="write all current findings to the baseline file "
-                         "with a placeholder reason (justify before merging)")
+                    help="rewrite the baseline from current findings of the "
+                         "tier(s) run; entries of tiers NOT run and reasons "
+                         "of still-matching entries are preserved")
     ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--list-entries", action="store_true",
+                    help="print the jaxpr tier's entry-point registry")
     args = ap.parse_args(argv)
 
     if args.list_rules:
-        for rid, summary in sorted(RULE_SUMMARIES.items()):
+        both = dict(RULE_SUMMARIES)
+        both.update(_jaxpr_summaries())
+        for rid, summary in sorted(both.items()):
             print(f"{rid}  {summary}")
         return 0
+    if args.list_entries:
+        from repro.analysis.jaxpr.registry import build_registry
 
-    rule_ids = ([r.strip().upper() for r in args.rules.split(",")]
-                if args.rules else None)
-    if rule_ids:
-        unknown = set(rule_ids) - set(RULE_SUMMARIES)
-        if unknown:
-            ap.error(f"unknown rule ids: {sorted(unknown)}")
-
-    root = find_repo_root(args.root)
-    report = run_jaxlint(
-        paths=args.paths or None, root=root,
-        baseline="none" if args.update_baseline else args.baseline,
-        rule_ids=rule_ids, respect_pragmas=not args.no_pragmas)
-
-    if args.update_baseline:
-        import os
-
-        out = args.baseline if args.baseline not in (None, "none") \
-            else os.path.join(root, BASELINE_NAME)
-        with open(out, "w") as f:
-            f.write(Baseline.dump_entries(
-                report.findings,
-                reason="TODO: justify this suppression before merging"))
-        print(f"[jaxlint] wrote {len(report.findings)} entries to {out}")
+        for entry in build_registry():
+            print(entry.name)
         return 0
 
+    run_ast = args.tier in ("ast", "both")
+    run_jx = args.tier in ("jaxpr", "both")
+
+    jl_ids = jx_ids = None
+    if args.rules:
+        ids = [r.strip().upper() for r in args.rules.split(",")]
+        known = set(RULE_SUMMARIES) | set(_jaxpr_summaries())
+        unknown = set(ids) - known
+        if unknown:
+            ap.error(f"unknown rule ids: {sorted(unknown)}")
+        jl_ids = [r for r in ids if r.startswith("JL")] or None
+        jx_ids = [r for r in ids if r.startswith("JX")] or None
+        # a JL-only filter makes the jaxpr tier a no-op and vice versa
+        run_ast = run_ast and jl_ids is not None
+        run_jx = run_jx and jx_ids is not None
+        if not (run_ast or run_jx):
+            ap.error(f"--rules {args.rules} selects no rule in --tier "
+                     f"{args.tier}")
+
+    root = find_repo_root(args.root)
+    effective_baseline = "none" if args.update_baseline else args.baseline
+
+    reports = []  # (tier_name, report)
+    tails = []
+    rc = 0
+    if run_ast:
+        rep = run_jaxlint(paths=args.paths or None, root=root,
+                          baseline=effective_baseline, rule_ids=jl_ids,
+                          respect_pragmas=not args.no_pragmas)
+        reports.append(("jaxlint", rep))
+        tails.append(_emit(rep, "jaxlint", args.format)
+                     if not args.update_baseline else "")
+    if run_jx:
+        from repro.analysis.jaxpr.runner import (load_registry_file,
+                                                 run_jaxpr_tier)
+
+        registry = (load_registry_file(args.registry)
+                    if args.registry else None)
+        t0 = time.monotonic()
+        rep = run_jaxpr_tier(root=root, registry=registry,
+                             baseline=effective_baseline, rule_ids=jx_ids,
+                             respect_pragmas=not args.no_pragmas)
+        dt = time.monotonic() - t0
+        reports.append(("jaxpr", rep))
+        if not args.update_baseline:
+            per_rule = _rule_counts(rep, _jaxpr_summaries())
+            tails.append(_emit(rep, "jaxpr", args.format,
+                               extra_tail=f" in {dt:.1f}s | {per_rule}"))
+        if args.budget is not None and dt > args.budget:
+            tails.append(f"[jaxpr] BUDGET EXCEEDED: tier took {dt:.1f}s "
+                         f"(budget {args.budget:.0f}s) — the registry trace "
+                         "must stay cheap enough to block every PR")
+            rc = 1
+
+    if args.update_baseline:
+        return _update_baseline(args, root, reports)
+
+    # stale-entry rejection: a vetted suppression whose finding no longer
+    # occurs means the flagged code changed — force a re-review. Only
+    # meaningful for a full default-scope run of a tier's every rule.
+    stale = []
+    if not args.paths and not args.rules and effective_baseline != "none":
+        bl_path = args.baseline or os.path.join(root, BASELINE_NAME)
+        if os.path.isfile(bl_path):
+            entries = Baseline.load(bl_path).entries
+            matched = {(f.rule, f.path, f.snippet)
+                       for _, rep in reports
+                       for f, how in rep.suppressed if how == "baseline"}
+            prefixes = {"JL"} if not run_jx else (
+                {"JX"} if not run_ast else {"JL", "JX"})
+            stale = [e for e in entries if e["rule"][:2] in prefixes
+                     and _entry_key(e) not in matched]
+
     if args.format == "json":
-        print(json.dumps({
-            "files": report.files,
-            "findings": [f.to_json() for f in report.findings],
+        merged = {
+            "files": sum(r.files for _, r in reports),
+            "findings": [f.to_json() for _, r in reports for f in r.findings],
             "suppressed": [{"how": how, **f.to_json()}
-                           for f, how in report.suppressed],
-            "parse_errors": [e for _, e in report.parse_errors],
-        }, indent=2))
+                           for _, r in reports for f, how in r.suppressed],
+            "parse_errors": [e for _, r in reports for _, e in r.parse_errors],
+            "stale_baseline_entries": stale,
+            "tiers": [name for name, _ in reports],
+        }
+        print(json.dumps(merged, indent=2))
     else:
-        for f in report.findings:
-            print(f.format())
-        for _, err in report.parse_errors:
-            print(err)
-        tail = (f"[jaxlint] {report.files} files, "
-                f"{len(report.findings)} finding(s), "
-                f"{len(report.suppressed)} suppressed")
-        if report.parse_errors:
-            tail += f", {len(report.parse_errors)} parse error(s)"
-        print(tail)
-    return 0 if report.ok else 1
+        for e in stale:
+            line = (f"stale baseline entry: {e['rule']} {e['path']} "
+                    f"{e['snippet']!r} no longer matches any finding — the "
+                    "flagged code changed; remove or re-justify the entry")
+            if args.format == "github":
+                print(f"::error file={e['path']},title={e['rule']}::{line}")
+            else:
+                print(line)
+        for tail in tails:
+            print(tail)
+    if stale or any(not rep.ok for _, rep in reports):
+        rc = 1
+    return rc
+
+
+def _update_baseline(args, root, reports) -> int:
+    out = args.baseline if args.baseline not in (None, "none") \
+        else os.path.join(root, BASELINE_NAME)
+    old_entries = []
+    if os.path.isfile(out):
+        old_entries = Baseline.load(out).entries
+    ran_prefixes = {"jaxlint": "JL", "jaxpr": "JX"}
+    executed = {ran_prefixes[name] for name, _ in reports}
+    kept = [e for e in old_entries if e["rule"][:2] not in executed]
+    by_key = {_entry_key(e): e for e in old_entries}
+    fresh = []
+    for _, rep in reports:
+        for f in rep.findings:
+            key = (f.rule, f.path, f.snippet)
+            prev = by_key.get(key)
+            fresh.append(prev if prev is not None else {
+                "rule": f.rule, "path": f.path, "snippet": f.snippet,
+                "reason": _PLACEHOLDER})
+    merged = sorted(kept + fresh,
+                    key=lambda e: (e["rule"], e["path"], e["snippet"]))
+    with open(out, "w") as f:
+        f.write(json.dumps({"version": 1, "entries": merged}, indent=2) + "\n")
+    n_kept = len(kept)
+    print(f"[analysis] wrote {len(merged)} entries to {out} "
+          f"({len(fresh)} from this run, {n_kept} preserved from tiers "
+          "not run)")
+    return 0
 
 
 if __name__ == "__main__":

@@ -1,0 +1,29 @@
+"""jaxpr-tier static analysis: IR rules over traced entry points.
+
+The AST tier (:mod:`repro.analysis.rules`) reads source; this tier reads
+what XLA compiles. ``jax.make_jaxpr``/``jax.eval_shape`` trace a registry of
+the system's real entry points (every solver backend × granularity, the
+fused kernels, every LinearOperator, the serving chunk fn) with abstract
+inputs — no data, no FLOPs — and rules JX101–JX106 walk the resulting IR.
+
+Import cost: this package imports jax only when the tier runs. The AST
+linter's ``python -m repro.analysis`` start-up stays jax-free.
+"""
+
+__all__ = ["run_jaxpr_tier", "build_registry", "JAXPR_RULE_SUMMARIES"]
+
+
+def __getattr__(name):
+    if name == "run_jaxpr_tier":
+        from repro.analysis.jaxpr.runner import run_jaxpr_tier
+
+        return run_jaxpr_tier
+    if name == "build_registry":
+        from repro.analysis.jaxpr.registry import build_registry
+
+        return build_registry
+    if name == "JAXPR_RULE_SUMMARIES":
+        from repro.analysis.jaxpr.rules import JAXPR_RULE_SUMMARIES
+
+        return JAXPR_RULE_SUMMARIES
+    raise AttributeError(name)

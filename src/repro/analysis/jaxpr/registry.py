@@ -1,0 +1,308 @@
+"""Entry-point registry for the jaxpr analysis tier.
+
+Each :class:`EntryPoint` names one traced surface of the system — a solver
+configuration, a fused-kernel formulation, a LinearOperator, the BatchServer
+chunk fn — and a ``make()`` thunk that builds its :class:`TraceSpec` or
+:class:`OperatorSpec` lazily (jax and the repro modules are imported only
+when the tier actually runs, keeping ``python -m repro.analysis`` jax-free
+for the AST tier).
+
+Tracing is abstract: array inputs are ``jax.ShapeDtypeStruct``s at tiny
+pinned shapes (M=16, N=32, B=4, s=4, n_iters=3) — ``make_jaxpr`` sees the
+full iteration graph of every backend × granularity without moving data or
+running a FLOP. The few concrete arrays that exist (operator construction
+data, packed codes) are 16×32 toys built once at registry time; finding
+identity is pinned to these shapes, so changing them invalidates baselines
+on purpose.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+from functools import partial
+from typing import Any, Callable, Optional
+
+# pinned trace shapes — finding snippets embed these, keep them stable
+M, N, B, S, N_ITERS = 16, 32, 4, 4, 3
+RES = 8  # imaging resolution for Fourier/wavelet operators (RES² = 64)
+
+
+@dataclasses.dataclass
+class TraceSpec:
+    """One function to ``jax.make_jaxpr``-trace with abstract inputs."""
+
+    fn: Callable
+    args: tuple
+    anchor: tuple  # (abspath, 1-based line) of the underlying def
+    #: second argument tuple at different abstract shapes; when set, JX102
+    #: compares the two traces' primitive skeletons (a divergence means a
+    #: Python branch keyed on shape → per-shape recompiles)
+    alt_args: Optional[tuple] = None
+
+
+@dataclasses.dataclass
+class OperatorSpec:
+    """LinearOperator(s) whose mv/rmv contract JX106 checks via eval_shape.
+
+    ``ops`` usually holds one operator; the fake-quant pair entry checks the
+    (gradient, residual) pair its factory returns. ``trace_mv=True`` also
+    runs the IR rules over the mv/rmv jaxprs themselves.
+    """
+
+    ops: list
+    anchor: tuple
+    trace_mv: bool = True
+
+
+@dataclasses.dataclass
+class EntryPoint:
+    name: str
+    make: Callable[[], Any]  # () -> TraceSpec | OperatorSpec
+
+
+def anchor_of(obj) -> tuple:
+    """(source file, def line) of ``obj``, through jit/functools wrappers."""
+    try:
+        obj = inspect.unwrap(obj)
+        path = inspect.getsourcefile(obj)
+        _, line = inspect.getsourcelines(obj)
+        return (path or "<unknown>", line)
+    except (TypeError, OSError):
+        mod = inspect.getmodule(obj)
+        return (getattr(mod, "__file__", "<unknown>"), 1)
+
+
+def _sds(shape, dtype):
+    import jax
+
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _key_sds():
+    # old-style PRNG keys are plain (2,) uint32 arrays — traceable abstractly
+    import jax.numpy as jnp
+
+    return _sds((2,), jnp.uint32)
+
+
+def _qniht_spec(batch: bool, *, alt_batch: bool = False, **statics) -> TraceSpec:
+    import jax.numpy as jnp
+
+    from repro.core.niht import qniht, qniht_batch
+
+    fn = qniht_batch if batch else qniht
+    phi = _sds((M, N), jnp.float32)
+    y = _sds((B, M) if batch else (M,), jnp.float32)
+    kw = dict(s=S, n_iters=N_ITERS, with_trace=True, **statics)
+    if statics.get("bits_phi") or statics.get("bits_y"):
+        kw["key"] = _key_sds()
+    args = (phi, y)
+    alt = None
+    if alt_batch:
+        # +2 rows must be structure-preserving: row count is data layout,
+        # not dispatch (JX102 flags it if a Python branch keys on B)
+        alt = (phi, _sds((B + 2, M), jnp.float32))
+    return TraceSpec(fn=partial(fn, **kw), args=args, anchor=anchor_of(fn),
+                     alt_args=alt)
+
+
+def _segment_spec(**statics) -> TraceSpec:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.niht import solver_init, solver_segment
+
+    phi = _sds((M, N), jnp.float32)
+    kw = dict(s=S, n_iters=N_ITERS, **statics)
+    if statics.get("bits_phi") or statics.get("bits_y"):
+        kw["key"] = jax.random.PRNGKey(0)
+    # solver_init composes under eval_shape — the state arrives as a pytree
+    # of ShapeDtypeStructs, exactly the checkpoint-restore construction
+    state = jax.eval_shape(
+        partial(solver_init, **kw), phi, _sds((B, M), jnp.float32))
+    seg_kw = {k: v for k, v in kw.items() if k not in ("n_iters", "key")}
+    return TraceSpec(
+        fn=partial(solver_segment, n_steps=2, **seg_kw),
+        args=(phi, state), anchor=anchor_of(solver_segment))
+
+
+def _toy_phi():
+    """Deterministic non-degenerate (M, N) f32 — packing needs real values."""
+    import numpy as np
+
+    g = np.cos(1.0 + 0.7 * np.arange(M * N, dtype=np.float64))
+    return (g.reshape(M, N) / np.sqrt(M)).astype(np.float32)
+
+
+def _packed_weights(granularity=None, group_size=None, transpose=False):
+    import jax.numpy as jnp
+
+    from repro.kernels.qmm.ops import pack_weights
+
+    w = jnp.asarray(_toy_phi())
+    if transpose:
+        w = w.T
+    gran = granularity
+    if granularity == "per_block":
+        from repro.quant.formats import Granularity
+
+        gran = Granularity("per_block", group_size)
+    return pack_weights(w, 8, granularity=gran)
+
+
+def _qmm_fused_spec(formulation: str) -> TraceSpec:
+    import jax.numpy as jnp
+
+    from repro.kernels.qmm import ops
+
+    if formulation == "matvec":
+        w = _packed_weights()
+        args = (_sds((1, w.k_dim), jnp.float32), w)
+    elif formulation == "batch_minor":
+        w = _packed_weights(granularity="per_channel")
+        args = (_sds((B, w.k_dim), jnp.float32), w)
+    elif formulation == "batch_canonical":
+        w = _packed_weights()
+        w_t = _packed_weights(transpose=True)
+        args = (_sds((B, w.k_dim), jnp.float32), w, w_t)
+    elif formulation == "per_block":
+        w = _packed_weights(granularity="per_block", group_size=8)
+        args = (_sds((B, w.k_dim), jnp.float32), w)
+    else:  # pragma: no cover - registry bug
+        raise ValueError(formulation)
+    return TraceSpec(fn=ops.qmm_fused, args=args,
+                     anchor=anchor_of(ops.qmm_fused))
+
+
+def _operator_spec(which: str) -> OperatorSpec:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import operators as O
+
+    phi = jnp.asarray(_toy_phi())
+    key = jax.random.PRNGKey(0)
+    if which == "dense_f32":
+        ops = [O.DenseOperator(phi)]
+        anchor = anchor_of(O.DenseOperator)
+    elif which == "dense_c64":
+        # jaxlint: allow=JL001 -- registry toy data pinned to c64 on purpose: the entry EXISTS to trace the complex operator path
+        ops = [O.DenseOperator((phi + 0.5j * phi).astype(jnp.complex64))]
+        anchor = anchor_of(O.DenseOperator)
+    elif which == "fakequant_pair":
+        g, r = O.FakeQuantPairOperator(phi, 8, key).at_iteration(0)
+        ops = [g, r]
+        anchor = anchor_of(O.FakeQuantPairOperator)
+    elif which == "packed_per_tensor":
+        ops = [O.PackedStreamingOperator.pack(phi, 8, key)]
+        anchor = anchor_of(O.PackedStreamingOperator)
+    elif which == "packed_per_channel":
+        ops = [O.PackedStreamingOperator.pack(phi, 8, key,
+                                              granularity="per_channel")]
+        anchor = anchor_of(O.PackedStreamingOperator)
+    elif which == "fourier":
+        mask = np.zeros((RES, RES), bool)
+        mask[::2, ::3] = True
+        ops = [O.SubsampledFourierOperator.from_mask(mask)]
+        anchor = anchor_of(O.SubsampledFourierOperator)
+    elif which == "wavelet":
+        ops = [O.WaveletSynthesisOperator(RES, "haar")]
+        anchor = anchor_of(O.WaveletSynthesisOperator)
+    elif which == "composed_mri":
+        mask = np.zeros((RES, RES), bool)
+        mask[::2, :] = True
+        f = O.SubsampledFourierOperator.from_mask(mask)
+        w = O.WaveletSynthesisOperator(RES, "haar")
+        ops = [O.ComposedOperator(f, w)]
+        anchor = anchor_of(O.ComposedOperator)
+    else:  # pragma: no cover - registry bug
+        raise ValueError(which)
+    return OperatorSpec(ops=ops, anchor=anchor)
+
+
+def _batch_server_spec() -> TraceSpec:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.parallel.batch import BatchServer, make_batch_mesh, sharded_qniht_run
+
+    mesh = make_batch_mesh(1)
+    server = BatchServer(
+        jnp.asarray(_toy_phi()), s=S, n_iters=N_ITERS, mesh=mesh,
+        bits_phi=8, bits_y=8, key=jax.random.PRNGKey(0),
+        requantize="fixed", backend="packed")
+
+    def chunk_fn(Y, key):
+        # the exact expression BatchServer.submit dispatches per chunk
+        return sharded_qniht_run(server.phi, Y, key, mesh=server.mesh,
+                                 **server._statics)
+
+    return TraceSpec(
+        fn=chunk_fn,
+        args=(_sds((B, M), jnp.float32), _key_sds()),
+        anchor=anchor_of(BatchServer.submit),
+        alt_args=(_sds((B + 4, M), jnp.float32), _key_sds()))
+
+
+def build_registry() -> list[EntryPoint]:
+    """The full entry-point registry: every backend × granularity the
+    solver dispatches over, each fused-kernel formulation, every
+    LinearOperator, the segmented solver, and the serving chunk fn."""
+    E = EntryPoint
+    return [
+        # --- one-shot solver: backends × requantize × granularity ---------
+        E("qniht.dense.f32", lambda: _qniht_spec(False)),
+        E("qniht.dense.q8.pair",
+          lambda: _qniht_spec(False, bits_phi=8, bits_y=8, requantize="pair")),
+        E("qniht.dense.q8.fixed",
+          lambda: _qniht_spec(False, bits_phi=8, bits_y=8, requantize="fixed")),
+        E("qniht.dense.hsthresh",
+          lambda: _qniht_spec(False, threshold="hsthresh", real_signal=True)),
+        E("qniht.packed.per_tensor",
+          lambda: _qniht_spec(False, bits_phi=8, bits_y=8, requantize="fixed",
+                              backend="packed")),
+        E("qniht.packed.per_channel",
+          lambda: _qniht_spec(False, bits_phi=8, bits_y=8, requantize="fixed",
+                              backend="packed", scale_granularity="per_channel")),
+        E("qniht.packed.per_block",
+          lambda: _qniht_spec(False, bits_phi=8, bits_y=8, requantize="fixed",
+                              backend="packed", scale_granularity="per_block",
+                              group_size=8)),
+        # --- batched solver (alt shapes probe recompile surface) ----------
+        E("qniht_batch.dense.f32",
+          lambda: _qniht_spec(True, alt_batch=True)),
+        E("qniht_batch.packed.per_tensor",
+          lambda: _qniht_spec(True, alt_batch=True, bits_phi=8, bits_y=8,
+                              requantize="fixed", backend="packed")),
+        E("qniht_batch.dense.early_exit",
+          lambda: _qniht_spec(True, early_exit=True)),
+        E("qniht_batch.packed.early_exit",
+          lambda: _qniht_spec(True, bits_phi=8, bits_y=8, requantize="fixed",
+                              backend="packed", early_exit=True)),
+        E("qniht_batch.dense.freeze_tol",
+          lambda: _qniht_spec(True, early_exit=True, exit_tol=1e-6)),
+        # --- segmented (checkpointable) solver -----------------------------
+        E("solver_segment.dense", lambda: _segment_spec()),
+        E("solver_segment.packed",
+          lambda: _segment_spec(bits_phi=8, bits_y=8, requantize="fixed",
+                                backend="packed")),
+        # --- fused packed kernels: every static dispatch path --------------
+        E("qmm_fused.matvec", lambda: _qmm_fused_spec("matvec")),
+        E("qmm_fused.batch_minor", lambda: _qmm_fused_spec("batch_minor")),
+        E("qmm_fused.batch_canonical",
+          lambda: _qmm_fused_spec("batch_canonical")),
+        E("qmm_fused.per_block", lambda: _qmm_fused_spec("per_block")),
+        # --- LinearOperator protocol: JX106 adjoint contracts ---------------
+        E("op.dense.f32", lambda: _operator_spec("dense_f32")),
+        E("op.dense.c64", lambda: _operator_spec("dense_c64")),
+        E("op.fakequant_pair", lambda: _operator_spec("fakequant_pair")),
+        E("op.packed.per_tensor", lambda: _operator_spec("packed_per_tensor")),
+        E("op.packed.per_channel",
+          lambda: _operator_spec("packed_per_channel")),
+        E("op.fourier", lambda: _operator_spec("fourier")),
+        E("op.wavelet", lambda: _operator_spec("wavelet")),
+        E("op.composed.mri", lambda: _operator_spec("composed_mri")),
+        # --- serving: the per-chunk program BatchServer.submit dispatches ---
+        E("batch_server.chunk_fn", _batch_server_spec),
+    ]

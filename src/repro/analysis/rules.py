@@ -157,6 +157,37 @@ def _is_key_consumption(call: ast.Call) -> str | None:
     return None
 
 
+def _bound_names(stmts) -> set[str]:
+    """Names (re)bound anywhere in ``stmts``, nested scopes excluded.
+
+    Used at branch merges: a ``key, sub = jax.random.split(key)`` inside an
+    if/for/while body re-binds ``key`` on at least one path, so the merged
+    state must reset its draw counter (under-reporting when the branch is
+    not taken beats a false positive on the refreshed key).
+    """
+    bound: set[str] = set()
+    for stmt in stmts:
+        for node in ast.walk(stmt):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef, ast.Lambda)):
+                continue  # fresh scope; its bindings don't escape
+            targets = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, (ast.AnnAssign, ast.AugAssign,
+                                   ast.NamedExpr)):
+                targets = [node.target]
+            elif isinstance(node, (ast.For, ast.AsyncFor)):
+                targets = [node.target]
+            elif isinstance(node, ast.withitem) and node.optional_vars:
+                targets = [node.optional_vars]
+            for t in targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name):
+                        bound.add(n.id)
+    return bound
+
+
 class _KeyReuseScanner:
     """Order-aware scan of one function (or module) body.
 
@@ -165,7 +196,10 @@ class _KeyReuseScanner:
     resets it. if/for/while/try branches are scanned on *copies* of the state
     that are then discarded: a key consumed once in each of two mutually
     exclusive branches (the ``sensing/gaussian.py`` kflux pattern) is NOT
-    reuse, and under-reporting across merges beats crying wolf.
+    reuse, and under-reporting across merges beats crying wolf. Names the
+    branch *re-binds* are reset in the merged state too (see
+    :func:`_bound_names`) — consuming the fresh ``key`` after the merge is
+    not reuse of the pre-branch one.
     """
 
     def __init__(self, path, source_lines):
@@ -201,16 +235,19 @@ class _KeyReuseScanner:
                     branch.pop(n.id, None)
             self.scan_block(stmt.body, branch)
             self.scan_block(stmt.orelse, dict(state))
+            self._merge_rebindings(state, stmt.body, stmt.orelse)
             return
         if isinstance(stmt, ast.While):
             self.scan_expr(stmt.test, state)
             self.scan_block(stmt.body, dict(state))
             self.scan_block(stmt.orelse, dict(state))
+            self._merge_rebindings(state, stmt.body, stmt.orelse)
             return
         if isinstance(stmt, ast.If):
             self.scan_expr(stmt.test, state)
             self.scan_block(stmt.body, dict(state))
             self.scan_block(stmt.orelse, dict(state))
+            self._merge_rebindings(state, stmt.body, stmt.orelse)
             return
         if isinstance(stmt, ast.Try):
             self.scan_block(stmt.body, dict(state))
@@ -218,6 +255,9 @@ class _KeyReuseScanner:
                 self.scan_block(h.body, dict(state))
             self.scan_block(stmt.orelse, dict(state))
             self.scan_block(stmt.finalbody, dict(state))
+            self._merge_rebindings(state, stmt.body, stmt.orelse,
+                                   stmt.finalbody,
+                                   *[h.body for h in stmt.handlers])
             return
         if isinstance(stmt, (ast.With, ast.AsyncWith)):
             for item in stmt.items:
@@ -228,6 +268,13 @@ class _KeyReuseScanner:
         for child in ast.iter_child_nodes(stmt):
             if isinstance(child, ast.expr):
                 self.scan_expr(child, state)
+
+    def _merge_rebindings(self, state, *blocks):
+        """At a branch merge, reset names any branch re-bound (a refreshed
+        ``key`` after ``key, sub = split(key)`` inside the branch is fresh)."""
+        for block in blocks:
+            for name in _bound_names(block):
+                state.pop(name, None)
 
     def scan_expr(self, expr, state):
         # depth-first, left-to-right: source order within one expression
@@ -597,6 +644,9 @@ def _chain_has_rename(node: ast.AST) -> bool:
     return False
 
 
+_PATHLIB_WRITERS = {"write_text", "write_bytes"}
+
+
 def check_jl007_non_atomic_write(tree, path, source_lines):
     """JL007 — direct writes on durability-critical paths.
 
@@ -604,27 +654,54 @@ def check_jl007_non_atomic_write(tree, path, source_lines):
     resumed run happily parses. On the paths whose whole job is surviving
     kill -9 (``launch/``, ``parallel/journal.py``, ``train/checkpoint.py``),
     every durable artifact must go tmp-file -> fsync -> ``os.replace``.
-    Flags ``open(..., 'w'/'a'/'x')`` and ``np.save``/``np.savez`` unless
-    some lexically-enclosing function also calls ``os.rename``/``os.replace``
-    (the atomic-commit shape — e.g. ``checkpoint.save`` writes into a tmp
-    dir it renames at the end).
+    Flags ``open(..., 'w'/'a'/'x')``, ``np.save``/``np.savez``, pathlib's
+    ``Path.write_text``/``Path.write_bytes`` (a whole-file write with no
+    commit point at all), and ``json.dump(obj, open(...))`` (anchored on the
+    dump — the torn artifact is the JSON) unless some lexically-enclosing
+    function also calls ``os.rename``/``os.replace`` (the atomic-commit
+    shape — e.g. ``checkpoint.save`` writes into a tmp dir it renames at
+    the end).
     """
     if not _in_durable_path(path):
         return []
+    # open(...)-write calls inlined as a json.dump file argument: flag the
+    # dump (one finding per site, anchored where the torn artifact is made)
+    dump_inline_opens: set[int] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and dotted(node.func) == "json.dump":
+            for a in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(a, ast.Call) and _writes_mode(a):
+                    dump_inline_opens.add(id(a))
     out = []
     for node in ast.walk(tree):
         if not isinstance(node, ast.Call):
             continue
         mode = _writes_mode(node)
         d = dotted(node.func)
+        lp = last_part(node.func)
         is_npsave = d in ("np.save", "np.savez", "np.savez_compressed",
                           "numpy.save", "numpy.savez",
                           "numpy.savez_compressed")
-        if mode is None and not is_npsave:
+        is_pathlib_write = (isinstance(node.func, ast.Attribute)
+                            and lp in _PATHLIB_WRITERS)
+        is_dump_on_open = (d == "json.dump" and any(
+            isinstance(a, ast.Call) and id(a) in dump_inline_opens
+            for a in list(node.args) + [kw.value for kw in node.keywords]))
+        if mode is not None and id(node) in dump_inline_opens:
+            continue  # reported at the enclosing json.dump instead
+        if mode is None and not (is_npsave or is_pathlib_write
+                                 or is_dump_on_open):
             continue
         if _chain_has_rename(node):
             continue
-        what = f"open(..., {mode!r})" if mode else d
+        if is_dump_on_open:
+            what = "json.dump(..., open(...))"
+        elif mode is not None:
+            what = f"open(..., {mode!r})"
+        elif is_pathlib_write:
+            what = f".{lp}(...)"
+        else:
+            what = d
         out.append(_mk(
             "JL007", path, node,
             f"direct `{what}` on a durability-critical path — a preemption "
@@ -662,6 +739,7 @@ RULE_SUMMARIES = {
              "crossing jit/shard_map (PR 5 PackedWeights)",
     "JL006": "jit static hygiene: non-literal defaults on jitted fns; "
              "jit(f)(x) fresh-wrapper-per-call",
-    "JL007": "non-atomic write: open('w')/np.save on durable paths without "
-             "an enclosing os.replace commit (PR 6)",
+    "JL007": "non-atomic write: open('w')/np.save/Path.write_text|bytes/"
+             "json.dump(..., open(...)) on durable paths without an "
+             "enclosing os.replace commit (PR 6)",
 }

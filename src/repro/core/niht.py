@@ -300,6 +300,7 @@ def _solver_setup(
             # benchmarks disable the trace so the loop is pure algorithm traffic)
             # np-built so the intentional NaN marker is a transfer,
             # not an op that trips jax_debug_nans (see analysis.sanitize)
+            # jaxlint: allow=JX104 -- trace-time np constant: XLA folds the device_put and hoists it out of the loop
             rq = rt = jnp.asarray(np.full(X.shape[0], np.nan, np.float32))
         return X_new, (rq, rt, mu, changed, n_bt)
 
@@ -373,46 +374,52 @@ def _qniht_core(
         # Trace rows are written into preallocated buffers as iterations
         # execute; the stationary tail is broadcast-filled after the loop.
         def body(st):
-            k, X, done, streak, prev, bufs = st
-            X_c, outs_c = iteration(X, k)
             if exit_tol == 0.0:
                 # a done row recomputes itself identically (fixed point) —
                 # no masking needed, and the no-early-exit output is
-                # reproduced bit-for-bit.
-                X_new, outs = X_c, outs_c
-            else:
-                # frozen rows stop updating; their trace re-emits the last
-                # live row (deterministic + row-local → grouping-invariant)
-                X_new = jnp.where(done[:, None], X, X_c)
-                outs = jax.tree_util.tree_map(
-                    lambda p, n_: jnp.where(done, p, n_), prev, outs_c)
+                # reproduced bit-for-bit. The lossless carry has no streak
+                # component: streak feeds only the stall heuristic below, and
+                # carrying it here hauls dead bytes every iteration (JX103).
+                k, X, done, prev, bufs = st
+                X_new, outs = iteration(X, k)
+                bufs = jax.tree_util.tree_map(
+                    lambda buf, o: jax.lax.dynamic_update_index_in_dim(buf, o, k, 0),
+                    bufs, outs)
+                newly = jnp.all(X_new == X, axis=-1)
+                return k + 1, X_new, done | newly, outs, bufs
+            k, X, done, streak, prev, bufs = st
+            X_c, outs_c = iteration(X, k)
+            # frozen rows stop updating; their trace re-emits the last
+            # live row (deterministic + row-local → grouping-invariant)
+            X_new = jnp.where(done[:, None], X, X_c)
+            outs = jax.tree_util.tree_map(
+                lambda p, n_: jnp.where(done, p, n_), prev, outs_c)
             bufs = jax.tree_util.tree_map(
                 lambda buf, o: jax.lax.dynamic_update_index_in_dim(buf, o, k, 0),
                 bufs, outs)
-            if exit_tol == 0.0:
-                newly = jnp.all(X_new == X, axis=-1)
-            else:
-                # one sub-tol step can be a backtracking artefact (µ shrunk to
-                # a tiny accepted step), not a stall — require _EXIT_PATIENCE
-                # consecutive sub-tol updates before freezing the row
-                small = _rows_sqnorm(X_new - X) <= (
-                    exit_tol * exit_tol) * _rows_sqnorm(X_new)
-                streak = jnp.where(small, streak + 1, 0)
-                newly = streak >= _EXIT_PATIENCE
+            # one sub-tol step can be a backtracking artefact (µ shrunk to
+            # a tiny accepted step), not a stall — require _EXIT_PATIENCE
+            # consecutive sub-tol updates before freezing the row
+            small = _rows_sqnorm(X_new - X) <= (
+                exit_tol * exit_tol) * _rows_sqnorm(X_new)
+            streak = jnp.where(small, streak + 1, 0)
+            newly = streak >= _EXIT_PATIENCE
             return k + 1, X_new, done | newly, streak, outs, bufs
 
         def cond(st):
-            k, _, done, _, _, _ = st
-            return (k < n_iters) & ~jnp.all(done)
+            return (st[0] < n_iters) & ~jnp.all(st[2])
 
         nanrow = jnp.asarray(np.full(B, np.nan, np.float32))  # np-built: see sanitize note above
         prev0 = (nanrow, nanrow, jnp.zeros((B,), jnp.float32),
                  jnp.zeros((B,), bool), jnp.zeros((B,), jnp.int32))
         bufs0 = jax.tree_util.tree_map(
             lambda o: jnp.zeros((n_iters,) + o.shape, o.dtype), prev0)
-        k_end, X_final, _, _, last, bufs = jax.lax.while_loop(
-            cond, body, (jnp.asarray(0, jnp.int32), X0, jnp.zeros((B,), bool),
-                         jnp.zeros((B,), jnp.int32), prev0, bufs0))
+        init = (jnp.asarray(0, jnp.int32), X0, jnp.zeros((B,), bool),
+                jnp.zeros((B,), jnp.int32), prev0, bufs0)
+        if exit_tol == 0.0:
+            init = init[:3] + init[4:]
+        out = jax.lax.while_loop(cond, body, init)
+        k_end, X_final, last, bufs = out[0], out[1], out[-2], out[-1]
         # iterations k_end.. would all re-emit the stationary trace row (every
         # row is at a fixed point / frozen), so fill instead of compute
         tail = jnp.arange(n_iters)[:, None] >= k_end

@@ -16,3 +16,23 @@ def branchy(key, flat):
     else:
         amps = jax.random.normal(key, (8,))
     return amps
+
+
+def rebind_in_branch(key, warm):
+    # `key` re-bound by the split inside the branch is FRESH after the merge:
+    # the second draw consumes the new key, not the one `a` used
+    a = jax.random.normal(key, (8,))
+    if warm:
+        key, sub = jax.random.split(key)
+    b = jax.random.normal(key, (8,))
+    return a, b
+
+
+def rebind_in_loop(key, chunks):
+    # same shape through a loop body: each refresh resets the draw counter
+    total = 0.0
+    for c in chunks:
+        total = total + jax.random.normal(key, (c,)).sum()
+        key, _ = jax.random.split(key)
+    tail = jax.random.uniform(key, (4,))
+    return total, tail

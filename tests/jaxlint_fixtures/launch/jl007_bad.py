@@ -11,3 +11,18 @@ def checkpoint(path, state, meta):
         json.dump(meta, f)
     # BUG: torn .npy with no commit marker
     np.save(path + ".npy", state)
+
+
+def save_manifest(path, manifest):
+    # BUG: whole-file pathlib write, no tmp+replace commit
+    path.write_text(json.dumps(manifest))
+
+
+def save_blob(path, blob):
+    # BUG: same torn-file shape through write_bytes
+    path.write_bytes(blob)
+
+
+def save_meta(path, meta):
+    # BUG: json.dump straight into an inline open — torn JSON, leaked handle
+    json.dump(meta, open(path, "w"))

