@@ -25,6 +25,13 @@
 #                          # on a tiny serving shape and fails if the ratio
 #                          # regresses past BENCH_thresholds.json (pinned
 #                          # deliberately; see docs/performance.md)
+#   scripts/ci.sh sched    # continuous-batching smoke: the bursty
+#                          # serve-continuous-smoke trace through --scheduler
+#                          # continuous (with --verify: every answer bitwise
+#                          # equal to its standalone solve) AND --scheduler
+#                          # lockstep; asserts both metrics JSONs carry the
+#                          # latency observability fields (p50/p99, items/sec,
+#                          # slot occupancy) — see docs/serving.md
 #
 # Extra args go straight to pytest: scripts/ci.sh fast -k mri
 set -euo pipefail
@@ -88,5 +95,26 @@ case "$mode" in
     ;;
   docs) exec python scripts/check_docs.py "$@" ;;
   perf) exec python -m benchmarks.kernels_micro --perf-smoke ;;
-  *) echo "usage: scripts/ci.sh [fast|full|analyze|lint|docs|perf] [pytest args...]" >&2; exit 2 ;;
+  sched)
+    tmp="$(mktemp -d)"; trap 'rm -rf "$tmp"' EXIT
+    # continuous with the differential contract enforced end to end
+    python -m repro.launch.serve --config serve-continuous-smoke \
+      --scheduler continuous --verify --metrics-json "$tmp/continuous.json"
+    # lockstep baseline: same engine, refill barrier
+    python -m repro.launch.serve --config serve-continuous-smoke \
+      --scheduler lockstep --metrics-json "$tmp/lockstep.json"
+    python - "$tmp" <<'PY'
+import json, sys
+for policy in ("continuous", "lockstep"):
+    with open(f"{sys.argv[1]}/{policy}.json") as f:
+        m = json.load(f)
+    for field in ("latency_p50_s", "latency_p99_s", "items_per_s",
+                  "slot_occupancy", "queue_wait_ticks_mean"):
+        assert m.get(field) is not None, f"{policy}: missing {field}"
+    assert m["scheduler"] == policy and m["completed"] == m["requests"]
+print("[sched] smoke ok: parity verified, latency fields present in both "
+      "metrics JSONs")
+PY
+    ;;
+  *) echo "usage: scripts/ci.sh [fast|full|analyze|lint|docs|perf|sched] [pytest args...]" >&2; exit 2 ;;
 esac

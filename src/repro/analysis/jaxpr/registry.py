@@ -126,6 +126,26 @@ def _segment_spec(**statics) -> TraceSpec:
         args=(phi, state), anchor=anchor_of(solver_segment))
 
 
+def _scheduler_segment_spec() -> TraceSpec:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.niht import solver_init
+    from repro.parallel.scheduler import segment_step
+
+    phi = _sds((M, N), jnp.float32)
+    # the continuous scheduler's hot loop: k-reset segment over the slot
+    # table, early_exit + freeze tolerance (its construction always sets
+    # both — done flags drive the harvest, stationarity justifies the reset)
+    kw = dict(s=S, early_exit=True, exit_tol=1e-5)
+    state = jax.eval_shape(
+        partial(solver_init, n_iters=N_ITERS, **kw),
+        phi, _sds((B, M), jnp.float32))
+    return TraceSpec(
+        fn=partial(segment_step, n_steps=2, **kw),
+        args=(phi, state), anchor=anchor_of(segment_step))
+
+
 def _toy_phi():
     """Deterministic non-degenerate (M, N) f32 — packing needs real values."""
     import numpy as np
@@ -248,7 +268,8 @@ def _batch_server_spec() -> TraceSpec:
 def build_registry() -> list[EntryPoint]:
     """The full entry-point registry: every backend × granularity the
     solver dispatches over, each fused-kernel formulation, every
-    LinearOperator, the segmented solver, and the serving chunk fn."""
+    LinearOperator, the segmented solver, the continuous scheduler's segment
+    step, and the serving chunk fn."""
     E = EntryPoint
     return [
         # --- one-shot solver: backends × requantize × granularity ---------
@@ -287,6 +308,7 @@ def build_registry() -> list[EntryPoint]:
         E("solver_segment.packed",
           lambda: _segment_spec(bits_phi=8, bits_y=8, requantize="fixed",
                                 backend="packed")),
+        E("scheduler.segment_step", _scheduler_segment_spec),
         # --- fused packed kernels: every static dispatch path --------------
         E("qmm_fused.matvec", lambda: _qmm_fused_spec("matvec")),
         E("qmm_fused.batch_minor", lambda: _qmm_fused_spec("batch_minor")),

@@ -50,6 +50,60 @@ class ServeConfig:
         return max(1, int(round(self.chunk * self.hard_fraction)))
 
 
+@dataclasses.dataclass(frozen=True)
+class ContinuousServeConfig:
+    """Bursty single-request arrival workload for the continuous-batching
+    scheduler (:mod:`repro.parallel.scheduler`).
+
+    Where :class:`ServeConfig` streams pre-cut ``(B, M)`` chunks, this models
+    the request-level reality underneath: individual observations arriving on
+    a Poisson clock with periodic bursts, a mix of hard (slow-converging
+    compressible, low SNR) and easy rows, and ``priority_classes`` priority
+    levels assigned round-robin (class 0 most urgent). The hard/easy mix is
+    what makes horizons *heterogeneous* — easy requests freeze after a few
+    segments while hard ones run the full ``n_iters`` — which is exactly the
+    regime where mid-flight refill beats lockstep chunking
+    (``benchmarks/fig_batch_scaling.py``).
+
+    ``deadline_slack`` (per priority class, optional): class ``p`` requests
+    get ``deadline = arrival_tick + deadline_slack * (p + 1)``; ``None``
+    disables deadlines (the benchmark workload, so continuous and lockstep
+    answer the identical request set and quality comparisons are apples to
+    apples — deadline shedding is exercised by the property tests).
+    """
+
+    name: str
+    m: int = 512
+    n: int = 1024
+    s: int = 64
+    n_requests: int = 64         # total arrivals in the trace
+    slots: int = 8               # rows of the live SolverState
+    seg_len: int = 8             # iterations per segment (refill granularity)
+    n_iters: int = 96            # horizon, sized for the hard requests
+    queue_depth: int = 64
+    age_every: int = 8           # aging window (anti-starvation); 0 disables
+    arrival_rate: float = 1.5    # mean Poisson arrivals per tick
+    burst_every: int = 12        # every k-th tick also lands a burst ...
+    burst_size: int = 6          # ... of this many extra requests
+    priority_classes: int = 3
+    deadline_slack: Optional[int] = None
+    # per-request horizon (iteration budget): easy requests carry this,
+    # hard ones the full n_iters — the heterogeneous-horizon regime where
+    # mid-flight refill pays (None → every request gets n_iters). Keep both
+    # multiples of seg_len so the horizon clamp never shortens a segment.
+    n_iters_easy: Optional[int] = 24
+    snr_easy_db: float = 30.0
+    snr_hard_db: float = 15.0
+    hard_decay: float = 0.85
+    hard_fraction: float = 1.0 / 8.0
+    exit_tol: float = 1e-5
+    bits_phi: Optional[int] = None
+    bits_y: Optional[int] = None
+    backend: str = "dense"
+    seed: int = 0
+    sanitize: bool = False
+
+
 CONFIG = ServeConfig(name="serve-gaussian")
 
 # Packed-operator serving: Φ̂ packed once at server construction, every chunk
@@ -74,3 +128,27 @@ FAULT = ServeConfig(name="serve-gaussian-fault", m=48, n=96, s=5, chunk=8,
 FAULT_PACKED = ServeConfig(name="serve-gaussian-fault-packed", m=48, n=96, s=5,
                            chunk=8, n_chunks=5, n_iters=30, bits_phi=4,
                            bits_y=8, backend="packed", sanitize=True)
+
+# Continuous-batching benchmark workload: 64 heterogeneous requests against
+# an 8-slot table. seg_len | n_iters keeps the horizon clamp from ever
+# shortening a segment → one compiled executable for the whole run.
+# exit_tol=0 (the exact bitwise-fixed-point rule) on purpose: the 1e-5 freeze
+# would stop the hard rows almost as early as the easy ones, hiding the
+# heterogeneous-horizon regime this benchmark exists to measure; arrival_rate
+# 2/tick keeps a queue backlog so throughput is service-limited, not
+# arrival-limited.
+CONTINUOUS = ContinuousServeConfig(name="serve-continuous", exit_tol=0.0,
+                                   arrival_rate=2.0)
+
+CONTINUOUS_PACKED = ContinuousServeConfig(name="serve-continuous-packed",
+                                          exit_tol=0.0, arrival_rate=2.0,
+                                          bits_phi=4, bits_y=8,
+                                          backend="packed")
+
+# CI-sized: small enough for the sched smoke, still heterogeneous enough
+# that continuous visibly out-admits lockstep.
+CONTINUOUS_SMOKE = ContinuousServeConfig(name="serve-continuous-smoke", m=64,
+                                         n=128, s=8, n_requests=20, slots=4,
+                                         seg_len=8, n_iters=40,
+                                         n_iters_easy=16, arrival_rate=1.0,
+                                         burst_every=6, burst_size=3)

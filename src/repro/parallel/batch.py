@@ -233,6 +233,72 @@ def strip_state(state: SolverState, b: int) -> SolverState:
     )
 
 
+def refill_rows(state: SolverState, rows, Y_rows, live) -> SolverState:
+    """Splice fresh observations into ``rows`` of a :class:`SolverState`,
+    leaving every other row **bitwise untouched** — the continuous-batching
+    refill primitive (:mod:`repro.parallel.scheduler`).
+
+    ``rows`` is a sequence of distinct row indices, ``Y_rows`` the matching
+    ``(len(rows), M)`` observation block, and ``live`` a boolean per row:
+    ``True`` re-initializes the row for a new request (``X = 0``, ``done =
+    False``, fresh streak/trace), ``False`` turns it into a *pad* row
+    (``Y`` must be zero; ``done = True`` makes it a bitwise fixed point the
+    segment loop never waits on — same free-rider argument as
+    :func:`pad_state`).
+
+    A spliced row matches :func:`repro.core.niht.solver_init`'s row-0 state
+    except ``last``'s residual markers, which are zeroed rather than NaN so a
+    spliced state stays NaN-free under ``repro.analysis.sanitize`` (the NaN
+    marker is a cosmetic "not recorded yet" value; it never feeds ``X``).
+
+    Purity contract: the functional ``.at[rows]`` scatters rewrite ONLY the
+    targeted rows; every other row of every leaf — ``X``, ``done``,
+    ``streak``, ``last``, the trace *columns*, ``Y`` — keeps its exact bits
+    (pinned by tests/test_scheduler.py::TestSplicePurity).
+    """
+    rows = [int(r) for r in rows]
+    if len(set(rows)) != len(rows):
+        raise ValueError(f"refill_rows needs distinct rows, got {rows}")
+    b = state.Y.shape[0]
+    if any(r < 0 or r >= b for r in rows):
+        raise ValueError(f"rows {rows} out of range for B={b}")
+    Y_rows = jnp.asarray(Y_rows, state.Y.dtype)
+    if Y_rows.shape != (len(rows), state.Y.shape[1]):
+        raise ValueError(
+            f"Y_rows shape {Y_rows.shape} != {(len(rows), state.Y.shape[1])}")
+    live = tuple(bool(v) for v in live)
+    if len(live) != len(rows):
+        raise ValueError(f"live must be one flag per row, got {len(live)}")
+    return _splice_rows(state, Y_rows, rows=tuple(rows), live=live)
+
+
+@partial(jax.jit, static_argnames=("rows", "live"))
+def _splice_rows(state: SolverState, Y_rows, *, rows, live) -> SolverState:
+    # rows/live are static: the refill loop revisits a small set of splice
+    # patterns (deterministic trace ⇒ deterministic patterns), and a fused
+    # scatter program per pattern keeps the per-tick cost off the eager
+    # dispatch path
+    idx = np.asarray(rows, np.int32)
+    live_v = jnp.asarray(np.asarray(live, bool))
+
+    def zero_rows(a):
+        return a.at[idx].set(jnp.zeros((len(rows),) + a.shape[1:], a.dtype))
+
+    return SolverState(
+        k=state.k,
+        X=zero_rows(state.X),
+        done=state.done.at[idx].set(~live_v),
+        streak=zero_rows(state.streak),
+        last=jax.tree_util.tree_map(zero_rows, state.last),
+        trace=jax.tree_util.tree_map(
+            lambda t: t.at[:, idx].set(
+                jnp.zeros(t.shape[:1] + (len(rows),) + t.shape[2:], t.dtype)),
+            state.trace),
+        Y=state.Y.at[idx].set(Y_rows),
+        key=state.key,
+    )
+
+
 def state_shardings(mesh: Mesh) -> SolverState:
     """NamedSharding tree placing a (padded) :class:`SolverState` on ``mesh``
     per ``_SEG_SPECS`` — the elastic re-placement step: a state computed on
@@ -371,31 +437,45 @@ class BatchServer:
             statics.update(bits_phi=None, backend="dense")
         self._statics = statics
 
-    def submit(self, Y: jax.Array, key: Optional[jax.Array] = None) -> IHTResult:
+    def submit(self, Y: jax.Array, key: Optional[jax.Array] = None,
+               row_mask=None) -> IHTResult:
         """Solve one (B, M) chunk; returns the usual :class:`IHTResult`.
 
+        ``row_mask`` (optional (B,) bool) marks which rows are live user
+        requests. The historical contract was all-rows-live; callers that pad
+        a partial final chunk (or splice harvested rows) pass the mask so
+        padded rows are never journaled as user results: masked rows of ``Y``
+        are zeroed before the solve (an all-zero row fixes at ``x = 0``), the
+        journal stores only the valid rows of ``x``, and a drained chunk
+        reconstructs the full shape with zeros at the invalid rows —
+        bit-identical to the live solve.
+
         With a journal: the chunk index is this server's submission count, the
-        inputs are journaled before the solve and the result after. Under
-        ``resume=True`` a chunk whose result is already journaled is drained
-        from disk instead of solved (see the class docstring).
+        inputs (mask included) are journaled before the solve and the result
+        after. Under ``resume=True`` a chunk whose result is already journaled
+        is drained from disk instead of solved (see the class docstring).
         """
         if Y.ndim != 2:
             raise ValueError(f"BatchServer.submit expects (B, M) chunks, got {Y.shape}")
+        mask = ChunkJournal._norm_mask(row_mask, Y.shape[0])
+        if mask is not None:
+            Y = jnp.where(jnp.asarray(mask, bool)[:, None], Y,
+                          jnp.zeros_like(Y))
         idx = self.n_chunks
         self.n_chunks += 1
-        self.n_items += Y.shape[0]
+        self.n_items += Y.shape[0] if mask is None else int(mask.sum())
         k = key if key is not None else self.key
         if self.journal is not None:
             if self._resume and self.journal.is_complete(idx):
-                self.journal.verify_submit(idx, Y, k)
+                self.journal.verify_submit(idx, Y, k, mask)
                 self.n_drained += 1
-                return IHTResult(x=jnp.asarray(self.journal.load_result(idx)),
+                return IHTResult(x=jnp.asarray(self.journal.load_result_full(idx)),
                                  trace=self._placeholder_trace(Y.shape[0]))
-            self.journal.record_submit(idx, Y, k)
+            self.journal.record_submit(idx, Y, k, mask)
         self._shapes.add(Y.shape)
         res = sharded_qniht_run(self.phi, Y, k, mesh=self.mesh, **self._statics)
         if self.journal is not None:
-            self.journal.record_result(idx, res.x)
+            self.journal.record_result(idx, res.x, mask)
         return res
 
     def _placeholder_trace(self, b: int) -> IHTTrace:

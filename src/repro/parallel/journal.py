@@ -9,6 +9,7 @@ Layout (one directory per serve run)::
 
     <dir>/chunk_000003.y.npy      # submitted observations (written pre-solve)
     <dir>/chunk_000003.key.npy    # the chunk's PRNG key (raw uint32 data)
+    <dir>/chunk_000003.mask.npy   # row-validity mask (absent = all rows live)
     <dir>/chunk_000003.meta.json  # shape/dtype + status=submitted (fsync'd)
     <dir>/chunk_000003.x.npy      # solved iterate (atomic tmp -> rename)
     <dir>/chunk_000003.done.json  # completion marker (fsync'd, written last)
@@ -80,34 +81,76 @@ class ChunkJournal:
     def _p(self, index: int, suffix: str) -> str:
         return os.path.join(self.directory, f"chunk_{index:06d}.{suffix}")
 
+    @staticmethod
+    def _norm_mask(row_mask, b: int):
+        """Canonical row-validity mask: None ⇔ every row valid (the
+        historical all-rows-live contract), else a (B,) bool array with at
+        least one False. Journals written before masks existed load as
+        all-valid, and an explicitly all-true mask journals identically to
+        ``None`` — one on-disk spelling per meaning."""
+        if row_mask is None:
+            return None
+        m = np.asarray(row_mask, bool)
+        if m.shape != (b,):
+            raise ValueError(
+                f"row_mask shape {m.shape} != ({b},): one flag per chunk row")
+        return None if bool(m.all()) else m
+
     # -- write side -------------------------------------------------------
-    def record_submit(self, index: int, Y, key) -> None:
+    def record_submit(self, index: int, Y, key, row_mask=None,
+                      extra: Optional[dict] = None) -> None:
         """WAL entry: journal a chunk's inputs before its solve starts.
 
+        ``row_mask`` marks which rows are live user requests (None = all —
+        the historical contract); padded/harvested rows are journaled as
+        *invalid* so they are never replayed as user results. ``extra`` is an
+        optional dict of identity metadata (request id, priority, deadline —
+        the continuous scheduler journals these) merged into ``meta.json``.
+
         Idempotent on replay: an existing record for ``index`` is verified
-        against the new inputs (bitwise) instead of rewritten — a mismatch
-        means the re-presented stream is not the journaled one, and raises.
+        against the new inputs (bitwise, mask included) instead of rewritten —
+        a mismatch means the re-presented stream is not the journaled one,
+        and raises.
         """
-        if os.path.exists(self._p(index, "meta.json")):
-            self.verify_submit(index, Y, key)
-            return
         Y = np.asarray(Y)
+        if os.path.exists(self._p(index, "meta.json")):
+            self.verify_submit(index, Y, key, row_mask)
+            return
         k = np.asarray(key)
+        mask = self._norm_mask(row_mask, Y.shape[0])
         # jaxlint: allow=JL007 -- write-ahead inputs, not a commit point:
         np.save(self._p(index, "y.npy"), Y)
-        # the fsynced meta.json below is the commit; a torn y/key file with
-        # no meta just demotes this chunk back to never-submitted
+        # the fsynced meta.json below is the commit; a torn y/key/mask file
+        # with no meta just demotes this chunk back to never-submitted
         # jaxlint: allow=JL007 -- see above, meta.json is the commit point
         np.save(self._p(index, "key.npy"), k)
+        if mask is not None:
+            # jaxlint: allow=JL007 -- see above, meta.json is the commit point
+            np.save(self._p(index, "mask.npy"), mask)
         write_json_durable(self._p(index, "meta.json"), {
             "index": index, "status": "submitted",
             "y_shape": list(Y.shape), "y_dtype": str(Y.dtype),
             "key_dtype": str(k.dtype),
+            "rows_valid": int(mask.sum()) if mask is not None else Y.shape[0],
+            **(extra or {}),
         })
 
-    def record_result(self, index: int, x) -> None:
-        """Publish a chunk's result: atomic x write, then the done marker."""
+    def record_result(self, index: int, x, row_mask=None) -> None:
+        """Publish a chunk's result: atomic x write, then the done marker.
+
+        With a ``row_mask``, ONLY the valid rows are journaled (``x.npy``
+        holds the compacted ``x[mask]`` block): a padded or harvested row is
+        scratch space, not a user result, and must never be replayable as
+        one. ``load_result_full`` reconstructs the full chunk shape with
+        zeros at invalid rows — bit-identical to the live solve, whose
+        masked rows are zeroed before the solve (``y = 0`` rows fix at
+        ``x = 0``).
+        """
         x = np.asarray(x)
+        mask = self._norm_mask(row_mask, x.shape[0])
+        b_total = x.shape[0]
+        if mask is not None:
+            x = x[mask]
         tmp = self._p(index, "x.npy.tmp")
         with open(tmp, "wb") as f:  # np.save(path) would append another .npy
             np.save(f, x)
@@ -117,6 +160,7 @@ class ChunkJournal:
         write_json_durable(self._p(index, "done.json"), {
             "index": index, "status": "complete",
             "x_shape": list(x.shape), "x_dtype": str(x.dtype),
+            "b_total": b_total, "rows_valid": int(x.shape[0]),
         })
 
     # -- read side --------------------------------------------------------
@@ -151,13 +195,35 @@ class ChunkJournal:
         return (np.load(self._p(index, "y.npy")),
                 np.load(self._p(index, "key.npy")))
 
+    def load_mask(self, index: int):
+        """The journaled row-validity mask, or None (= every row valid —
+        including journals written before masks existed)."""
+        p = self._p(index, "mask.npy")
+        return np.load(p) if os.path.exists(p) else None
+
     def load_result(self, index: int):
+        """The journaled result bytes as stored: the full chunk when no mask
+        was recorded, else only the valid rows (compacted)."""
         return np.load(self._p(index, "x.npy"))
 
-    def verify_submit(self, index: int, Y, key) -> None:
-        """Raise unless the journaled inputs for ``index`` equal (Y, key)
-        bitwise — draining a result for DIFFERENT inputs would silently serve
-        the wrong answer."""
+    def load_result_full(self, index: int):
+        """The result at full chunk shape: invalid rows are zeros, exactly as
+        the live solve leaves them (masked ``y`` rows are zeroed pre-solve
+        and ``x = 0`` is their fixed point)."""
+        x = np.load(self._p(index, "x.npy"))
+        mask = self.load_mask(index)
+        if mask is None:
+            return x
+        with open(self._p(index, "done.json")) as f:
+            b_total = json.load(f)["b_total"]
+        full = np.zeros((b_total,) + x.shape[1:], x.dtype)
+        full[mask] = x
+        return full
+
+    def verify_submit(self, index: int, Y, key, row_mask=None) -> None:
+        """Raise unless the journaled inputs for ``index`` equal (Y, key,
+        row_mask) bitwise — draining a result for DIFFERENT inputs would
+        silently serve the wrong answer."""
         Yj, kj = self.load_submit(index)
         if Yj.shape != tuple(np.asarray(Y).shape) or not np.array_equal(
                 Yj, np.asarray(Y)):
@@ -168,3 +234,11 @@ class ChunkJournal:
             raise ValueError(
                 f"journal mismatch at chunk {index}: the re-presented key "
                 "differs from the journaled one")
+        mj = self.load_mask(index)
+        mask = self._norm_mask(row_mask, Yj.shape[0])
+        same = (mj is None and mask is None) or (
+            mj is not None and mask is not None and np.array_equal(mj, mask))
+        if not same:
+            raise ValueError(
+                f"journal mismatch at chunk {index}: the re-presented row "
+                "validity mask differs from the journaled one")

@@ -1,0 +1,564 @@
+"""Continuous batching for the serving layer: admission queue + slot refill.
+
+:class:`repro.parallel.batch.BatchServer` is a *lockstep* driver: it solves
+pre-cut ``(B, M)`` chunks to a uniform horizon, so one slow row holds ``B-1``
+finished slots hostage. NIHT's per-iteration structure is exactly what makes
+continuous batching possible for an iterative solver: rows are independent
+between iterations (Blumensath & Davies, arXiv:0805.0510 — all cross-row
+structure is the shared Φ̂ stream), so an early-exited row can be *harvested*
+at any segment boundary and its slot *refilled* from a queue, the way LLM
+serving systems refill sequence slots at token boundaries.
+
+The moving parts:
+
+* :class:`Request` — one observation vector plus scheduling metadata
+  (priority class, deadline, request id).
+* :class:`AdmissionQueue` — bounded depth with shed-on-overflow, strict
+  priority order with FIFO inside a class, and an *aging* rule
+  (``age_every``) that promotes long-waiting requests one class per window so
+  sustained high-priority load cannot starve the low classes.
+* :class:`ContinuousScheduler` — the refill loop. It owns a live
+  :class:`~repro.core.niht.SolverState` of ``slots`` rows and repeatedly:
+  harvests rows whose ``done`` flag is set (or whose horizon is reached),
+  splices queued requests into the freed rows
+  (:func:`repro.parallel.batch.refill_rows` — every untouched row keeps its
+  exact bits), and advances the whole table one *segment* of up to
+  ``seg_len`` iterations via :func:`segment_step` (the same
+  ``solver_segment``/``sharded_segment_run`` engine the preemption-safe
+  driver checkpoints, so one jitted executable serves the entire run).
+
+Time is **logical**: one tick = one segment. Every scheduling decision —
+admission, shed, refill order — is a pure function of (arrival trace,
+config), pinned by the determinism property test; wall-clock enters only the
+latency *observability* fields of each :class:`RequestReport`.
+
+Bit-identity contract (the differential suite's anchor): every request's
+answer equals its **standalone solve at the same slot width** —
+``qniht_batch`` over ``[y, 0, ..., 0]`` of ``slots`` rows with the same key
+and solver config (:meth:`ContinuousScheduler.reference_solve`) — regardless
+of arrival order, co-tenants, priorities, or refill timing. Two ingredients
+make that hold:
+
+* **stationary operators** — the scheduler requires the ``early_exit``
+  precondition (``requantize="fixed"``, packed, matrix-free, or full
+  precision), so the iteration map does not depend on the global index and
+  the segment engine can run every row at its own logical age with ``k``
+  reset per segment;
+* **fixed-width row independence** — XLA's batched ops at a fixed ``(slots,
+  ·)`` shape compute row ``b`` from row ``b``'s data alone, so co-tenant
+  contents and row position never perturb a result (pinned empirically by
+  the fuzzed differential suite; note the reference is deliberately *not*
+  the ``B = 1`` solve — XLA lowers a one-row batch through a different gemv
+  path whose accumulation differs in the last ulp).
+
+Per-request reporting: ``iters_used`` (segment-granular: ages advance a
+whole segment at a time, so a row that hit its fixed point mid-segment
+reports the segment boundary), queue wait in ticks, and wall-clock
+enqueue→start→finish latency. See ``docs/serving.md``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.niht import _validate, qniht_batch, solver_init, solver_segment
+from repro.core.operators import PackedStreamingOperator
+from repro.parallel.batch import make_batch_mesh, refill_rows, sharded_segment_run
+from repro.parallel.journal import ChunkJournal
+from repro.quant.formats import as_granularity
+
+__all__ = [
+    "AdmissionQueue",
+    "ContinuousScheduler",
+    "Request",
+    "RequestReport",
+    "segment_step",
+]
+
+# Request terminal/lifecycle states. String values land in metrics JSON.
+QUEUED = "queued"
+RUNNING = "running"
+DONE = "done"
+SHED_QUEUE_FULL = "shed_queue_full"
+SHED_DEADLINE = "shed_deadline"
+
+
+@dataclasses.dataclass(frozen=True)  # jaxlint: allow=JL005 -- host-side scheduling record; y enters jit only after refill_rows copies it into the state
+class Request:
+    """One recovery request: an (M,) observation plus scheduling metadata.
+
+    ``priority`` is a class index — **lower is more urgent** (0 beats 2).
+    ``deadline`` is the last *tick* at which the request may still be granted
+    a slot; a request still queued when the tick passes it is shed with
+    status ``shed_deadline`` instead of solved late (a request already in a
+    slot always runs to completion). ``None`` = no deadline.
+
+    ``n_iters`` is the request's own horizon (iteration budget), at most the
+    scheduler's ``n_iters`` (which sizes the state buffers); ``None`` = the
+    scheduler's. Heterogeneous horizons are the regime continuous batching
+    exists for: a lockstep table pays every cohort's longest budget, a
+    continuous one refills each row at its own.
+    """
+
+    rid: int
+    y: np.ndarray
+    priority: int = 0
+    deadline: Optional[int] = None
+    n_iters: Optional[int] = None
+
+
+@dataclasses.dataclass  # jaxlint: allow=JL005 -- host-side observability record; x is a harvested numpy copy, never re-enters jit
+class RequestReport:
+    """Lifecycle record of one request — the scheduler's observable output."""
+
+    rid: int
+    status: str
+    priority: int
+    arrival_tick: int
+    start_tick: Optional[int] = None
+    finish_tick: Optional[int] = None
+    #: iterations paid for, segment-granular (see module docstring); None for
+    #: shed or journal-drained requests
+    iters_used: Optional[int] = None
+    queue_wait_ticks: Optional[int] = None
+    x: Optional[np.ndarray] = None
+    drained: bool = False
+    # wall-clock observability (never feeds a scheduling decision)
+    wall_enqueued: Optional[float] = None
+    wall_started: Optional[float] = None
+    wall_finished: Optional[float] = None
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        """Wall-clock enqueue → result latency (None until finished)."""
+        if self.wall_finished is None or self.wall_enqueued is None:
+            return None
+        return self.wall_finished - self.wall_enqueued
+
+
+@dataclasses.dataclass
+class _QueueEntry:
+    seq: int       # global arrival sequence number (FIFO tiebreak)
+    enq_tick: int
+    req: Request
+
+
+class AdmissionQueue:
+    """Bounded priority queue with FIFO classes, aging, and deadline shed.
+
+    Pop order is the minimum of ``(effective_priority, seq)``: strict
+    priority between classes, FIFO inside one. ``effective_priority`` is the
+    request's class minus one per ``age_every`` ticks waited, so under
+    sustained load every request's wait is bounded by roughly
+    ``priority * age_every`` ticks plus one service drain (the no-starvation
+    property test pins a concrete bound); ``age_every=0`` disables aging
+    (strict priorities, starvation possible — benchmark mode).
+
+    Overflow policy: a full queue sheds the *incoming* request unless it is
+    strictly more urgent than the least-urgent queued entry, in which case
+    that entry is evicted instead (ties keep the incumbent — FIFO).
+
+    Every method is a pure function of its arguments and prior calls — no
+    clocks, no randomness — which is what makes scheduler decisions
+    replayable from (seed, arrival trace).
+    """
+
+    def __init__(self, depth: int, age_every: int = 0):
+        if depth < 1:
+            raise ValueError(f"queue depth must be >= 1, got {depth}")
+        if age_every < 0:
+            raise ValueError(f"age_every must be >= 0, got {age_every}")
+        self.depth = depth
+        self.age_every = age_every
+        self.entries: list[_QueueEntry] = []
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def effective_priority(self, entry: _QueueEntry, tick: int) -> int:
+        waited = tick - entry.enq_tick
+        aged = waited // self.age_every if self.age_every else 0
+        return entry.req.priority - aged
+
+    def offer(self, req: Request, tick: int, seq: int):
+        """Try to enqueue; returns ``(admitted, shed_entry)`` where
+        ``shed_entry`` is the evicted incumbent (admitted over it), the
+        rejected incoming entry (not admitted), or None."""
+        entry = _QueueEntry(seq=seq, enq_tick=tick, req=req)
+        if len(self.entries) < self.depth:
+            self.entries.append(entry)
+            return True, None
+        worst = max(self.entries,
+                    key=lambda e: (self.effective_priority(e, tick), e.seq))
+        if req.priority < self.effective_priority(worst, tick):
+            self.entries.remove(worst)
+            self.entries.append(entry)
+            return True, worst
+        return False, entry
+
+    def pop(self, tick: int) -> Optional[_QueueEntry]:
+        if not self.entries:
+            return None
+        best = min(self.entries,
+                   key=lambda e: (self.effective_priority(e, tick), e.seq))
+        self.entries.remove(best)
+        return best
+
+    def shed_expired(self, tick: int) -> list[_QueueEntry]:
+        """Remove and return entries whose deadline tick has passed."""
+        expired = [e for e in self.entries
+                   if e.req.deadline is not None and tick > e.req.deadline]
+        for e in expired:
+            self.entries.remove(e)
+        return expired
+
+
+def segment_step(phi, state, n_steps: int, *, mesh=None, **statics):
+    """One refill-loop segment: advance every live row of the slot table by
+    up to ``n_steps`` iterations — the continuous scheduler's hot loop.
+
+    This is :func:`repro.core.niht.solver_segment` (or the sharded
+    :func:`repro.parallel.batch.sharded_segment_run` when a mesh is given)
+    with the iteration counter **reset to zero**: the scheduler's rows sit at
+    *different* logical ages, so the state's global ``k`` cannot mean "the
+    iteration every row is at". Resetting it is sound exactly because the
+    scheduler requires stationary operators (the ``early_exit``
+    precondition): the iteration map never reads the index, so "iterations
+    [k, k+L)" and "[0, L)" are the same program — verified bit-for-bit by
+    the differential suite. Trace buffers are consequently segment-local
+    scratch (rows [0, L) are overwritten each call); per-request traces are
+    not part of the harvest contract.
+    """
+    state = state._replace(k=jnp.zeros((), jnp.int32))
+    if mesh is not None:
+        return sharded_segment_run(phi, state, n_steps, mesh=mesh, **statics)
+    return solver_segment(phi, state, n_steps, **statics)
+
+
+class ContinuousScheduler:
+    """Continuous-batching recovery service over one measurement operator.
+
+    Construction mirrors :class:`~repro.parallel.batch.BatchServer` (pack
+    once, compile once, one PRNG key for the whole service) plus the
+    scheduling knobs:
+
+    * ``slots`` — rows of the live :class:`SolverState` (the batch width
+      every segment solves; also the width of the standalone reference).
+    * ``seg_len`` — iterations per segment: the refill granularity, the
+      ``ckpt_every`` of this loop. Choosing ``seg_len | n_iters`` keeps the
+      horizon clamp from ever shortening a segment, so ONE executable serves
+      the whole run (``stats()['segment_lengths']`` shows what actually ran).
+    * ``queue_depth`` / ``age_every`` — :class:`AdmissionQueue` behaviour.
+    * ``policy`` — ``"continuous"`` refills freed slots mid-flight;
+      ``"lockstep"`` refills only when EVERY slot is free (the chunked
+      baseline expressed in the same engine, so benchmark comparisons
+      isolate the scheduling policy, not the solver).
+
+    ``journal_dir`` write-ahead journals each request under its **request
+    id** (inputs at splice time, result at harvest) via
+    :class:`~repro.parallel.journal.ChunkJournal`; a restarted scheduler with
+    ``resume=True`` fed the same deterministic arrival trace drains completed
+    requests from disk (bit-identical bytes, never occupying a slot) and
+    re-solves in-flight ones — same classification the chunked server uses.
+    """
+
+    def __init__(self, phi, s: int, n_iters: int = 50, *, slots: int = 8,
+                 seg_len: int = 8, policy: str = "continuous",
+                 queue_depth: int = 64, age_every: int = 8,
+                 mesh=None, n_devices: Optional[int] = None,
+                 bits_phi: Optional[int] = None, bits_y: Optional[int] = None,
+                 key: Optional[jax.Array] = None, requantize: str = "fixed",
+                 backend: str = "dense", threshold: str = "topk",
+                 c: float = 0.01, shrink_k: float = 2.0,
+                 max_backtracks: int = 30, real_signal: bool = False,
+                 nonneg: bool = False, with_trace: bool = False,
+                 scale_granularity: str = "per_tensor",
+                 group_size: Optional[int] = None, exit_tol: float = 0.0,
+                 journal_dir: Optional[str] = None, resume: bool = False):
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        if seg_len < 1:
+            raise ValueError(f"seg_len must be >= 1, got {seg_len}")
+        if policy not in ("continuous", "lockstep"):
+            raise ValueError(
+                f"unknown policy {policy!r} (use 'continuous' or 'lockstep')")
+        if resume and journal_dir is None:
+            raise ValueError("resume=True needs a journal_dir to resume from")
+        # early_exit=True is load-bearing twice over: harvest needs the done
+        # flags, and its stationarity precondition is what makes segment_step's
+        # k-reset sound (see module docstring)
+        _validate(phi, bits_phi, bits_y, key, requantize, backend, threshold,
+                  real_signal, scale_granularity, group_size, True, exit_tol)
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        self.phi = phi
+        self._ref_phi = phi  # user-level operator, pre pack-once translation
+        self.slots = slots
+        self.seg_len = seg_len
+        self.n_iters = n_iters
+        self.policy = policy
+        self.mesh = (mesh if mesh is not None else
+                     (make_batch_mesh(n_devices) if n_devices is not None else None))
+        self.journal = ChunkJournal(journal_dir) if journal_dir is not None else None
+        self._resume = bool(resume)
+        # the user-level solver config — what reference_solve replays
+        self._ref_statics = dict(
+            bits_phi=bits_phi, bits_y=bits_y, requantize=requantize,
+            backend=backend, threshold=threshold, c=c, shrink_k=shrink_k,
+            max_backtracks=max_backtracks, real_signal=real_signal,
+            nonneg=nonneg, scale_granularity=scale_granularity,
+            group_size=group_size, exit_tol=exit_tol)
+        statics = dict(
+            s=s, bits_phi=bits_phi, bits_y=bits_y, requantize=requantize,
+            backend=backend, threshold=threshold, c=c, shrink_k=shrink_k,
+            max_backtracks=max_backtracks, real_signal=real_signal,
+            nonneg=nonneg, with_trace=with_trace,
+            scale_granularity=scale_granularity, group_size=group_size,
+            early_exit=True, exit_tol=exit_tol)
+        if backend == "packed":
+            # pack once with the exact key the in-loop pack would fold — the
+            # same construction BatchServer uses, pinned equivalent to the
+            # user-level backend="packed" solve by the parity tests
+            _, kphi = jax.random.split(self.key)
+            self.phi = PackedStreamingOperator.pack(
+                phi, bits_phi, jax.random.fold_in(kphi, 0),
+                granularity=as_granularity(scale_granularity, group_size))
+            statics.update(bits_phi=None, backend="dense")
+        self._statics = statics
+        self.s = s
+
+        m = self.phi.shape[0]
+        self._m = m
+        self._y_dtype = jnp.dtype(self.phi.dtype)
+        state = solver_init(
+            self.phi, jnp.zeros((slots, m), self._y_dtype), s,
+            n_iters=n_iters, key=self.key,
+            **{k: v for k, v in statics.items() if k != "s"})
+        # blank every slot: pad rows (done=True) with zeroed last-trace —
+        # solver_init's NaN "not recorded" markers would flow into the trace
+        # of born-done rows and trip --sanitize
+        self._state = refill_rows(
+            state, list(range(slots)), np.zeros((slots, m), self._y_dtype),
+            [False] * slots)
+        self._ages = np.zeros(slots, np.int64)
+        self._horizon = np.full(slots, n_iters, np.int64)  # per-slot budget
+        self._slot_rid: list[Optional[int]] = [None] * slots
+        self.tick = 0
+        self.reports: dict[int, RequestReport] = {}
+        #: (tick, event, rid_or_None, detail) decision log — every entry is a
+        #: pure function of (arrival trace, config); the determinism property
+        #: test replays a trace and asserts log equality
+        self.log: list[tuple] = []
+        self._queue = AdmissionQueue(queue_depth, age_every)
+        self._seq = 0
+        self.segments_run = 0
+        self._segment_lengths: dict[int, int] = {}
+        self._occupied_slot_segments = 0
+        self.n_drained = 0
+
+    # -- admission ---------------------------------------------------------
+    def _admit(self, req: Request, arrival_tick: int) -> None:
+        if req.rid in self.reports:
+            raise ValueError(f"duplicate request id {req.rid}")
+        y = np.asarray(req.y)
+        if y.shape != (self._m,):
+            raise ValueError(
+                f"request {req.rid}: y shape {y.shape} != ({self._m},)")
+        if req.n_iters is not None and not 1 <= req.n_iters <= self.n_iters:
+            raise ValueError(
+                f"request {req.rid}: n_iters {req.n_iters} outside "
+                f"[1, {self.n_iters}] (the scheduler's buffers are sized for "
+                "its own n_iters)")
+        rep = RequestReport(rid=req.rid, status=QUEUED, priority=req.priority,
+                            arrival_tick=arrival_tick,
+                            wall_enqueued=time.perf_counter())
+        self.reports[req.rid] = rep
+        if (self.journal is not None and self._resume
+                and self.journal.is_complete(req.rid)):
+            self.journal.verify_submit(req.rid, y[None], np.asarray(self.key))
+            rep.x = self.journal.load_result_full(req.rid)[0]
+            rep.status = DONE
+            rep.drained = True
+            rep.finish_tick = arrival_tick
+            rep.queue_wait_ticks = 0
+            rep.wall_finished = time.perf_counter()
+            self.n_drained += 1
+            self.log.append((self.tick, "drain", req.rid, None))
+            return
+        admitted, shed = self._queue.offer(req, arrival_tick, self._seq)
+        self._seq += 1
+        if shed is not None:
+            srep = self.reports[shed.req.rid] if admitted else rep
+            srep.status = SHED_QUEUE_FULL
+            srep.finish_tick = self.tick
+            srep.wall_finished = time.perf_counter()
+            self.log.append((self.tick, "shed_queue_full", shed.req.rid, None))
+        if admitted:
+            self.log.append((self.tick, "enqueue", req.rid, req.priority))
+
+    # -- the refill loop ---------------------------------------------------
+    def _occupied(self) -> list[int]:
+        return [b for b in range(self.slots) if self._slot_rid[b] is not None]
+
+    def _harvest_and_refill(self) -> None:
+        # 1. harvest: rows whose done flag is set, or whose horizon arrived
+        done_h = np.asarray(self._state.done)
+        freed: list[int] = []
+        harvested = [b for b in self._occupied()
+                     if done_h[b] or self._ages[b] >= self._horizon[b]]
+        if harvested:
+            X_h = np.asarray(self._state.X)
+            for b in harvested:
+                rid = self._slot_rid[b]
+                rep = self.reports[rid]
+                rep.x = X_h[b].copy()
+                rep.status = DONE
+                rep.finish_tick = self.tick
+                rep.iters_used = int(min(self._ages[b], self._horizon[b]))
+                rep.wall_finished = time.perf_counter()
+                if self.journal is not None:
+                    self.journal.record_result(rid, rep.x[None])
+                self._slot_rid[b] = None
+                freed.append(b)
+                self.log.append((self.tick, "finish", rid, rep.iters_used))
+        # 2. shed queue entries whose deadline passed — expired requests are
+        # reported, never solved late
+        for e in self._queue.shed_expired(self.tick):
+            rep = self.reports[e.req.rid]
+            rep.status = SHED_DEADLINE
+            rep.finish_tick = self.tick
+            rep.queue_wait_ticks = self.tick - e.enq_tick
+            rep.wall_finished = time.perf_counter()
+            self.log.append((self.tick, "shed_deadline", e.req.rid, None))
+        # 3. refill freed slots from the queue ("lockstep" waits for a full
+        # drain: the chunked baseline in the same engine)
+        free = [b for b in range(self.slots) if self._slot_rid[b] is None]
+        rows, Y_rows, live = [], [], []
+        if self.policy == "continuous" or len(free) == self.slots:
+            for b in free:
+                entry = self._queue.pop(self.tick)
+                if entry is None:
+                    break
+                rep = self.reports[entry.req.rid]
+                rep.status = RUNNING
+                rep.start_tick = self.tick
+                rep.queue_wait_ticks = self.tick - entry.enq_tick
+                rep.wall_started = time.perf_counter()
+                if self.journal is not None:
+                    self.journal.record_submit(
+                        entry.req.rid, np.asarray(entry.req.y)[None],
+                        np.asarray(self.key),
+                        extra={"rid": entry.req.rid,
+                               "priority": entry.req.priority,
+                               "deadline": entry.req.deadline,
+                               "n_iters": entry.req.n_iters,
+                               "arrival_tick": rep.arrival_tick})
+                self._slot_rid[b] = entry.req.rid
+                self._ages[b] = 0
+                self._horizon[b] = (entry.req.n_iters
+                                    if entry.req.n_iters is not None
+                                    else self.n_iters)
+                rows.append(b)
+                Y_rows.append(np.asarray(entry.req.y))
+                live.append(True)
+                self.log.append((self.tick, "start", entry.req.rid, b))
+        # 4. blank harvested slots that stayed empty (pad rows: bitwise fixed
+        # points the segment never waits on)
+        for b in freed:
+            if self._slot_rid[b] is None and b not in rows:
+                rows.append(b)
+                Y_rows.append(np.zeros(self._m, np.asarray(self._state.Y).dtype))
+                live.append(False)
+        if rows:
+            self._state = refill_rows(
+                self._state, rows, np.stack(Y_rows).astype(
+                    np.asarray(self._state.Y).dtype), live)
+
+    def _run_segment(self) -> None:
+        occ = self._occupied()
+        # horizon clamp: no live row may overshoot its own budget inside a
+        # segment (its standalone answer is the iterate AT the horizon)
+        n_steps = min(self.seg_len,
+                      int(min(self._horizon[b] - self._ages[b] for b in occ)))
+        self._state = segment_step(self.phi, self._state, n_steps,
+                                   mesh=self.mesh, **self._statics)
+        jax.block_until_ready(self._state.X)
+        for b in occ:
+            self._ages[b] += n_steps
+        self.segments_run += 1
+        self._segment_lengths[n_steps] = self._segment_lengths.get(n_steps, 0) + 1
+        self._occupied_slot_segments += len(occ)
+        self.log.append((self.tick, "segment", None, (n_steps, len(occ))))
+
+    def run(self, arrivals) -> dict[int, RequestReport]:
+        """Drive an arrival trace to completion; returns ``{rid: report}``.
+
+        ``arrivals`` is an iterable of ``(tick, Request)`` with nondecreasing
+        ticks. The loop delivers arrivals due at the current tick, harvests +
+        refills, runs one segment when any slot is live, and advances the
+        tick; with nothing live it jumps straight to the next arrival.
+        """
+        arr = list(arrivals)
+        for (t0, _), (t1, _) in zip(arr, arr[1:]):
+            if t1 < t0:
+                raise ValueError("arrival ticks must be nondecreasing")
+        ai = 0
+        while True:
+            while ai < len(arr) and arr[ai][0] <= self.tick:
+                self._admit(arr[ai][1], arrival_tick=arr[ai][0])
+                ai += 1
+            self._harvest_and_refill()
+            if not self._occupied():
+                if ai >= len(arr) and not self._queue:
+                    break
+                # idle (lockstep barrier aside, an empty table means an empty
+                # queue): jump to the next arrival
+                self.tick = max(self.tick + 1,
+                                arr[ai][0] if ai < len(arr) else self.tick + 1)
+                continue
+            self._run_segment()
+            self.tick += 1
+        return self.reports
+
+    # -- observability -----------------------------------------------------
+    def slot_table(self) -> list[Optional[int]]:
+        """Current slot → request-id mapping (None = pad row)."""
+        return list(self._slot_rid)
+
+    def stats(self) -> dict:
+        occ = (self._occupied_slot_segments / (self.segments_run * self.slots)
+               if self.segments_run else 0.0)
+        by_status: dict[str, int] = {}
+        for rep in self.reports.values():
+            by_status[rep.status] = by_status.get(rep.status, 0) + 1
+        return {
+            "policy": self.policy,
+            "ticks": self.tick,
+            "segments_run": self.segments_run,
+            "segment_lengths": dict(sorted(self._segment_lengths.items())),
+            "slot_occupancy": round(occ, 4),
+            "drained": self.n_drained,
+            **{f"n_{k}": v for k, v in sorted(by_status.items())},
+        }
+
+    def reference_solve(self, y, n_iters: Optional[int] = None) -> jax.Array:
+        """The standalone answer the scheduler must reproduce bit-for-bit:
+        the request alone in the slot table — ``qniht_batch`` over
+        ``[y, 0, ..., 0]`` of ``slots`` rows with the scheduler's key, the
+        request's horizon (``n_iters``, defaulting to the scheduler's), and
+        the solver config (zero rows are free-riding fixed points). Uses the
+        *user-level* configuration (dense Φ + ``backend="packed"`` rather
+        than the pre-packed operator), so the contract also covers the
+        pack-once construction."""
+        Yp = jnp.zeros((self.slots, self._m), self._y_dtype)
+        Yp = Yp.at[0].set(jnp.asarray(y, self._y_dtype))
+        phi = self.phi if self._ref_statics["backend"] != "packed" else self._ref_phi
+        res = qniht_batch(phi, Yp, self.s,
+                          n_iters if n_iters is not None else self.n_iters,
+                          key=self.key, early_exit=True, with_trace=False,
+                          **self._ref_statics)
+        return res.x[0]
